@@ -1,0 +1,56 @@
+"""Application-level projection (the paper's §VI future work: "evaluate
+the performance boost at the application level (neural networks)").
+
+Maps an MLP inference layer (int4 weights, int32 accumulate) onto a
+fleet of Compute RAM blocks vs the baseline-FPGA dot-product design of
+Fig 6, using the measured per-block cycle counts of our generated
+sequences and the Table II-calibrated area/energy model.
+
+An Agilex-class mid-range FPGA carries ~7,000 BRAM sites (all become
+Compute RAMs per the paper's drop-in claim) but only ~4,500 DSPs; the
+baseline dot-product engine consumes 5 DSPs + 8 LBs + 1 BRAM per
+instance, the Compute RAM engine 1 block per instance -- the *compute
+density* argument (GOPS/mm^2) is the paper's advantage #4.
+"""
+
+from repro.core import costmodel as cm
+
+FPGA_BRAM_SITES = 7_000
+FPGA_DSP_SITES = 4_500
+FPGA_LB_SITES = 100_000
+
+
+def run(print_fn=print):
+    layer_macs = 784 * 512 + 512 * 512 + 512 * 10   # small MLP, per sample
+    batch = 1024
+
+    base = cm.BASELINES[("dot", "int4")].cost()
+    cr40 = cm.ComputeRamDesign("dot", "int4", cols=40).cost()
+    cr72 = cm.ComputeRamDesign("dot", "int4", cols=72).cost()
+
+    for name, unit, sites in (
+            ("baseline_dsp_engine", base,
+             min(FPGA_DSP_SITES // 5, FPGA_BRAM_SITES, FPGA_LB_SITES // 12)),
+            ("compute_ram_40col", cr40, FPGA_BRAM_SITES),
+            ("compute_ram_72col", cr72, FPGA_BRAM_SITES)):
+        total_macs = layer_macs * batch
+        macs_per_pass = unit.ops
+        passes = -(-total_macs // (macs_per_pass * sites))
+        t_us = passes * unit.cycles / unit.freq_mhz
+        e_uj = total_macs * unit.energy_per_op_pj / 1e6
+        area_mm2 = sites * unit.area_um2 / 1e6
+        gops = total_macs / t_us / 1e3
+        print_fn(f"app/mlp_int4/{name},{t_us:.0f},"
+                 f"us_for_{batch}_samples;engines={sites}"
+                 f";energy_uJ={e_uj:.0f};GOPS={gops:.0f}"
+                 f";GOPS_per_mm2={gops/area_mm2:.2f}")
+
+    # headline: compute density ratio (paper advantage #4)
+    d_base = (cm.BASELINES[('dot', 'int4')].cost().ops
+              / cm.BASELINES[('dot', 'int4')].cost().cycles
+              * cm.FREQ_CIRCUIT_BASE_FIXED_MHZ
+              / cm.BASELINES[('dot', 'int4')].cost().area_um2)
+    d_cr = (cr40.ops / cr40.cycles * cm.FREQ_CIRCUIT_CR_MHZ
+            / cr40.area_um2)
+    print_fn(f"app/compute_density_ratio,{d_cr/d_base:.2f},"
+             f"GOPS_per_um2_CR_vs_baseline_engine")

@@ -1,0 +1,39 @@
+"""Compute RAM engine benchmarks: cycle counts per op + multi-block
+scaling (one FPGA = hundreds of Compute RAM sites executing in
+parallel), plus instruction-memory footprints (paper §III-A2)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm, engine, programs
+
+
+def run(print_fn=print):
+    for (op, prec), gen in programs.GENERATORS.items():
+        prog, lay = gen(rows=512)
+        cyc = prog.cycles()
+        per_op = cyc / lay.tuples
+        us = cyc / cm.FREQ_CR_MHZ
+        print_fn(f"engine/{op}_{prec}/cycles,{cyc},"
+                 f"per_op={per_op:.1f};imem_slots={prog.footprint()}"
+                 f";time_us={us:.2f}@{cm.FREQ_CR_MHZ:.0f}MHz")
+
+    # multi-block vmap scaling (simulation throughput, informational)
+    prog, lay = programs.iadd(8, rows=512)
+    for blocks in (1, 16, 64):
+        states = engine.CRState(
+            array=jnp.zeros((blocks, 512, 40), jnp.bool_),
+            carry=jnp.zeros((blocks, 40), jnp.bool_),
+            tag=jnp.ones((blocks, 40), jnp.bool_),
+        )
+        f = jax.jit(lambda s: engine.execute_blocks(prog, s))
+        jax.block_until_ready(f(states).array)
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(states).array)
+        us = (time.perf_counter() - t0) * 1e6
+        ops_total = lay.tuples * 40 * blocks
+        print_fn(f"engine/multiblock_iadd8/{blocks}blk,{us:.0f},"
+                 f"ops={ops_total};sim_mops={ops_total/us:.1f}")

@@ -1,0 +1,65 @@
+"""Pallas kernel micro-benchmarks (wall time is CPU-interpret, so the
+derived column carries the architectural quantities: packed-weight HBM
+traffic reduction and arithmetic intensity)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(print_fn=print):
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 1024, 512
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+    scale = jnp.ones((n,), jnp.float32)
+
+    for bits in (4, 8):
+        wp = ref.pack_bitplanes(w, bits, axis=0)
+        us = _time(lambda: ops.quant_matmul(a, wp, scale, bits=bits,
+                                            interpret=True))
+        dense_bytes = k * n * 2                       # bf16 weights
+        packed_bytes = bits * (k // 32) * n * 4       # uint32 planes
+        print_fn(f"kernel/quant_matmul_w{bits}/interp,{us:.0f},"
+                 f"hbm_weight_bytes={packed_bytes}"
+                 f";bf16_bytes={dense_bytes}"
+                 f";traffic_reduction={dense_bytes/packed_bytes:.2f}x")
+
+    ap = ref.pack_bitplanes(a, 8, axis=1)
+    wp4 = ref.pack_bitplanes(w, 4, axis=0)
+    us = _time(lambda: ops.popcount_matmul(
+        ap, wp4, interpret=True, block_m=32, block_n=128, block_k=256))
+    ai = (2.0 * m * k * n * 32) / ((m * k + k * n) * 4 / 8 * 32)
+    print_fn(f"kernel/popcount_matmul_a8w4/interp,{us:.0f},"
+             f"plane_pairs={8*4};arith_intensity~{ai:.0f}")
+
+    # dense reference for scale
+    af = a.astype(jnp.bfloat16)
+    wf = w.astype(jnp.bfloat16)
+    us = _time(lambda: af @ wf)
+    print_fn(f"kernel/dense_bf16_matmul,{us:.0f},reference")
+
+    # flash attention kernel (interpret mode)
+    from repro.kernels.flash_attention import flash_attention
+    bh, s_, hd = 4, 256, 64
+    q = jnp.asarray(rng.normal(0, 1, (bh, s_, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(0, 1, (bh, s_, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (bh, s_, hd)), jnp.float32)
+    us = _time(lambda: flash_attention(q, kk, v, interpret=True,
+                                       block_q=128, block_k=128))
+    vmem = (128 * hd * 3 + 128 * 128 + 128 * (hd + 2)) * 4
+    print_fn(f"kernel/flash_attention_256,{us:.0f},"
+             f"vmem_working_set_bytes={vmem};never_materializes_SxS")

@@ -1,0 +1,30 @@
+"""Serving-engine throughput (smoke-scale model on CPU; the derived
+column carries the architectural quantity: decode step tokens/s scale)."""
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro import configs
+from repro.models.model import LM
+from repro.serve.engine import Request, ServeEngine
+
+
+def run(print_fn=print):
+    cfg = configs.get_config("qwen2-0.5b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=4, capacity=64)
+    rng = np.random.default_rng(0)
+    for rid in range(8):
+        eng.add(Request(rid=rid,
+                        prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                        max_new=8))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    print_fn(f"serve/continuous_batching,{dt*1e6/max(toks,1):.0f},"
+             f"us_per_token;requests={len(done)};slots=4;tokens={toks}")

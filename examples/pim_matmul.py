@@ -1,0 +1,49 @@
+"""PIM matmul as a framework feature: store weights bit-plane packed
+(storage mode), compute directly on the packed planes (compute mode).
+
+Run:  PYTHONPATH=src python examples/pim_matmul.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.pim import PimConfig, linear_apply, linear_init, pack_linear
+
+
+def main():
+    d_in, d_out = 512, 256
+    key = jax.random.PRNGKey(0)
+    dense = linear_init(key, d_in, d_out, PimConfig())
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, d_in), jnp.bfloat16)
+
+    y_ref = linear_apply(dense, x, PimConfig(mode="off"))
+    print(f"dense bf16 weights: {d_in * d_out * 2:,} bytes in HBM")
+
+    for bits in (8, 4):
+        cfg = PimConfig(mode="pallas", weight_bits=bits)
+        packed = pack_linear(dense, cfg)
+        nbytes = packed["w_packed"].size * 4
+        y = linear_apply(packed, x, cfg)
+        err = float(jnp.mean(jnp.abs(
+            y.astype(jnp.float32) - y_ref.astype(jnp.float32))))
+        mag = float(jnp.mean(jnp.abs(y_ref.astype(jnp.float32))))
+        print(f"W{bits}A8 bit-plane packed: {nbytes:,} bytes "
+              f"({d_in * d_out * 2 / nbytes:.1f}x less traffic), "
+              f"rel.err {err / mag:.4f}")
+
+    # PIM-faithful popcount path == same math
+    cfg = PimConfig(mode="popcount", weight_bits=4)
+    packed = pack_linear(dense, cfg)
+    y_pc = linear_apply(packed, x, cfg)
+    cfg_ref = PimConfig(mode="ref", weight_bits=4)
+    y_rf = linear_apply(packed, x, cfg_ref)
+    diff = float(jnp.max(jnp.abs(y_pc.astype(jnp.float32)
+                                 - y_rf.astype(jnp.float32))))
+    print(f"popcount (AND/popcount bit-serial) vs ref path: "
+          f"max diff {diff:.2e} (exact integer arithmetic)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end training driver example: train a small llama-family model
+on synthetic data with checkpointing, kill it mid-run, and watch it
+resume from the latest checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_lm.py           (~2 min, CPU)
+      PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+
+import argparse
+import shutil
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import LM
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train.runner import RunnerConfig, Trainer
+from repro.train.step import jit_train_step
+
+PRESETS = {
+    # ~8M params: fast on CPU
+    "tiny": ModelConfig(name="tiny-lm", family="dense", n_layers=4,
+                        d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                        vocab=2048, tie_embeddings=True),
+    # ~100M params: the paper-scale end-to-end target (use on real HW)
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab=32000, tie_embeddings=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    ap.add_argument("--simulate-failure", action="store_true",
+                    default=True)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = LM(cfg)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt_mod.OptConfig(lr=3e-3, warmup_steps=10,
+                                total_steps=args.steps)
+    opt_state = opt_mod.init(params, opt_cfg)
+    pipe = data_mod.Pipeline(data_mod.DataConfig(
+        global_batch=args.batch, seq_len=args.seq, vocab=cfg.vocab))
+    step_fn = jit_train_step(model, opt_cfg, donate=False)
+
+    # inject one simulated node failure at 60% of the run
+    fail_at = int(args.steps * 0.6)
+    armed = {"on": args.simulate_failure}
+
+    def fail_hook(step):
+        if step == fail_at and armed["on"]:
+            armed["on"] = False
+            raise RuntimeError("simulated node failure (example)")
+
+    trainer = Trainer(
+        RunnerConfig(total_steps=args.steps, ckpt_every=20,
+                     ckpt_dir=args.ckpt_dir, log_every=10),
+        step_fn, params, opt_state, pipe, fail_hook=fail_hook)
+    end, metrics = trainer.run()
+    print(f"done at step {end}; final loss {metrics['loss']:.4f}; "
+          f"restarts={trainer.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: Compute RAMs (Asilomar 2021) as a multi-pod JAX framework."""

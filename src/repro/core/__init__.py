@@ -1,0 +1,3 @@
+"""The paper's contribution: Compute RAM ISA, instruction-sequence
+generators (any precision), bit-plane execution engine, and the
+Table II-calibrated area/energy/frequency cost model."""

@@ -1,0 +1,66 @@
+"""Transposed bit-plane layout helpers (paper §II-B / Fig 2).
+
+Bit-serial arithmetic stores operands *transposed*: the bits of one
+operand live in one column across consecutive rows (LSB in the lowest
+row).  These helpers convert between integer/bfloat16 vectors and the
+``(rows, cols)`` boolean main array of the engine.
+
+Convention: for an n-bit operand at row base ``r``, row ``r + i`` holds
+bit ``i`` (LSB first).  bfloat16 uses its uint16 bit pattern, so rows
+``r+0..r+6`` = mantissa, ``r+7..r+14`` = exponent, ``r+15`` = sign.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def int_to_planes(x, nbits: int):
+    """(cols,) unsigned ints -> (nbits, cols) bool planes, LSB first."""
+    x = jnp.asarray(x, jnp.uint32)
+    shifts = jnp.arange(nbits, dtype=jnp.uint32)[:, None]
+    return ((x[None, :] >> shifts) & 1).astype(jnp.bool_)
+
+
+def planes_to_int(planes, dtype=jnp.uint32):
+    """(nbits, cols) bool planes -> (cols,) unsigned ints."""
+    planes = jnp.asarray(planes)
+    nbits = planes.shape[0]
+    weights = (jnp.uint32(1) << jnp.arange(nbits, dtype=jnp.uint32))[:, None]
+    return jnp.sum(planes.astype(jnp.uint32) * weights, axis=0).astype(dtype)
+
+
+def bf16_to_planes(x):
+    """(cols,) bfloat16 -> (16, cols) bool planes of the bit pattern."""
+    u = jnp.asarray(x, jnp.bfloat16).view(jnp.uint16).astype(jnp.uint32)
+    return int_to_planes(u, 16)
+
+
+def planes_to_bf16(planes):
+    """(16, cols) bool planes -> (cols,) bfloat16."""
+    u = planes_to_int(planes, jnp.uint32).astype(jnp.uint16)
+    return u.view(jnp.bfloat16)
+
+
+def store(state_array, base: int, planes):
+    """Write bit planes into rows [base, base+n) of the main array."""
+    return state_array.at[base:base + planes.shape[0]].set(planes)
+
+
+def load(state_array, base: int, nbits: int):
+    """Read rows [base, base+nbits) as bit planes."""
+    return state_array[base:base + nbits]
+
+
+# numpy mirrors (test convenience, no tracing) ------------------------------
+def np_int_to_planes(x, nbits: int) -> np.ndarray:
+    x = np.asarray(x, np.uint64)
+    return ((x[None, :] >> np.arange(nbits, dtype=np.uint64)[:, None]) & 1
+            ).astype(bool)
+
+
+def np_planes_to_int(planes: np.ndarray) -> np.ndarray:
+    nbits = planes.shape[0]
+    w = (np.uint64(1) << np.arange(nbits, dtype=np.uint64))[:, None]
+    return (planes.astype(np.uint64) * w).sum(axis=0)

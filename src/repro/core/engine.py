@@ -1,0 +1,218 @@
+"""JAX execution engine for Compute RAM blocks.
+
+A Compute RAM's main array is modeled as a boolean tensor ``(rows, cols)``
+plus per-column ``carry`` and ``tag`` latches (the logic peripherals of
+paper §III-A4).  Every micro-op operates on *all columns simultaneously* --
+the bit-line-computing parallelism axis.
+
+Two executors are provided:
+
+* :func:`execute` -- unrolls the micro-op stream at trace time.  Fastest
+  for short programs under ``jit``.
+* :func:`execute_scan` -- the faithful "controller": the program is
+  assembled into opcode/operand arrays and executed with ``jax.lax.scan``
+  + ``jax.lax.switch`` (compact HLO, cycle-per-step), mirroring the
+  fetch/decode/execute pipeline of the in-block controller.
+
+``jax.vmap`` over a leading block axis models many Compute RAM blocks
+operating in parallel (an FPGA has hundreds of BRAM sites).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+
+
+class CRState(NamedTuple):
+    """State of one Compute RAM block in compute mode."""
+    array: jax.Array   # (rows, cols) bool -- the main array
+    carry: jax.Array   # (cols,) bool -- per-column carry latch
+    tag: jax.Array     # (cols,) bool -- per-column predication latch
+
+
+def make_state(rows: int = 512, cols: int = 40) -> CRState:
+    """Fresh block state (paper default geometry 512x40 = 20 Kb)."""
+    return CRState(
+        array=jnp.zeros((rows, cols), dtype=jnp.bool_),
+        carry=jnp.zeros((cols,), dtype=jnp.bool_),
+        tag=jnp.ones((cols,), dtype=jnp.bool_),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single micro-op semantics
+# ---------------------------------------------------------------------------
+def _apply(state: CRState, op: int, dst, a, b, pred: bool) -> CRState:
+    arr, carry, tag = state
+    ra = arr[a]
+    rb = arr[b]
+    O = isa
+
+    if op == O.OP_NOP:
+        return state
+    # tag / carry latch ops -------------------------------------------------
+    if op == O.OP_C0:
+        new_c = jnp.zeros_like(carry)
+        return state._replace(carry=jnp.where(tag, new_c, carry) if pred else new_c)
+    if op == O.OP_C1:
+        new_c = jnp.ones_like(carry)
+        return state._replace(carry=jnp.where(tag, new_c, carry) if pred else new_c)
+    if op == O.OP_CROW:
+        return state._replace(carry=ra)
+    if op == O.OP_TC:
+        return state._replace(tag=carry)
+    if op == O.OP_TNC:
+        return state._replace(tag=~carry)
+    if op == O.OP_TROW:
+        return state._replace(tag=ra)
+    if op == O.OP_TNROW:
+        return state._replace(tag=~ra)
+    if op == O.OP_T1:
+        return state._replace(tag=jnp.ones_like(tag))
+    if op == O.OP_TAND:
+        return state._replace(tag=tag & ra)
+    if op == O.OP_TOR:
+        return state._replace(tag=tag | ra)
+    if op == O.OP_TNOT:
+        return state._replace(tag=~tag)
+
+    # row-writing ops ---------------------------------------------------------
+    new_carry = carry
+    if op == O.OP_COPY:
+        val = ra
+    elif op == O.OP_NOT:
+        val = ~ra
+    elif op == O.OP_AND:
+        val = ra & rb
+    elif op == O.OP_OR:
+        val = ra | rb
+    elif op == O.OP_XOR:
+        val = ra ^ rb
+    elif op == O.OP_NOR:
+        val = ~(ra | rb)
+    elif op == O.OP_FA:
+        val = ra ^ rb ^ carry
+        new_carry = (ra & rb) | (carry & (ra ^ rb))
+    elif op == O.OP_FS:   # dst = a - b - borrow (carry latch holds borrow)
+        val = ra ^ rb ^ carry
+        new_carry = ((~ra) & rb) | (carry & (~(ra ^ rb)))
+    elif op == O.OP_W0:
+        val = jnp.zeros_like(ra)
+    elif op == O.OP_W1:
+        val = jnp.ones_like(ra)
+    elif op == O.OP_CSTORE:
+        val = carry
+        new_carry = jnp.zeros_like(carry)
+    elif op == O.OP_TSTORE:
+        val = tag
+    else:
+        raise ValueError(f"unknown opcode {op}")
+
+    if pred:
+        val = jnp.where(tag, val, arr[dst])
+        new_carry = jnp.where(tag, new_carry, carry)
+    return CRState(arr.at[dst].set(val), new_carry, tag)
+
+
+# ---------------------------------------------------------------------------
+# Executor 1: trace-time unroll
+# ---------------------------------------------------------------------------
+def execute(program: isa.Program, state: CRState) -> CRState:
+    """Run ``program`` on ``state`` by unrolling its micro-op stream."""
+    for ins in program.expand():
+        state = _apply(state, ins.op, ins.dst, ins.a, ins.b, ins.pred)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Executor 2: lax.scan "controller"
+# ---------------------------------------------------------------------------
+def assemble(program: isa.Program):
+    """Assemble the executed stream into dense operand arrays."""
+    stream = program.expand()
+    ops = np.array([i.op for i in stream], np.int32)
+    dst = np.array([i.dst for i in stream], np.int32)
+    a = np.array([i.a for i in stream], np.int32)
+    b = np.array([i.b for i in stream], np.int32)
+    pred = np.array([i.pred for i in stream], np.bool_)
+    return ops, dst, a, b, pred
+
+
+def _switch_apply(state: CRState, op, dst, a, b, pred) -> CRState:
+    """Dynamic-opcode micro-op (for lax.switch): all ops as branches."""
+    arr, carry, tag = state
+    ra = jnp.take(arr, a, axis=0)
+    rb = jnp.take(arr, b, axis=0)
+    rd = jnp.take(arr, dst, axis=0)
+    zeros = jnp.zeros_like(ra)
+    ones = jnp.ones_like(ra)
+
+    # (row_value, new_carry, new_tag, writes_row)
+    def mk(val, c, t, w):
+        return val, c, t, w
+
+    O = isa
+    branches = [None] * O.N_ARRAY_OPS
+    branches[O.OP_NOP] = lambda: mk(rd, carry, tag, False)
+    branches[O.OP_COPY] = lambda: mk(ra, carry, tag, True)
+    branches[O.OP_NOT] = lambda: mk(~ra, carry, tag, True)
+    branches[O.OP_AND] = lambda: mk(ra & rb, carry, tag, True)
+    branches[O.OP_OR] = lambda: mk(ra | rb, carry, tag, True)
+    branches[O.OP_XOR] = lambda: mk(ra ^ rb, carry, tag, True)
+    branches[O.OP_NOR] = lambda: mk(~(ra | rb), carry, tag, True)
+    branches[O.OP_FA] = lambda: mk(ra ^ rb ^ carry,
+                                   (ra & rb) | (carry & (ra ^ rb)), tag, True)
+    branches[O.OP_FS] = lambda: mk(ra ^ rb ^ carry,
+                                   ((~ra) & rb) | (carry & (~(ra ^ rb))),
+                                   tag, True)
+    branches[O.OP_W0] = lambda: mk(zeros, carry, tag, True)
+    branches[O.OP_W1] = lambda: mk(ones, carry, tag, True)
+    branches[O.OP_C0] = lambda: mk(rd, jnp.zeros_like(carry), tag, False)
+    branches[O.OP_C1] = lambda: mk(rd, jnp.ones_like(carry), tag, False)
+    branches[O.OP_CROW] = lambda: mk(rd, ra, tag, False)
+    branches[O.OP_CSTORE] = lambda: mk(carry, jnp.zeros_like(carry), tag, True)
+    branches[O.OP_TC] = lambda: mk(rd, carry, carry, False)
+    branches[O.OP_TNC] = lambda: mk(rd, carry, ~carry, False)
+    branches[O.OP_TROW] = lambda: mk(rd, carry, ra, False)
+    branches[O.OP_TNROW] = lambda: mk(rd, carry, ~ra, False)
+    branches[O.OP_T1] = lambda: mk(rd, carry, jnp.ones_like(tag), False)
+    branches[O.OP_TAND] = lambda: mk(rd, carry, tag & ra, False)
+    branches[O.OP_TOR] = lambda: mk(rd, carry, tag | ra, False)
+    branches[O.OP_TSTORE] = lambda: mk(tag, carry, tag, True)
+    branches[O.OP_TNOT] = lambda: mk(rd, carry, ~tag, False)
+
+    val, new_carry, new_tag, writes = jax.lax.switch(
+        op, [lambda i=i: branches[i]() for i in range(O.N_ARRAY_OPS)])
+
+    # predication: suppress row write / carry update where tag is 0
+    eff = jnp.where(pred, tag, jnp.ones_like(tag))
+    val = jnp.where(eff & writes, val, rd)
+    new_carry = jnp.where(eff, new_carry, carry)
+    new_arr = jax.lax.dynamic_update_index_in_dim(arr, val, dst, axis=0)
+    return CRState(new_arr, new_carry, new_tag)
+
+
+def execute_scan(program: isa.Program, state: CRState) -> CRState:
+    """Run ``program`` with a lax.scan controller (compact HLO)."""
+    ops, dst, a, b, pred = assemble(program)
+
+    def step(st, ins):
+        op_i, d_i, a_i, b_i, p_i = ins
+        return _switch_apply(st, op_i, d_i, a_i, b_i, p_i), None
+
+    xs = (jnp.asarray(ops), jnp.asarray(dst), jnp.asarray(a),
+          jnp.asarray(b), jnp.asarray(pred))
+    final, _ = jax.lax.scan(step, state, xs)
+    return final
+
+
+# vmap-able multi-block execution ------------------------------------------
+def execute_blocks(program: isa.Program, states: CRState) -> CRState:
+    """Run the same program on many blocks: states have a leading block dim."""
+    return jax.vmap(lambda s: execute_scan(program, s))(states)

@@ -1,0 +1,51 @@
+"""Host-side load/readback for Compute RAM layouts.
+
+In a real deployment the FPGA-side state machine writes operands into the
+block in storage mode (paper §III-B); here, numpy plays that role.  Data
+is laid out transposed per :class:`repro.core.programs.TupleLayout`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .programs import TupleLayout
+
+
+def pack_state(layout: TupleLayout, data: dict, cols: int) -> np.ndarray:
+    """Build the (rows, cols) bool main-array image.
+
+    ``data[name]`` is a ``(tuples, cols)`` array of unsigned ints (or
+    uint16 bf16 bit patterns) for each layout field being loaded.
+    """
+    arr = np.zeros((layout.rows, cols), dtype=bool)
+    for name, vals in data.items():
+        off, width = layout.fields[name]
+        vals = np.asarray(vals, np.uint64)
+        if vals.shape != (layout.tuples, cols):
+            raise ValueError(
+                f"{name}: expected {(layout.tuples, cols)}, got {vals.shape}")
+        bases = np.array([layout.base(t) for t in range(layout.tuples)])
+        for i in range(width):
+            bit = (vals >> np.uint64(i)) & np.uint64(1)
+            arr[bases + off + i, :] = bit.astype(bool)
+    return arr
+
+
+def unpack_field(arr: np.ndarray, layout: TupleLayout, name: str) -> np.ndarray:
+    """Read a layout field back as ``(tuples, cols)`` unsigned ints."""
+    arr = np.asarray(arr)
+    off, width = layout.fields[name]
+    out = np.zeros((layout.tuples, arr.shape[1]), np.uint64)
+    bases = np.array([layout.base(t) for t in range(layout.tuples)])
+    for i in range(width):
+        out |= arr[bases + off + i, :].astype(np.uint64) << np.uint64(i)
+    return out
+
+
+def unpack_acc(arr: np.ndarray, layout: TupleLayout) -> np.ndarray:
+    """Read the dot-product accumulator: (cols,) unsigned ints."""
+    out = np.zeros((arr.shape[1],), np.uint64)
+    for i in range(layout.acc_bits):
+        out |= arr[i, :].astype(np.uint64) << np.uint64(i)
+    return out

@@ -1,0 +1,141 @@
+"""Pure-numpy oracles for Compute RAM programs.
+
+Integer oracles are exact unsigned arithmetic.  The bfloat16 oracles
+replicate the engine's documented semantics **bit-exactly**:
+
+* FTZ: subnormal inputs are treated as zero; outputs whose packed
+  exponent would be 0 are flushed to +0.
+* RTZ: right-shifts truncate (no guard/round/sticky bits).
+* finite-only: exponent 255 is treated as an ordinary value; tests
+  avoid overflow regions (documented limitation, matches the paper's
+  scope which evaluates throughput, not IEEE edge cases).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# -- integers ---------------------------------------------------------------
+def iadd(a, b, n):
+    return (np.asarray(a, np.uint64) + np.asarray(b, np.uint64)) % (1 << n)
+
+
+def isub(a, b, n):
+    return (np.asarray(a, np.int64) - np.asarray(b, np.int64)) % (1 << n)
+
+
+def imul(a, b, n):
+    return (np.asarray(a, np.uint64) * np.asarray(b, np.uint64)) % (1 << (2 * n))
+
+
+def idot(a, b, acc_bits=32):
+    """a, b: (T, cols) -> (cols,) accumulated dot product."""
+    s = (np.asarray(a, np.uint64) * np.asarray(b, np.uint64)).sum(axis=0)
+    return s % (1 << acc_bits)
+
+
+# -- parameterized floats (bit-pattern in/out as unsigned ints) -------------
+def _parts(u, e_bits=8, m_bits=7):
+    u = np.asarray(u, np.uint32)
+    emask = (1 << e_bits) - 1
+    mmask = (1 << m_bits) - 1
+    s = (u >> (e_bits + m_bits)) & 1
+    e = (u >> m_bits) & emask
+    m = u & mmask
+    hidden = (e != 0).astype(np.uint32)
+    m = np.where(hidden == 1, m, 0)          # FTZ inputs
+    mant = m | (hidden << m_bits)            # mantissa with hidden bit
+    return s, e, mant, hidden
+
+
+def _pack(s, e, m, e_bits=8, m_bits=7):
+    emask = (1 << e_bits) - 1
+    mmask = (1 << m_bits) - 1
+    return ((s.astype(np.uint32) << (e_bits + m_bits))
+            | ((e & emask) << m_bits) | (m & mmask))
+
+
+def float_add(a_bits, b_bits, e_bits=8, m_bits=7):
+    """Matches the engine's float_add sequence bit-exactly."""
+    import math
+    sa, ea, ma, _ = _parts(a_bits, e_bits, m_bits)
+    sb, eb, mb, _ = _parts(b_bits, e_bits, m_bits)
+    emod = 1 << e_bits
+    mm = m_bits + 3
+    L = max(1, math.ceil(math.log2(mm)))
+    wmask = (1 << (m_bits + 1)) - 1          # normalize window
+
+    swap = ea > eb                           # engine SW: 1 -> BIG = a
+    sbig = np.where(swap, sa, sb)
+    ssml = np.where(swap, sb, sa)
+    ebig = np.where(swap, ea, eb)
+    esml = np.where(swap, eb, ea)
+    mbig = np.where(swap, ma, mb)
+    msml = np.where(swap, mb, ma)
+
+    ediff = ebig - esml
+    msml = np.where(ediff >= (1 << L), 0,
+                    msml >> np.minimum(ediff, (1 << L) - 1))   # RTZ
+
+    mod = 1 << mm
+    sub = (sbig ^ ssml) == 1
+    rr = np.where(sub, (mbig - msml) % mod, mbig + msml)
+    neg = sub & (msml > mbig)
+    rr = np.where(neg, (msml - mbig) % mod, rr)
+    sgn = np.where(neg, 1 - sbig, sbig)
+
+    ee = ebig.copy()
+    ovf = (~sub) & ((rr >> (m_bits + 1)) & 1 == 1)
+    rr = np.where(ovf, rr >> 1, rr)          # RTZ drop
+    ee = np.where(ovf, (ee + 1) % emod, ee)
+
+    sc = np.zeros_like(rr)
+    k = 1
+    shifts = []
+    while k <= m_bits:
+        shifts.append(k)
+        k <<= 1
+    for k in reversed(shifts):
+        cond = (rr >> (m_bits - k + 1)) & ((1 << k) - 1) == 0
+        rr = np.where(cond, (rr << k) & wmask, rr)
+        sc = sc + k * cond
+
+    und = sc > ee
+    ee = (ee - sc) % emod
+
+    flush = (rr == 0) | und | (ee == 0)
+    return np.where(flush, 0,
+                    _pack(sgn, ee, rr, e_bits, m_bits)).astype(np.uint32)
+
+
+def float_mul(a_bits, b_bits, e_bits=8, m_bits=7):
+    sa, ea, ma, ha = _parts(a_bits, e_bits, m_bits)
+    sb, eb, mb, hb = _parts(b_bits, e_bits, m_bits)
+    bias = (1 << (e_bits - 1)) - 1
+    e2mod = 1 << (e_bits + 1)
+    emask = (1 << e_bits) - 1
+    mmask = (1 << m_bits) - 1
+
+    sgn = sa ^ sb
+    esum = (ea + eb) % e2mod
+    und = esum < bias
+    ee = (esum - bias) % e2mod
+
+    p = (ma * mb) & ((1 << (2 * m_bits + 2)) - 1)
+    top = (p >> (2 * m_bits + 1)) & 1 == 1
+    mm = np.where(top, (p >> (m_bits + 1)) & mmask, (p >> m_bits) & mmask)
+    ee = np.where(top, (ee + 1) % e2mod, ee)
+
+    flush = und | (ha == 0) | (hb == 0) | ((ee & emask) == 0)
+    return np.where(flush, 0,
+                    _pack(sgn, ee & emask, mm, e_bits, m_bits)
+                    ).astype(np.uint32)
+
+
+def bf16_add(a_bits, b_bits):
+    return float_add(a_bits, b_bits, 8, 7).astype(np.uint16)
+
+
+def bf16_mul(a_bits, b_bits):
+    return float_mul(a_bits, b_bits, 8, 7).astype(np.uint16)

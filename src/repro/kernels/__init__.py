@@ -1,0 +1,3 @@
+"""Pallas TPU kernels: bit-plane-decomposed matmul (performance +
+PIM-faithful popcount paths) and fused flash attention, each with
+pure-jnp oracles and interpret-mode validation."""

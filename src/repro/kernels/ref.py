@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The bit-plane identity underlying everything (paper §II-B, adapted):
+
+    x = -2^{B-1} * b_{B-1} + sum_{i<B-1} 2^i * b_i      (two's complement)
+    A @ W = sum_{i,j} coef_i * coef_j * (A_i @ W_j)     (A_i, W_j in {0,1})
+
+so a bit-plane-decomposed matmul is *exactly* the integer matmul; no
+approximation is involved.  These oracles compute the same quantities
+with ordinary jnp ops.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def plane_coefs(bits: int, signed: bool) -> list:
+    """Weight of each bit plane (MSB negative for two's complement)."""
+    coefs = [1 << i for i in range(bits)]
+    if signed:
+        coefs[-1] = -coefs[-1]
+    return coefs
+
+
+def pack_bitplanes(x: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    """Pack integer tensor into bit planes along ``axis``.
+
+    Returns uint32 with a new leading plane dimension and ``axis``
+    shrunk 32x: plane ``b``, word ``w`` packs bits ``b`` of elements
+    ``32w .. 32w+31``.  ``axis`` length must be a multiple of 32.
+    """
+    x = jnp.asarray(x)
+    k = x.shape[axis]
+    assert k % 32 == 0, f"pack axis must be multiple of 32, got {k}"
+    u = x.astype(jnp.int32) & ((1 << bits) - 1)      # two's complement view
+    u = jnp.moveaxis(u, axis, -1).astype(jnp.uint32)
+    u = u.reshape(u.shape[:-1] + (k // 32, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    planes = []
+    for b in range(bits):
+        bit = (u >> jnp.uint32(b)) & jnp.uint32(1)
+        word = jnp.sum(bit << shifts, axis=-1, dtype=jnp.uint32)
+        planes.append(jnp.moveaxis(word, -1, axis))
+    return jnp.stack(planes, axis=0)
+
+
+def unpack_bitplanes(planes: jnp.ndarray, axis: int, signed: bool,
+                     dtype=jnp.int32) -> jnp.ndarray:
+    """Inverse of :func:`pack_bitplanes` (axis in the *unpacked* tensor)."""
+    bits = planes.shape[0]
+    coefs = plane_coefs(bits, signed)
+    out = None
+    for b in range(bits):
+        p = jnp.moveaxis(planes[b], axis, -1)
+        w = p[..., :, None]
+        bitvals = ((w >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1))
+        v = bitvals.reshape(p.shape[:-1] + (-1,)).astype(dtype) * coefs[b]
+        out = v if out is None else out + v
+    return jnp.moveaxis(out, -1, axis)
+
+
+def quant_matmul(a: jnp.ndarray, w_packed: jnp.ndarray, scale_w: jnp.ndarray,
+                 bits: int, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle: C = (A @ unpack(W)) * scale_w, int32 accumulation.
+
+    a: (M, K) int8;  w_packed: (bits, K//32, N) uint32;
+    scale_w: (N,) per-output-channel dequant scale.
+    """
+    w = unpack_bitplanes(w_packed, axis=0, signed=True)      # (K, N) int32
+    acc = jnp.dot(a.astype(jnp.int32), w,
+                  preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * scale_w[None, :]).astype(out_dtype)
+
+
+def popcount_matmul(a_packed: jnp.ndarray, w_packed: jnp.ndarray,
+                    a_signed: bool, w_signed: bool) -> jnp.ndarray:
+    """Oracle for the PIM-faithful popcount path.
+
+    a_packed: (Ba, M, K//32); w_packed: (Bw, K//32, N) -> (M, N) int32.
+    """
+    ca = plane_coefs(a_packed.shape[0], a_signed)
+    cw = plane_coefs(w_packed.shape[0], w_signed)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def bits_of(p):   # (..., W) uint32 -> (..., W*32) int32 in {0,1}
+        b = (p[..., None] >> shifts) & jnp.uint32(1)
+        return b.reshape(p.shape[:-1] + (-1,)).astype(jnp.int32)
+
+    out = 0
+    for i, ci in enumerate(ca):
+        ai = bits_of(a_packed[i])                       # (M, K)
+        for j, cj in enumerate(cw):
+            wj = bits_of(jnp.moveaxis(w_packed[j], 0, -1))   # (N, K)
+            out = out + ci * cj * (ai @ wj.T)
+    return out

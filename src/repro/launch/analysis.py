@@ -1,0 +1,211 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak]
+memory term     = HLO_bytes / (chips * 819e9)           [HBM]
+collective term = collective_bytes / (chips * 100e9)    [2 ICI links/axis]
+
+``cost_analysis()`` on the CPU backend reports flops/bytes for the whole
+(global) program with while-loop bodies counted once, so we scale by the
+while trip counts recovered from the optimized HLO text (the loop
+condition compares the induction variable against a constant).  The same
+scaling applies to collective bytes parsed from ``compiled.as_text()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 100e9               # bytes/s effective per chip (2 x ~50GB/s links)
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "tf32": 4}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_max_bytes(line: str) -> int:
+    return max((_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line)),
+               default=0)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: float
+    count: int
+
+
+def parse_computations(hlo: str):
+    """Split optimized HLO text into {name: [lines]} computations."""
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        # computation defs start at column 0:  %name (params...) -> ty {
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def while_trip_counts(hlo: str, comps: dict) -> dict:
+    """body-computation name -> trip count (best effort)."""
+    # find while ops: ... while(...), condition=%cond, body=%body
+    trips = {}
+    for line in hlo.splitlines():
+        if " while(" not in line:
+            continue
+        mb = re.search(r"body=%?([\w\.\-]+)", line)
+        mc = re.search(r"condition=%?([\w\.\-]+)", line)
+        if not mb or not mc:
+            continue
+        body, cond = mb.group(1), mc.group(1)
+        count = None
+        for cl in comps.get(cond, []):
+            m = re.search(r"constant\((\d+)\)", cl)
+            if m:
+                count = int(m.group(1))
+        trips[body] = count if count else 1
+    return trips
+
+
+def _call_multipliers(comps: dict, trips: dict) -> dict:
+    """computation -> product of enclosing while trip counts."""
+    # build edges: computation -> called computations
+    call_re = re.compile(
+        r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+        r"%?([\w\.\-]+)")
+    edges = {c: set() for c in comps}
+    for c, lines in comps.items():
+        for line in lines:
+            for callee in call_re.findall(line):
+                if callee in comps:
+                    edges[c].add(callee)
+
+    mult = {c: 1 for c in comps}
+    # propagate from entry: iterate to fixpoint (call graph is a DAG)
+    for _ in range(len(comps)):
+        changed = False
+        for c in comps:
+            for callee in edges[c]:
+                m = mult[c] * trips.get(callee, 1)
+                if m > mult[callee]:
+                    mult[callee] = m
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = parse_computations(hlo)
+    trips = while_trip_counts(hlo, comps)
+    mult = _call_multipliers(comps, trips)
+
+    by_kind = {k: 0.0 for k in _COLLECTIVES}
+    count = 0
+    for cname, lines in comps.items():
+        scale = mult.get(cname, 1)
+        for line in lines:
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in line or f"{kind}-start(" in line:
+                    b = _line_max_bytes(line)
+                    factor = 2.0 if kind == "all-reduce" else 1.0
+                    by_kind[kind] += b * factor * scale
+                    count += 1
+                    break
+    total = sum(by_kind.values())
+    return CollectiveStats(by_kind, total, count)
+
+
+def scan_trip_multiplier(hlo: str) -> float:
+    """Largest while trip count (≈ the layer scan) -- used to scale
+    cost_analysis flops, which count while bodies once."""
+    comps = parse_computations(hlo)
+    trips = while_trip_counts(hlo, comps)
+    return max(trips.values(), default=1)
+
+
+def analytic_terms(cfg, shape_name: str, chips: int) -> dict:
+    """Closed-form FLOP/byte estimates (MODEL_FLOPS = 6ND etc.).
+
+    Used alongside cost_analysis(): the CPU backend counts while-loop
+    bodies once, so the analytic numbers are the trustworthy absolute
+    scale while the parsed numbers validate structure.
+    """
+    from repro.launch.shapes import SHAPES
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+
+    attn_ctx = min(s, cfg.sliding_window or s)
+    if cfg.rglru is not None:
+        attn_layers = sum(1 for t in cfg.layer_types() if t == "attn")
+        attn_ctx = min(s, cfg.rglru.window)
+    elif cfg.ssm is not None:
+        attn_layers = 0
+    else:
+        attn_layers = L
+
+    if kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_active * tokens \
+            + 12.0 * attn_layers * b * s * attn_ctx * H * hd / 2
+        # params+opt traffic (fwd read, bwd read, update rw) + activations
+        bytes_ = (2 * n_total * 3) + (8.0 * n_total * 2) \
+            + 4.0 * L * tokens * cfg.d_model * 2
+    elif kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n_active * tokens \
+            + 4.0 * attn_layers * b * s * attn_ctx * H * hd / 2
+        bytes_ = 2.0 * n_total + 2.0 * L * tokens * cfg.d_model * 2
+    else:  # decode: one token per sequence, full context in cache
+        tokens = b
+        ctx = attn_ctx
+        flops = 2.0 * n_active * tokens \
+            + 4.0 * attn_layers * b * ctx * H * hd
+        kv_elt = {None: 2, 8: 1, 4: 0.5}[cfg.kv_quant_bits]
+        kv_bytes = 2 * attn_layers * b * ctx * cfg.n_kv_heads * hd * kv_elt
+        bytes_ = 2.0 * n_total + kv_bytes
+    return {
+        "analytic_flops": float(flops),
+        "analytic_bytes": float(bytes_),
+        "model_flops_6nd": float(6.0 * n_active * b * s) if kind == "train"
+        else float(2.0 * n_active * (b * s if kind == "prefill" else b)),
+    }
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             chips: int) -> dict:
+    t_comp = flops / (chips * PEAK_FLOPS)
+    t_mem = hbm_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes / (chips * ICI_BW)
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "roofline_s": bound,
+        "roofline_frac_compute": t_comp / bound if bound else 0.0,
+    }

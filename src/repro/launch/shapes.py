@@ -1,0 +1,66 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model
+input (no device allocation -- dry-run only)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+ENC_SRC_LEN = 4096      # encoder source length for enc-dec decode shapes
+
+
+def applicable(cfg, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def skip_reason(cfg, shape_name: str) -> str:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full quadratic attention at 524k context: KV cache + "
+                "attention do not fit; noted in DESIGN.md §5")
+    return ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the step function of this (arch, shape)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+
+    if kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            batch["src_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    if kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            out["enc_out"] = _sds((b, ENC_SRC_LEN, cfg.d_model),
+                                  jnp.bfloat16)
+            out["enc_pos"] = _sds((b, ENC_SRC_LEN), jnp.int32)
+        return out
+
+    if kind == "decode":
+        out = {"tokens": _sds((b, 1), jnp.int32),
+               "pos": _sds((b,), jnp.int32)}
+        if cfg.is_encdec:
+            out["enc_out"] = _sds((b, ENC_SRC_LEN, cfg.d_model),
+                                  jnp.bfloat16)
+            out["enc_pos"] = _sds((b, ENC_SRC_LEN), jnp.int32)
+        return out
+
+    raise ValueError(kind)

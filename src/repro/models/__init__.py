@@ -1,0 +1,2 @@
+"""10-architecture model zoo (dense / GQA / SWA / MoE / Mamba /
+RG-LRU / enc-dec) with scan-over-layers and storage-mode quantization."""

@@ -1,0 +1,267 @@
+"""Attention: GQA / MQA / sliding-window / cross, with chunked
+online-softmax (memory-safe at 32k+ contexts) and ring-buffer KV caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import dense_init, rope, shard
+from .qweight import dq
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = common.split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd)),
+        "wk": dense_init(ks[1], (d, KV, hd)),
+        "wv": dense_init(ks[2], (d, KV, hd)),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis=0),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), jnp.bfloat16)
+        p["bk"] = jnp.zeros((KV, hd), jnp.bfloat16)
+        p["bv"] = jnp.zeros((KV, hd), jnp.bfloat16)
+    return p
+
+
+def _qkv(params, x, kv_src, cfg, positions, kv_positions, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, dq(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, dq(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, dq(params["wv"]))
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each group."""
+    g = n_heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def chunked_attention(q, k, v, pos_q, pos_k, *, causal: bool,
+                      window=None, chunk: int = 1024):
+    """Online-softmax attention, scanning over KV chunks.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, H, hd) (KV already repeated);
+    pos_q: (B, Sq), pos_k: (B, Sk) int32 (-1 = invalid key slot).
+    Working set per step is O(Sq * chunk), never O(Sk^2).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    n = sk // chunk
+    scale = hd ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    ks = jnp.moveaxis(k.reshape(b, n, chunk, h, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n, chunk, h, hd), 1, 0)
+    ps = jnp.moveaxis(pos_k.reshape(b, n, chunk), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("bqhd,bchd->bqhc", qf, kc.astype(jnp.float32))
+        valid = (pc >= 0)[:, None, :]
+        if causal:
+            valid = valid & (pc[:, None, :] <= pos_q[:, :, None])
+        if window is not None:
+            valid = valid & (pc[:, None, :] > pos_q[:, :, None] - window)
+        s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out
+
+
+def attn_apply(params, x, cfg, positions, *, causal=True, window=None,
+               kv_src=None, kv_positions=None, chunk=1024):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, s, d = x.shape
+    cross = kv_src is not None
+    src = kv_src if cross else x
+    kpos = kv_positions if cross else positions
+    q, k, v = _qkv(params, x, src, cfg, positions, kpos,
+                   use_rope=not cross)
+    q = shard(q, "batch", None, "model", None)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    out = chunked_attention(q, k, v, positions, kpos,
+                            causal=causal and not cross,
+                            window=window, chunk=chunk)
+    out = out.astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, dq(params["wo"]))
+    return shard(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: ring-buffer KV cache (optionally int8-quantized "storage
+# mode", the Compute RAM dual-mode idea applied to the cache: halves the
+# dominant HBM term of decode -- see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg, batch: int, capacity: int, window=None) -> dict:
+    cap = capacity if window is None else min(capacity, window)
+    shape = (batch, cap, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_quant_bits == 4:
+        # two nibbles per byte along hd: 4x smaller than bf16
+        assert cfg.hd % 2 == 0
+        pshape = shape[:3] + (cfg.hd // 2,)
+        return {
+            "k": jnp.zeros(pshape, jnp.uint8),
+            "v": jnp.zeros(pshape, jnp.uint8),
+            "k_s": jnp.zeros(shape[:3], jnp.bfloat16),
+            "v_s": jnp.zeros(shape[:3], jnp.bfloat16),
+            "pos": jnp.full((batch, cap), -1, jnp.int32),
+        }
+    if cfg.kv_quant_bits:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_s": jnp.zeros(shape[:3], jnp.bfloat16),
+            "v_s": jnp.zeros(shape[:3], jnp.bfloat16),
+            "pos": jnp.full((batch, cap), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, jnp.bfloat16),
+        "v": jnp.zeros(shape, jnp.bfloat16),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def _kv_quantize(x, bits: int):
+    """x: (..., hd) -> (int8 / nibble-packed uint8 values, bf16 scale)."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                       1e-6)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -qmax - 1, qmax).astype(jnp.int32)
+    if bits == 4:
+        u = (q & 0xF).astype(jnp.uint8)                 # two's complement
+        lo, hi = u[..., 0::2], u[..., 1::2]
+        return (lo | (hi << 4)).astype(jnp.uint8), scale.astype(jnp.bfloat16)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _nib_signed(u):
+    s = u.astype(jnp.int32)
+    return jnp.where(s >= 8, s - 16, s)
+
+
+def _kv_read(cache, name):
+    x = cache[name]
+    if x.dtype == jnp.uint8:                            # 4-bit packed
+        lo = _nib_signed(x & 0xF)
+        hi = _nib_signed(x >> 4)
+        vals = jnp.stack([lo, hi], axis=-1).reshape(x.shape[:-1] +
+                                                    (x.shape[-1] * 2,))
+        return vals.astype(jnp.float32) \
+            * cache[name + "_s"].astype(jnp.float32)[..., None]
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) \
+            * cache[name + "_s"].astype(jnp.float32)[..., None]
+    return x.astype(jnp.float32)
+
+
+def attn_decode(params, x, cache, cfg, pos, *, window=None):
+    """One-token decode.  x: (B, 1, d); pos: (B,) int32 current position."""
+    b, s, d = x.shape
+    assert s == 1
+    positions = pos[:, None]
+    q, k, v = _qkv(params, x, x, cfg, positions, positions)
+
+    cap = cache["k"].shape[1]
+    slot = pos % cap                                   # ring buffer
+    bidx = jnp.arange(b)
+    if cfg.kv_quant_bits:
+        kq, ks_ = _kv_quantize(k[:, 0], cfg.kv_quant_bits)
+        vq, vs_ = _kv_quantize(v[:, 0], cfg.kv_quant_bits)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(kq),
+            "v": cache["v"].at[bidx, slot].set(vq),
+            "k_s": cache["k_s"].at[bidx, slot].set(ks_),
+            "v_s": cache["v_s"].at[bidx, slot].set(vs_),
+            "pos": cache["pos"].at[bidx, slot].set(pos),
+        }
+    else:
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(jnp.bfloat16)),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(jnp.bfloat16)),
+            "pos": cache["pos"].at[bidx, slot].set(pos),
+        }
+    ck = _kv_read(new_cache, "k")
+    cv = _kv_read(new_cache, "v")
+    cp = new_cache["pos"]
+
+    scale = cfg.hd ** -0.5
+    qh = shard(q.astype(jnp.float32) * scale, "batch", None, "model", None)
+    kh = _repeat_kv(ck, cfg.n_heads)
+    vh = _repeat_kv(cv, cfg.n_heads)
+    kh = shard(kh, "batch", None, "model", None)
+    vh = shard(vh, "batch", None, "model", None)
+    s_ = jnp.einsum("bqhd,bchd->bqhc", qh, kh)
+    valid = (cp >= 0)[:, None, :] & (cp[:, None, :] <= positions[:, :, None])
+    if window is not None:
+        valid = valid & (cp[:, None, :] > positions[:, :, None] - window)
+    s_ = jnp.where(valid[:, :, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bqhc,bchd->bqhd", p, vh).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, dq(params["wo"]))
+    return y, new_cache
+
+
+def prefill_kv_cache(params, x, cfg, positions, capacity, window=None):
+    """Build a cache from a prefilled sequence (keys of the last `cap`)."""
+    b, s, d = x.shape
+    _, k, v = _qkv(params, x, x, cfg, positions, positions)
+    cap = capacity if window is None else min(capacity, window)
+    if s >= cap:
+        ks, vs, ps = k[:, -cap:], v[:, -cap:], positions[:, -cap:]
+    else:
+        pad = cap - s
+        ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ps = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    # ring-consistent placement: slot = pos % cap
+    slot = jnp.where(ps >= 0, ps % cap, jnp.arange(cap)[None, :] % cap)
+    bidx = jnp.arange(b)[:, None]
+    cache = init_kv_cache(cfg, b, cap)
+    if cfg.kv_quant_bits:
+        kq, ks_ = _kv_quantize(ks, cfg.kv_quant_bits)
+        vq, vs_ = _kv_quantize(vs, cfg.kv_quant_bits)
+        return {
+            "k": cache["k"].at[bidx, slot].set(kq),
+            "v": cache["v"].at[bidx, slot].set(vq),
+            "k_s": cache["k_s"].at[bidx, slot].set(ks_),
+            "v_s": cache["v_s"].at[bidx, slot].set(vs_),
+            "pos": cache["pos"].at[bidx, slot].set(ps),
+        }
+    return {
+        "k": cache["k"].at[bidx, slot].set(ks.astype(jnp.bfloat16)),
+        "v": cache["v"].at[bidx, slot].set(vs.astype(jnp.bfloat16)),
+        "pos": cache["pos"].at[bidx, slot].set(ps),
+    }

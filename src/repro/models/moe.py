@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Expert-parallel friendly: the expert buffer ``(E, C, d)`` is sharded on
+the "model" axis; the token->expert resharding lowers to all-to-all-like
+collectives under pjit.  Dispatch is sort-based (argsort by expert id +
+within-expert rank via an exclusive running count), which avoids the
+O(T*E*C) one-hot dispatch tensors of the Switch formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import dense_init, shard
+from .qweight import dq
+
+
+def moe_init(key, cfg) -> dict:
+    spec = cfg.moe
+    d, e, f = cfg.d_model, spec.num_experts, spec.d_ff
+    ks = common.split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_up": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+
+
+def _capacity(tokens: int, spec) -> int:
+    c = int(tokens * spec.top_k * spec.capacity_factor / spec.num_experts)
+    return max(spec.top_k, -(-c // 8) * 8)
+
+
+def _chunks_for(t: int, requested: int) -> int:
+    c = max(1, min(requested, t))
+    while t % c:
+        c -= 1
+    return c
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (B, S, d); load-balance aux loss returned too."""
+    spec = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = spec.num_experts, spec.top_k
+    X = _chunks_for(t, spec.dispatch_chunks)
+    tc = t // X
+    cap = _capacity(tc, spec)
+    xf = x.reshape(X, tc, d)
+    xf = shard(xf, "batch", None, None)
+
+    logits = xf.astype(jnp.float32) @ dq(params["router"], jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (X, Tc, E)
+    gate, eidx = jax.lax.top_k(probs, k)                        # (X, Tc, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # aux load-balancing loss (Switch-style, over all tokens)
+    density = jnp.mean(jax.nn.one_hot(eidx[..., 0], e, dtype=jnp.float32),
+                       (0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * density_prob)
+
+    # ---- per-chunk sort-based dispatch (local capacity) -------------------
+    def dispatch(xc, gate_c, eidx_c):
+        fe = eidx_c.reshape(-1)                                 # (Tc*k,)
+        fg = gate_c.reshape(-1)
+        tok = jnp.repeat(jnp.arange(tc), k)
+        order = jnp.argsort(fe)
+        se, stok = fe[order], tok[order]
+        counts = jnp.bincount(fe, length=e)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(tc * k) - starts[se]
+        keep = rank < cap
+        slot = se * cap + jnp.where(keep, rank, 0)
+        buf = jnp.zeros((e * cap, d), x.dtype)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xc[stok], 0))
+        return buf.reshape(e, cap, d), (order, stok, keep, slot, fg)
+
+    buf, meta = jax.vmap(dispatch)(xf, gate, eidx)   # (X, E, C, d)
+    buf = shard(buf, "batch", "model", None, None)
+
+    # ---- expert FFN (chunks on data axes, experts on model axis) ----------
+    h = jax.nn.silu(jnp.einsum("xecd,edf->xecf", buf, dq(params["w_gate"]))) \
+        * jnp.einsum("xecd,edf->xecf", buf, dq(params["w_up"]))
+    y = jnp.einsum("xecf,efd->xecd", h, dq(params["w_down"]))
+    y = shard(y, "batch", "model", None, None)
+
+    # ---- per-chunk combine -------------------------------------------------
+    def combine(y_c, m):
+        order, stok, keep, slot, fg = m
+        ye = y_c.reshape(e * cap, d)[slot]
+        contrib = jnp.where(keep[:, None],
+                            ye * fg[order][:, None].astype(x.dtype), 0)
+        return jnp.zeros((tc, d), x.dtype).at[stok].add(contrib)
+
+    out = jax.vmap(combine)(y, meta)
+    out = shard(out, "batch", None, None)
+    return out.reshape(b, s, d), aux

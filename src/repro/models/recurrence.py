@@ -1,0 +1,63 @@
+"""Shared recurrence machinery: causal conv + chunked linear scans.
+
+Both Mamba's selective SSM and RecurrentGemma's RG-LRU are linear
+recurrences  h_t = a_t * h_{t-1} + b_t  (elementwise).  We evaluate them
+with an outer ``lax.scan`` over fixed-size time chunks (bounded
+working-set -- required at 32k+ sequence lengths) and an associative
+scan inside each chunk.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B, S, D); w: (CW, D); b: (D,).
+
+    ``state``: (B, CW-1, D) trailing inputs from the previous step (decode);
+    returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+CW-1, D)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else state
+    return y + b, new_state
+
+
+def _assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_scan(a, b, h0, chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t  over axis 1 (time).
+
+    a, b: (B, S, ...) same shape; h0: (B, ...).  Returns (h_all, h_last)
+    with h_all: (B, S, ...).  Peak memory ~ (B, chunk, ...) per step.
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    ar = jnp.moveaxis(a.reshape((B, n, chunk) + a.shape[2:]), 1, 0)
+    br = jnp.moveaxis(b.reshape((B, n, chunk) + b.shape[2:]), 1, 0)
+
+    def outer(h, xs):
+        ac, bc = xs                                   # (B, chunk, ...)
+        pa, pb = jax.lax.associative_scan(_assoc, (ac, bc), axis=1)
+        hs = pa * h[:, None] + pb                     # (B, chunk, ...)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(outer, h0, (ar, br))
+    h_all = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
+    return h_all, h_last
+
+
+def linear_scan_step(a, b, h):
+    """Single decode step of the same recurrence."""
+    return a * h + b

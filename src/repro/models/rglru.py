@@ -1,0 +1,67 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import dense_init, shard
+from .qweight import dq
+from .recurrence import causal_conv, chunked_linear_scan, linear_scan_step
+
+_C = 8.0   # Griffin's fixed scaling constant in a_t = exp(-c*softplus(L)*r)
+
+
+def rglru_init(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    cw = cfg.rglru.conv_width
+    ks = common.split_keys(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, w)),
+        "wy": dense_init(ks[1], (d, w)),
+        "conv_w": dense_init(ks[2], (cw, w), dtype=jnp.bfloat16),
+        "conv_b": jnp.zeros((w,), jnp.bfloat16),
+        "wi": dense_init(ks[3], (w, w)),
+        "wr": dense_init(ks[4], (w, w)),
+        "lambda_p": jnp.full((w,), 1.0, jnp.float32),
+        "out": dense_init(ks[5], (w, d)),
+    }
+
+
+def rglru_apply(params, x, cfg, *, cache=None, chunk: int = 256):
+    """x: (B, S, d); cache: {"conv": (B,CW-1,w), "h": (B,w)} or None."""
+    xb = x @ dq(params["wx"])
+    xb = shard(xb, "batch", None, "model")
+    conv_state = cache["conv"] if cache else None
+    xb, new_conv = causal_conv(xb, params["conv_w"], params["conv_b"],
+                               conv_state)
+
+    i_g = jax.nn.sigmoid(xb @ dq(params["wi"])).astype(jnp.float32)
+    r_g = jax.nn.sigmoid(xb @ dq(params["wr"])).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lambda_p"]) * r_g
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i_g * xb.astype(jnp.float32))
+
+    h0 = cache["h"] if cache else jnp.zeros(
+        (x.shape[0], xb.shape[-1]), jnp.float32)
+    if x.shape[1] == 1:                                  # decode
+        h = linear_scan_step(a[:, 0], gated[:, 0], h0)
+        hs = h[:, None]
+    else:
+        hs, h = chunked_linear_scan(a, gated, h0, chunk=chunk)
+
+    y = hs.astype(x.dtype) * jax.nn.gelu(x @ dq(params["wy"]))
+    out = y @ dq(params["out"])
+    out = shard(out, "batch", None, None)
+    return out, {"conv": new_conv, "h": h}
+
+
+def rglru_init_cache(cfg, batch: int) -> dict:
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), jnp.bfloat16),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

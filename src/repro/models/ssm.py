@@ -1,0 +1,88 @@
+"""Mamba-1 selective SSM block (falcon-mamba style, attention-free)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import dense_init, shard
+from .qweight import dq
+from .recurrence import causal_conv, chunked_linear_scan, linear_scan_step
+
+
+def _dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    dtr = cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+    return di, dtr, cfg.ssm.state_dim
+
+
+def ssm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di, dtr, st = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    ks = common.split_keys(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (cw, di), dtype=jnp.bfloat16),
+        "conv_b": jnp.zeros((di,), jnp.bfloat16),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * st)),
+        "dt_w": dense_init(ks[3], (dtr, di)),
+        "dt_b": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _ssm_inner(params, xi, dt_r, Bm, Cm, h0, chunk):
+    """Selective-SSM recurrence.  xi: (B,S,di) post-conv/silu."""
+    di, st = params["A_log"].shape
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32)
+                         @ dq(params["dt_w"], jnp.float32) + params["dt_b"])  # (B,S,di)
+    A = -jnp.exp(params["A_log"])                                # (di,st)
+    decay = jnp.exp(dt[..., None] * A)                           # (B,S,di,st)
+    bx = (dt * xi.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    if xi.shape[1] == 1:                                         # decode
+        h = linear_scan_step(decay[:, 0], bx[:, 0], h0)
+        hs = h[:, None]
+    else:
+        hs, h = chunked_linear_scan(decay, bx, h0, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)                      # (B,S,di)
+    y = y + params["D"] * xi.astype(jnp.float32)
+    return y, h
+
+
+def ssm_apply(params, x, cfg, *, cache=None, chunk: int = 256):
+    """x: (B, S, d).  cache: {"conv": (B,CW-1,di), "h": (B,di,st)} or None."""
+    di, dtr, st = _dims(cfg)
+    u = x @ dq(params["in_proj"])
+    xi, z = jnp.split(u, 2, axis=-1)
+    xi = shard(xi, "batch", None, "model")
+    conv_state = cache["conv"] if cache else None
+    xi, new_conv = causal_conv(xi, params["conv_w"], params["conv_b"],
+                               conv_state)
+    xi = jax.nn.silu(xi)
+
+    dbc = xi @ dq(params["x_proj"])
+    dt_r = dbc[..., :dtr]
+    Bm = dbc[..., dtr:dtr + st].astype(jnp.float32)
+    Cm = dbc[..., dtr + st:].astype(jnp.float32)
+
+    h0 = cache["h"] if cache else jnp.zeros(
+        (x.shape[0], di, st), jnp.float32)
+    y, h = _ssm_inner(params, xi, dt_r, Bm, Cm, h0, chunk)
+
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ dq(params["out_proj"])
+    out = shard(out, "batch", None, None)
+    new_cache = {"conv": new_conv, "h": h}
+    return out, new_cache
+
+
+def ssm_init_cache(cfg, batch: int) -> dict:
+    di, dtr, st = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, di), jnp.bfloat16),
+        "h": jnp.zeros((batch, di, st), jnp.float32),
+    }

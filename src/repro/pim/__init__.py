@@ -1,0 +1,1 @@
+from .linear import PimConfig, linear_init, linear_apply, pack_linear  # noqa

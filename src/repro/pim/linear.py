@@ -1,0 +1,85 @@
+"""PIM-backed linear layers: the paper's technique as a framework feature.
+
+A Compute RAM is a *dual-mode* block: the same bits serve storage and
+compute.  The framework analogue: a linear layer whose weights are
+*stored* bit-plane packed (``uint32`` planes, the storage mode) and
+*consumed* directly by the bit-serial matmul kernels (the compute mode)
+-- no dequantized copy ever exists in HBM.
+
+Backends (``PimConfig.mode``):
+
+* ``off``      -- ordinary dense bf16 matmul (the "baseline FPGA": data
+                  moves to the MXU as-is).  Used for training.
+* ``pallas``   -- packed weights + VMEM unpack + MXU (performance path).
+* ``popcount`` -- packed weights + AND/popcount bit-serial arithmetic
+                  (PIM-faithful path).
+* ``ref``      -- pure-jnp oracle of the packed path (tests, CPU).
+
+Activations are dynamically quantized to int8 per call in packed modes
+(standard W4A8/W8A8 serving).  ``linear_apply`` is differentiable only
+in ``off`` mode; packed modes are inference paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class PimConfig:
+    mode: str = "off"            # off | ref | pallas | popcount
+    weight_bits: int = 4
+    act_bits: int = 8
+
+    @property
+    def packed(self) -> bool:
+        return self.mode != "off"
+
+
+def linear_init(key, d_in: int, d_out: int, cfg: PimConfig,
+                dtype=jnp.bfloat16, scale: Optional[float] = None) -> dict:
+    """Init a linear layer's params (dense; pack separately if desired)."""
+    std = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+    return {"w": w.astype(dtype)}
+
+
+def pack_linear(params: dict, cfg: PimConfig) -> dict:
+    """Convert a dense layer to packed storage (offline weight prep)."""
+    w = params["w"].astype(jnp.float32)
+    q, scale = kops.quantize(w, bits=cfg.weight_bits, axis=1)
+    packed = kops.pack_bitplanes(q, cfg.weight_bits, axis=0)
+    return {"w_packed": packed, "w_scale": scale}
+
+
+def linear_apply(params: dict, x: jnp.ndarray, cfg: PimConfig) -> jnp.ndarray:
+    """y = x @ W with the configured backend.  x: (..., d_in)."""
+    if not cfg.packed:
+        return x @ params["w"]
+
+    orig_shape = x.shape
+    d_in = orig_shape[-1]
+    xf = x.reshape(-1, d_in)
+    qx, sx = kops.quantize(xf.astype(jnp.float32), bits=cfg.act_bits, axis=0)
+
+    wp, ws = params["w_packed"], params["w_scale"]
+    if cfg.mode == "ref":
+        acc = kref.quant_matmul(qx, wp, ws, bits=cfg.weight_bits)
+    elif cfg.mode == "pallas":
+        acc = kops.quant_matmul(qx, wp, ws, bits=cfg.weight_bits)
+    elif cfg.mode == "popcount":
+        ap = kops.pack_bitplanes(qx, cfg.act_bits, axis=1)
+        raw = kops.popcount_matmul(ap, wp)
+        acc = raw.astype(jnp.float32) * ws[None, :]
+    else:
+        raise ValueError(cfg.mode)
+
+    y = acc.astype(jnp.float32) * sx[:, None]
+    return y.reshape(orig_shape[:-1] + (y.shape[-1],)).astype(x.dtype)

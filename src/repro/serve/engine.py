@@ -1,0 +1,105 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching (vLLM-style lite) and greedy/temperature sampling."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot batch decode.  All slots share one jitted decode_step;
+    finished slots are refilled from the queue (continuous batching)."""
+
+    def __init__(self, model, params, batch_slots: int = 4,
+                 capacity: int = 256, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.capacity = capacity
+        self.temperature = temperature
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros((batch_slots,), np.int32)
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self.caches = model.init_cache(batch_slots, capacity)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(
+            lambda p, t: model.prefill(p, tokens=t, capacity=capacity))
+
+    def add(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, cache = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt)[None, :])
+
+                # merge this request's cache into slot i: the batch dim is
+                # dim 1 for scanned-stack ("unit") caches, dim 0 for
+                # unstacked ("rest") layer caches.
+                def merge(path, full, one):
+                    keys = [getattr(q, "key", str(q)) for q in path
+                            if hasattr(q, "key")]
+                    bdim = 1 if "unit" in keys else 0
+                    idx = (slice(None),) * bdim + (i,)
+                    src = one[(slice(None),) * bdim + (0,)]
+                    return full.at[idx].set(src)
+
+                self.caches = jax.tree_util.tree_map_with_path(
+                    merge, self.caches, cache)
+                nxt = int(jnp.argmax(logits[0, -1]))
+                req.out.append(nxt)
+                self.slots[i] = req
+                self.pos[i] = len(req.prompt)
+                self.tokens[i, 0] = nxt
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished reqs."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return []
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos))
+        if self.temperature > 0:
+            key = jax.random.PRNGKey(int(self.pos.sum()))
+            nxt = jax.random.categorical(
+                key, logits[:, 0] / self.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+        nxt = np.asarray(nxt, np.int32)
+
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.tokens[i, 0] = nxt[i]
+            if len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+    def run(self) -> List[Request]:
+        done = []
+        while self.queue or any(s is not None for s in self.slots):
+            done.extend(self.step())
+        return done

@@ -1,0 +1,74 @@
+"""Paper-claim validation of the cost model (Table II, Figs 4-6)."""
+
+import pytest
+
+from repro.core import costmodel as cm
+
+
+def test_table2_area():
+    assert abs(cm.AREA_CR_UM2 - 11072.5) < 1.0
+    # "~33% more area compared to a BRAM"
+    assert 0.30 <= cm.AREA_CR_UM2 / cm.AREA_BRAM_UM2 - 1 <= 0.36
+    # "A DSP Slice has ~12% more area than a Compute RAM"
+    assert 0.09 <= cm.AREA_DSP_UM2 / cm.AREA_CR_UM2 - 1 <= 0.15
+
+
+def test_table2_frequency():
+    assert abs(cm.FREQ_CR_MHZ - 609.1) < 0.5
+    # "~37% slower than BRAMs"
+    assert 0.32 <= 1 - cm.FREQ_CR_MHZ / cm.FREQ_BRAM_MHZ <= 0.37
+    # "~43% faster than DSPs in fixed-point, ~67% in floating-point"
+    assert cm.FREQ_CR_MHZ / cm.FREQ_DSP_FIXED_MHZ > 1.40
+    assert cm.FREQ_CR_MHZ / cm.FREQ_DSP_FLOAT_MHZ > 1.60
+
+
+def test_table2_throughput_from_programs():
+    """CR GOPS computed from executing our instruction sequences."""
+    assert abs(cm.cr_throughput_gops("add", "int4") - 4.8) < 0.2
+    assert abs(cm.cr_throughput_gops("add", "int8") - 2.7) < 0.2
+    # CR beats every other block at int4/int8 (paper: highest throughput)
+    for prec in ("int4", "int8"):
+        cr = cm.cr_throughput_gops("add", prec)
+        assert cr > cm.GOPS_DSP[prec] and cr > cm.GOPS_LB[prec]
+
+
+@pytest.mark.parametrize("prec", ["int4", "int8"])
+def test_fig4_addition_claims(prec):
+    r = cm.compare("add", prec)
+    # energy ~20% of baseline (avg 80% savings)
+    assert r["energy_ratio"] < 0.35
+    # execution time improvement 20%-80%
+    assert 0.1 <= r["time_ratio"] <= 0.8
+    # circuit frequency 60-65% higher
+    assert 0.55 <= r["freq_gain"] <= 0.70
+    # area reduced
+    assert r["area_ratio"] < 1.0
+
+
+def test_fig5_multiplication_claims():
+    r = cm.compare("mul", "int4")
+    # paper: ~12% shorter total time; ours lands close (cycle counts are
+    # from our own sequences)
+    assert r["time_ratio"] < 1.1
+    assert r["area_ratio"] < 1.0
+    assert r["energy_ratio"] < 1.0
+
+
+def test_fig6_dot_product_claims():
+    r40 = cm.compare("dot", "int4", cr_cols=40)
+    r72 = cm.compare("dot", "int4", cr_cols=72)
+    # paper: CR at 40 columns takes MORE time than baseline
+    assert r40["time_ratio"] > 1.0
+    # widening the array increases parallelism -> time strictly improves
+    assert r72["time_ratio"] < r40["time_ratio"] * 0.75
+    # area impact of widening is minor
+    assert r72["compute_ram"].area_um2 / r40["compute_ram"].area_um2 < 1.1
+
+
+def test_energy_average_savings():
+    """Paper headline: 'average savings of 80% in energy' -- holds for the
+    ops whose cycle counts match the paper's (int add); our from-scratch
+    mul/dot sequences are within ~2x of paper cycles and documented."""
+    r4 = cm.compare("add", "int4")["energy_ratio"]
+    r8 = cm.compare("add", "int8")["energy_ratio"]
+    assert (r4 + r8) / 2 < 0.30

@@ -1,0 +1,127 @@
+"""PIM linear backends agreement + serving engine behaviour."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.model import LM
+from repro.pim import PimConfig, linear_apply, linear_init, pack_linear
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.mark.parametrize("mode", ["ref", "pallas", "popcount"])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_pim_backends_agree(mode, bits):
+    cfg = PimConfig(mode=mode, weight_bits=bits)
+    key = jax.random.PRNGKey(0)
+    dense = linear_init(key, 128, 64, cfg)
+    packed = pack_linear(dense, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 10, 128),
+                          jnp.bfloat16)
+
+    y_dense = linear_apply(dense, x, PimConfig(mode="off"))
+    y_pim = linear_apply(packed, x, cfg)
+    # quantization error bound: W4A8 coarse, W8A8 tight
+    err = np.abs(np.asarray(y_pim, np.float32)
+                 - np.asarray(y_dense, np.float32))
+    ref_mag = np.abs(np.asarray(y_dense, np.float32)).mean()
+    tol = 0.15 if bits == 4 else 0.03
+    assert err.mean() < tol * max(ref_mag, 1e-3)
+
+
+def test_pim_ref_equals_pallas_exactly():
+    """Same integer arithmetic -> bit-identical accumulators."""
+    cfgr = PimConfig(mode="ref", weight_bits=4)
+    cfgp = PimConfig(mode="pallas", weight_bits=4)
+    key = jax.random.PRNGKey(2)
+    dense = linear_init(key, 256, 128, cfgr)
+    packed = pack_linear(dense, cfgr)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 256), jnp.bfloat16)
+    yr = linear_apply(packed, x, cfgr)
+    yp = linear_apply(packed, x, cfgp)
+    np.testing.assert_allclose(np.asarray(yr, np.float32),
+                               np.asarray(yp, np.float32), rtol=1e-5)
+
+
+def test_serve_engine_matches_manual_decode():
+    cfg = configs.get_config("llama3.2-1b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    eng = ServeEngine(model, params, batch_slots=2, capacity=32)
+    eng.add(Request(rid=0, prompt=prompt, max_new=6))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 6
+
+    # manual greedy decode must match
+    toks = jnp.asarray(prompt)[None, :]
+    logits, caches = model.prefill(params, tokens=toks, capacity=32)
+    cur = int(jnp.argmax(logits[0, -1]))
+    outs = [cur]
+    pos = prompt.shape[0]
+    # replicate across the 2 engine slots to reuse cache shapes
+    caches2 = jax.tree.map(
+        lambda x: jnp.concatenate([x, x], axis=1)
+        if x.ndim >= 2 and x.shape[1] == 1 else x, caches)
+    for _ in range(5):
+        lg, caches2 = model.decode_step(
+            params, caches2, jnp.asarray([[cur], [cur]], jnp.int32),
+            jnp.asarray([pos, pos], jnp.int32))
+        cur = int(jnp.argmax(lg[0, 0]))
+        outs.append(cur)
+        pos += 1
+    assert outs == done[0].out
+
+
+def test_serve_engine_continuous_batching():
+    cfg = configs.get_config("qwen2-0.5b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    eng = ServeEngine(model, params, batch_slots=2, capacity=32)
+    rng = np.random.default_rng(0)
+    for rid in range(5):                     # more requests than slots
+        eng.add(Request(rid=rid,
+                        prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                        max_new=4))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_serve_engine_hybrid_arch_with_rest_layers():
+    """recurrentgemma smoke has unstacked 'rest' layers -- regression
+    test for the slot-merge batch-dim handling."""
+    cfg = configs.get_config("recurrentgemma-9b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    eng = ServeEngine(model, params, batch_slots=2, capacity=32)
+    eng.add(Request(rid=0, prompt=prompt, max_new=5))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 5
+
+    # must match single-request manual decode
+    toks = jnp.asarray(prompt)[None, :]
+    logits, caches = model.prefill(params, tokens=toks, capacity=32)
+    cur = int(jnp.argmax(logits[0, -1]))
+    outs = [cur]
+    pos = len(prompt)
+    caches2 = jax.tree.map(
+        lambda x: jnp.concatenate([x, x], axis=1)
+        if (x.ndim >= 2 and x.shape[1] == 1) else
+        (jnp.concatenate([x, x], axis=0) if x.ndim >= 1 and x.shape[0] == 1
+         else x), caches)
+    # unit caches: (L, 1, ...) -> dim1; rest caches: (1, ...) -> dim0
+    for _ in range(4):
+        lg, caches2 = model.decode_step(
+            params, caches2, jnp.asarray([[cur], [cur]], jnp.int32),
+            jnp.asarray([pos, pos], jnp.int32))
+        cur = int(jnp.argmax(lg[0, 0]))
+        outs.append(cur)
+        pos += 1
+    assert outs == done[0].out

@@ -1,0 +1,154 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, harness, programs
+from repro.core import ref as cref
+from repro.kernels import ref as kref
+
+
+@st.composite
+def _int_vectors(draw, nbits):
+    t = draw(st.integers(2, 6))
+    cols = draw(st.integers(1, 6))
+    lo, hi = 0, (1 << nbits)
+    a = draw(st.lists(st.integers(lo, hi - 1), min_size=t * cols,
+                      max_size=t * cols))
+    b = draw(st.lists(st.integers(lo, hi - 1), min_size=t * cols,
+                      max_size=t * cols))
+    return (np.array(a, np.uint64).reshape(t, cols),
+            np.array(b, np.uint64).reshape(t, cols))
+
+
+def _run(prog, lay, data, cols):
+    arr = harness.pack_state(lay, data, cols)
+    st_ = engine.CRState(jnp.asarray(arr), jnp.zeros((cols,), bool),
+                         jnp.ones((cols,), bool))
+    return np.asarray(engine.execute(prog, st_).array)
+
+
+@settings(max_examples=15, deadline=None)
+@given(_int_vectors(4))
+def test_prop_iadd4(ab):
+    a, b = ab
+    prog, lay = programs.iadd(4, rows=128, tuples=a.shape[0])
+    out = _run(prog, lay, {"a": a, "b": b}, a.shape[1])
+    got = harness.unpack_field(out, lay, "d")
+    np.testing.assert_array_equal(got, cref.iadd(a, b, 4))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_int_vectors(4))
+def test_prop_imul4(ab):
+    a, b = ab
+    prog, lay = programs.imul(4, rows=256, tuples=a.shape[0])
+    out = _run(prog, lay, {"a": a, "b": b}, a.shape[1])
+    got = harness.unpack_field(out, lay, "d")
+    np.testing.assert_array_equal(got, cref.imul(a, b, 4))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_int_vectors(4))
+def test_prop_idot4(ab):
+    a, b = ab
+    prog, lay = programs.idot(4, rows=128, tuples=a.shape[0])
+    out = _run(prog, lay, {"a": a, "b": b}, a.shape[1])
+    np.testing.assert_array_equal(harness.unpack_acc(out, lay),
+                                  cref.idot(a, b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4))
+def test_prop_bf16_add_matches_oracle(seed, tuples):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, 2, (tuples, 8)).astype(np.uint32)
+    e = rng.integers(90, 160, (tuples, 8)).astype(np.uint32)
+    m = rng.integers(0, 128, (tuples, 8)).astype(np.uint32)
+    a = ((s << 15) | (e << 7) | m).astype(np.uint16)
+    s2 = rng.integers(0, 2, (tuples, 8)).astype(np.uint32)
+    e2 = rng.integers(90, 160, (tuples, 8)).astype(np.uint32)
+    m2 = rng.integers(0, 128, (tuples, 8)).astype(np.uint32)
+    b = ((s2 << 15) | (e2 << 7) | m2).astype(np.uint16)
+    prog, lay = programs.bf16_add(rows=512, tuples=tuples)
+    out = _run(prog, lay, {"a": a, "b": b}, 8)
+    got = harness.unpack_field(out, lay, "d").astype(np.uint16)
+    np.testing.assert_array_equal(got, cref.bf16_add(a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([32, 64, 96]))
+def test_prop_bitplane_matmul_exact(seed, bits, k):
+    """Bit-plane decomposition is EXACT integer arithmetic for any
+    shape/bit-width: pack -> popcount matmul == plain int matmul."""
+    rng = np.random.default_rng(seed)
+    m, n = int(rng.integers(1, 8)), int(rng.integers(8, 32))
+    lo, hi = -(1 << (bits - 1)), 1 << (bits - 1)
+    a = rng.integers(lo, hi, (m, k)).astype(np.int8)
+    w = rng.integers(lo, hi, (k, n)).astype(np.int8)
+    ap = kref.pack_bitplanes(jnp.asarray(a), bits, axis=1)
+    wp = kref.pack_bitplanes(jnp.asarray(w), bits, axis=0)
+    got = np.asarray(kref.popcount_matmul(ap, wp, True, True))
+    want = a.astype(np.int64) @ w.astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_checkpoint_roundtrip(seed):
+    import tempfile
+    from repro.train import checkpoint as ckpt
+    rng = np.random.default_rng(seed)
+    tmp = tempfile.mkdtemp(prefix=f"ck{seed % 1000}_")
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+            "b": [jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)],
+            "n": int(rng.integers(0, 100))}
+    ckpt.save(tmp, 1, tree)
+    back, _ = ckpt.restore(tmp, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_predication_isolation(seed):
+    """Columns with tag=0 are never modified by predicated row writes --
+    the per-column predication invariant of the logic peripherals."""
+    from repro.core.isa import Instr, Program, OP_FA, OP_TROW, OP_W1
+    rng = np.random.default_rng(seed)
+    rows, cols = 16, 8
+    arr = rng.integers(0, 2, (rows, cols)).astype(bool)
+    arr[0] = rng.integers(0, 2, cols).astype(bool)   # tag source row
+    prog = Program("p", [
+        Instr(OP_TROW, a=0),
+        Instr(OP_W1, 3, pred=True),
+        Instr(OP_FA, 5, 6, 7, pred=True),
+    ])
+    st_ = engine.CRState(jnp.asarray(arr), jnp.zeros((cols,), bool),
+                         jnp.ones((cols,), bool))
+    out = np.asarray(engine.execute(prog, st_).array)
+    masked = ~arr[0]
+    np.testing.assert_array_equal(out[:, masked], arr[:, masked])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_storage_mode_isolation(seed):
+    """Compute programs only write their layout's scratch/result rows:
+    the dual-mode claim -- operand storage is preserved bit-exactly."""
+    rng = np.random.default_rng(seed)
+    prog, lay = programs.iadd(8, rows=128)
+    a = rng.integers(0, 256, (lay.tuples, 8)).astype(np.uint64)
+    b = rng.integers(0, 256, (lay.tuples, 8)).astype(np.uint64)
+    arr = harness.pack_state(lay, {"a": a, "b": b}, 8)
+    st_ = engine.CRState(jnp.asarray(arr), jnp.zeros((8,), bool),
+                         jnp.ones((8,), bool))
+    out = np.asarray(engine.execute(prog, st_).array)
+    # operands unchanged after compute mode
+    np.testing.assert_array_equal(harness.unpack_field(out, lay, "a"), a)
+    np.testing.assert_array_equal(harness.unpack_field(out, lay, "b"), b)

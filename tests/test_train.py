@@ -1,0 +1,212 @@
+"""Training substrate: optimizer, data determinism, checkpoint
+round-trip, fault-tolerant runner (fault injection + restore)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.model import LM
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train.runner import RunnerConfig, Trainer, elastic_remesh
+from repro.train.step import jit_train_step
+
+
+def test_optimizer_converges_quadratic():
+    cfg = opt_mod.OptConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt_mod.init(params, cfg)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 1.0))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt_mod.apply(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    cfg = data_mod.DataConfig(seed=7, global_batch=8, seq_len=16, vocab=100)
+    p0 = data_mod.Pipeline(cfg)
+    a = np.asarray(p0.batch(3)["tokens"])
+    b = np.asarray(p0.batch(3)["tokens"])
+    np.testing.assert_array_equal(a, b)           # counter-based: pure
+    assert (np.asarray(p0.batch(4)["tokens"]) != a).any()
+    # 2-host sharding covers the same global batch, disjointly
+    h0 = data_mod.Pipeline(cfg, host_id=0, n_hosts=2)
+    h1 = data_mod.Pipeline(cfg, host_id=1, n_hosts=2)
+    gb = np.concatenate([np.asarray(h0.batch(3)["tokens"]),
+                         np.asarray(h1.batch(3)["tokens"])])
+    np.testing.assert_array_equal(gb, a)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "s": jnp.asarray(5, jnp.int32)}
+    ckpt.save(tmp_path, 10, tree)
+    ckpt.save(tmp_path, 20, tree)
+    assert ckpt.latest_step(tmp_path) == 20
+    back, meta = ckpt.restore(tmp_path, tree)
+    assert meta["step"] == 20
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+        assert x.dtype == y.dtype
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, tree, keep=2)
+    assert ckpt.all_steps(tmp_path) == [4, 5]
+
+
+def test_runner_end_to_end_with_fault_injection(tmp_path):
+    cfg = configs.get_config("qwen2-0.5b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    opt_state = opt_mod.init(params, opt_cfg)
+    pipe = data_mod.Pipeline(data_mod.DataConfig(
+        global_batch=2, seq_len=16, vocab=cfg.vocab))
+    step_fn = jit_train_step(model, opt_cfg, donate=False)
+
+    failures = {"armed": True}
+
+    def fail_hook(step):
+        if step == 12 and failures["armed"]:
+            failures["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    tr = Trainer(RunnerConfig(total_steps=15, ckpt_every=5,
+                              ckpt_dir=str(tmp_path), log_every=100),
+                 step_fn, params, opt_state, pipe,
+                 fail_hook=fail_hook, log=lambda *a: None)
+    end_step, metrics = tr.run()
+    assert end_step == 15
+    assert tr.restarts == 1                      # failed once, recovered
+    assert np.isfinite(metrics["loss"])
+    assert ckpt.latest_step(tmp_path) == 15
+
+
+def test_elastic_remesh_resizing():
+    assert elastic_remesh(256, 16, 8) == 32      # lose half the pod
+    with pytest.raises(AssertionError):
+        elastic_remesh(256, 16, 7)               # non-divisible topology
+
+
+def test_loss_decreases_over_short_run(tmp_path):
+    """End-to-end sanity: 30 steps of a tiny model on synthetic data."""
+    cfg = configs.get_config("llama3.2-1b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    opt_cfg = opt_mod.OptConfig(lr=3e-3, warmup_steps=5, total_steps=30)
+    opt_state = opt_mod.init(params, opt_cfg)
+    pipe = data_mod.Pipeline(data_mod.DataConfig(
+        global_batch=4, seq_len=32, vocab=cfg.vocab))
+    step_fn = jit_train_step(model, opt_cfg, donate=False)
+    losses = []
+    for s in range(30):
+        params, opt_state, m = step_fn(params, opt_state, pipe.batch(s))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_async_checkpoint_saver(tmp_path):
+    from repro.train.checkpoint import AsyncSaver
+    s = AsyncSaver()
+    tree = {"w": jnp.arange(10, dtype=jnp.float32)}
+    s.submit(tmp_path, 5, tree)
+    s.submit(tmp_path, 6, tree)     # joins the first automatically
+    s.wait()
+    assert ckpt.all_steps(tmp_path) == [5, 6]
+    back, meta = ckpt.restore(tmp_path, tree)
+    assert meta["step"] == 6
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.arange(10, dtype=np.float32))
+
+
+def test_compressed_gradient_allreduce():
+    """int8-compressed DP gradient psum ~= exact psum (bounded error)."""
+    import os
+    from repro.train.compress import make_compressed_grad_fn
+    from repro.launch.mesh import make_mesh
+
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (run under dryrun env for full)")
+
+    mesh = make_mesh(2, 1)
+    with mesh:
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32)}
+        batch = {"x": jnp.asarray(rng.normal(0, 1, (16, 8)), jnp.float32),
+                 "y": jnp.asarray(rng.normal(0, 1, (16, 4)), jnp.float32)}
+
+        fn = make_compressed_grad_fn(loss_fn, mesh, bits=8)
+        loss_c, grads_c = jax.jit(fn)(params, batch)
+        loss_e, grads_e = jax.value_and_grad(loss_fn)(params, batch)
+
+        assert abs(float(loss_c) - float(loss_e)) < 1e-4
+        ge = np.asarray(grads_e["w"])
+        gc = np.asarray(grads_c["w"])
+        # error bounded by quantization step ~ max|g|/127 per shard
+        assert np.abs(gc - ge).max() < np.abs(ge).max() / 40
+
+
+def test_compressed_gradient_allreduce_multidevice():
+    """Run the compressed-psum test on 4 fake devices via subprocess
+    (the in-process test skips on single-device environments)."""
+    import subprocess
+    import sys
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q",
+         "tests/test_train.py::test_compressed_gradient_allreduce"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "1 passed" in r.stdout
+
+
+def test_elastic_restart_subprocess():
+    """Full elastic scenario: train on (2,2), checkpoint, lose half the
+    data axis, restore on (1,2), continue -- losses match an
+    uninterrupted reference run (see tests/elastic_scenario.py)."""
+    import subprocess
+    import sys
+    r = subprocess.run(
+        [sys.executable, "tests/elastic_scenario.py"],
+        capture_output=True, text=True, timeout=500,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "ELASTIC_OK" in r.stdout
+
+
+def test_file_backed_data_pipeline(tmp_path):
+    """memmap token-file source: deterministic, in-vocab, resumable."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, 4096).astype(np.uint16)
+    fp = tmp_path / "tokens.bin"
+    toks.tofile(fp)
+    cfg = data_mod.DataConfig(seed=3, global_batch=4, seq_len=32,
+                              vocab=1000, path=str(fp))
+    pipe = data_mod.Pipeline(cfg)
+    b1 = np.asarray(pipe.batch(7)["tokens"])
+    b2 = np.asarray(pipe.batch(7)["tokens"])
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (4, 32)
+    assert (b1 >= 0).all() and (b1 < 1000).all()
+    # windows really come from the file
+    flat = b1[0]
+    starts = [i for i in range(len(toks) - 32)
+              if (toks[i:i + 32] == flat).all()]
+    assert starts, "batch window not found in source file"
