@@ -1,17 +1,118 @@
-"""Compute RAM engine benchmarks: cycle counts per op + multi-block
+"""Compute RAM engine benchmarks: cycle counts per op + executor
+replay comparison (scan controller vs compiled fast path) + multi-block
 scaling (one FPGA = hundreds of Compute RAM sites executing in
-parallel), plus instruction-memory footprints (paper §III-A2)."""
+parallel), plus instruction-memory footprints (paper §III-A2).
 
+Writes the executor numbers to ``BENCH_engine.json`` so regressions in
+the compiled path show up as a diff, not just a log line.
+"""
+
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel as cm, engine, programs
+from repro.core import costmodel as cm, engine, harness, programs
+
+BENCH_JSON = "BENCH_engine.json"
 
 
-def run(print_fn=print):
+def _replay_pair(f1, f2, n=25):
+    """Interleaved min-of-n for two functions (load-noise resistant)."""
+    f1(), f2(), f1(), f2()
+    b1 = b2 = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        f1()
+        b1 = min(b1, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        f2()
+        b2 = min(b2, time.perf_counter() - t0)
+    return b1, b2
+
+
+def bench_executors(print_fn=print, rows=512, cols=40):
+    """Replay scan vs compiled on the paper geometry; return results."""
+    rng = np.random.default_rng(0)
+    results = {}
+    for name, (prog, lay) in [
+        ("imul4", programs.imul(4, rows=rows)),
+        ("imul8", programs.imul(8, rows=rows)),
+        ("imul16", programs.imul(16, rows=rows)),
+        ("idot4", programs.idot(4, rows=rows)),
+        ("idot8", programs.idot(8, rows=rows)),
+        ("idot16", programs.idot(16, rows=rows)),
+        ("iadd8", programs.iadd(8, rows=rows)),
+    ]:
+        a = rng.integers(0, 1 << lay.nbits, (lay.tuples, cols),
+                         dtype=np.uint64)
+        b = rng.integers(0, 1 << lay.nbits, (lay.tuples, cols),
+                         dtype=np.uint64)
+        state = harness.make_jax_state(
+            harness.pack_state(lay, {"a": a, "b": b}, cols))
+
+        scan_fn = jax.jit(lambda s, p=prog: engine.execute_scan(p, s))
+
+        t0 = time.perf_counter()
+        fn = engine.compile_program(prog, rows, cols)
+        jax.block_until_ready(fn(state).array)
+        t_compile = time.perf_counter() - t0
+
+        t_scan, t_compiled = _replay_pair(
+            lambda: jax.block_until_ready(scan_fn(state).array),
+            lambda: jax.block_until_ready(fn(state).array))
+
+        speedup = t_scan / t_compiled
+        results[name] = {
+            "cycles": prog.cycles(),
+            "scan_replay_ms": round(t_scan * 1e3, 4),
+            "compiled_replay_ms": round(t_compiled * 1e3, 4),
+            "compile_s": round(t_compile, 2),
+            "speedup": round(speedup, 2),
+        }
+        print_fn(f"engine/executor_{name}/speedup,{speedup:.1f},"
+                 f"scan_ms={t_scan*1e3:.2f};compiled_ms="
+                 f"{t_compiled*1e3:.2f};compile_s={t_compile:.1f}")
+    return results
+
+
+def bench_blocks(print_fn=print, rows=512, cols=40):
+    """Multi-block fabric simulation (int4 dot product per block):
+    vmapped scan vs the compiled wide-block path."""
+    prog, lay = programs.idot(4, rows=rows)
+    results = {}
+    for blocks in (1, 16, 64):
+        states = engine.CRState(
+            array=jnp.zeros((blocks, rows, cols), jnp.bool_),
+            carry=jnp.zeros((blocks, cols), jnp.bool_),
+            tag=jnp.ones((blocks, cols), jnp.bool_),
+        )
+        f_scan = jax.jit(
+            lambda s: engine.execute_blocks(prog, s, executor="scan"))
+        jax.block_until_ready(
+            engine.execute_blocks(prog, states).array)      # compile
+        t_scan, t_comp = _replay_pair(
+            lambda: jax.block_until_ready(f_scan(states).array),
+            lambda: jax.block_until_ready(
+                engine.execute_blocks(prog, states).array), n=8)
+        ops_total = lay.tuples * cols * blocks   # int4 MACs simulated
+        results[f"blocks{blocks}"] = {
+            "scan_replay_ms": round(t_scan * 1e3, 4),
+            "compiled_replay_ms": round(t_comp * 1e3, 4),
+            "speedup": round(t_scan / t_comp, 2),
+            "sim_mops_compiled": round(ops_total / (t_comp * 1e6), 1),
+        }
+        print_fn(f"engine/multiblock_idot4/{blocks}blk,"
+                 f"{t_comp*1e6:.0f},ops={ops_total};"
+                 f"sim_mops={ops_total/(t_comp*1e6):.1f};"
+                 f"speedup_vs_scan={t_scan/t_comp:.1f}")
+    return results
+
+
+def run(print_fn=print, json_path=BENCH_JSON):
     for (op, prec), gen in programs.GENERATORS.items():
         prog, lay = gen(rows=512)
         cyc = prog.cycles()
@@ -21,19 +122,11 @@ def run(print_fn=print):
                  f"per_op={per_op:.1f};imem_slots={prog.footprint()}"
                  f";time_us={us:.2f}@{cm.FREQ_CR_MHZ:.0f}MHz")
 
-    # multi-block vmap scaling (simulation throughput, informational)
-    prog, lay = programs.iadd(8, rows=512)
-    for blocks in (1, 16, 64):
-        states = engine.CRState(
-            array=jnp.zeros((blocks, 512, 40), jnp.bool_),
-            carry=jnp.zeros((blocks, 40), jnp.bool_),
-            tag=jnp.ones((blocks, 40), jnp.bool_),
-        )
-        f = jax.jit(lambda s: engine.execute_blocks(prog, s))
-        jax.block_until_ready(f(states).array)
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(states).array)
-        us = (time.perf_counter() - t0) * 1e6
-        ops_total = lay.tuples * 40 * blocks
-        print_fn(f"engine/multiblock_iadd8/{blocks}blk,{us:.0f},"
-                 f"ops={ops_total};sim_mops={ops_total/us:.1f}")
+    payload = {
+        "geometry": {"rows": 512, "cols": 40},
+        "executors": bench_executors(print_fn),
+        "blocks": bench_blocks(print_fn),
+    }
+    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
+    print_fn(f"engine/bench_json,{json_path},written")
+    return payload

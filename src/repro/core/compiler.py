@@ -1,0 +1,958 @@
+"""Static compiler: Compute RAM programs -> fused jnp functions.
+
+``engine.compile_program`` lowers the *expanded* micro-op stream of a
+:class:`repro.core.isa.Program` into a statically-specialized jnp
+function: opcodes are compile-time constants (no ``lax.switch``), row
+values live in trace-time dictionaries so runs of row writes become one
+batched ``arr.at[rows].set(vals)``, and the bool column axis is
+optionally bit-packed into ``uint32`` words so one host op covers 32
+columns.  Two lowering strategies, tried in order:
+
+1. **Lane vectorization** (`_analyze` / `_lower_lanes`).  Programs from
+   :mod:`repro.core.programs` process T tuples with a dominant top-level
+   hardware loop whose iterations touch disjoint ("affine") row windows
+   plus shared scratch rows that every iteration overwrites before
+   reading.  Such loops execute all T iterations as *lanes* of one
+   vectorized body -- the compiled graph contains ONE copy of the body
+   on ``(T, ...)``-shaped values instead of T copies.  Rows carrying a
+   loop-serial dependence (e.g. the ``idot`` accumulator) force the
+   minimal suffix of the body containing them to run serially per lane;
+   everything before it still vectorizes.
+
+2. **Flat lowering** (`_lower_flat`): straight-line specialization of
+   the whole stream, used when the loop analysis bails.  Correctness
+   never depends on the analysis succeeding.
+
+Both strategies fold maximal OP_FA/OP_FS runs ("ripple chains") into
+per-column integer adds/subtracts: an n-cycle carry ripple is one
+``a + b + carry_in`` on bit-plane-packed ints (exact, including the
+final carry latch and tag predication).
+
+The paper's own framing (§III-C) is that the ISA is the contract and
+the substrate may change freely; this module is that idea applied to
+the simulator itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .isa import (Instr, _READS_A, _READS_B, _WRITES_ROW,
+                  OP_NOP, OP_COPY, OP_NOT, OP_AND, OP_OR, OP_XOR, OP_NOR,
+                  OP_FA, OP_FS, OP_W0, OP_W1, OP_C0, OP_C1, OP_CROW,
+                  OP_CSTORE, OP_TC, OP_TNC, OP_TROW, OP_TNROW, OP_T1,
+                  OP_TAND, OP_TOR, OP_TSTORE, OP_TNOT)
+
+WORD = 32
+
+# carry / tag access classification (predication adds tag reads and, for
+# the carry-latch writes, a read of the old carry)
+_CARRY_READ = {OP_FA, OP_FS, OP_CSTORE, OP_TC, OP_TNC}
+_CARRY_WRITE = {OP_C0, OP_C1, OP_CROW, OP_FA, OP_FS, OP_CSTORE}
+_CARRY_KILL = {OP_C0, OP_C1, OP_CROW}          # unpredicated only
+_TAG_READ = {OP_TAND, OP_TOR, OP_TNOT, OP_TSTORE}
+_TAG_WRITE = {OP_TC, OP_TNC, OP_TROW, OP_TNROW, OP_T1, OP_TAND, OP_TOR,
+              OP_TNOT}
+_TAG_KILL = {OP_T1, OP_TROW, OP_TNROW, OP_TC, OP_TNC}
+
+# Longest FA/FS run folded into one integer add: keeps the per-column
+# integers comfortably inside int32 (sum < 2^25).
+MAX_CHAIN = 24
+# Minimum run length worth the pack/unpack overhead of the integer form.
+MIN_CHAIN = 4
+
+
+def n_words(cols: int) -> int:
+    return (cols + WORD - 1) // WORD
+
+
+def pack_cols(x: jax.Array) -> jax.Array:
+    """Bit-pack the trailing (column) axis of a bool array into uint32."""
+    cols = x.shape[-1]
+    pad = n_words(cols) * WORD - cols
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+    x = x.reshape(x.shape[:-1] + (n_words(cols), WORD))
+    weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(x.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_cols(xw: jax.Array, cols: int) -> jax.Array:
+    """Inverse of :func:`pack_cols`: uint32 words -> (..., cols) bool."""
+    bits = (xw[..., None] >> jnp.arange(WORD, dtype=jnp.uint32)) & 1
+    return bits.reshape(xw.shape[:-1] + (-1,))[..., :cols].astype(jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# References.  The machine below is generic over *where* a row lives:
+#   ("k", row)  -- a concrete array row (flat lowering, shared scratch)
+#   ("l", c)    -- the lane-relative row c + t*stride of lane t
+# Unused operand slots are None so they never pollute the analysis.
+# ---------------------------------------------------------------------------
+def _to_refs(stream: Sequence[Instr], slotfn) -> List[Instr]:
+    out = []
+    for p, ins in enumerate(stream):
+        dst = slotfn(p, "dst") if ins.op in _WRITES_ROW else None
+        a = slotfn(p, "a") if ins.op in _READS_A else None
+        b = slotfn(p, "b") if ins.op in _READS_B else None
+        out.append(Instr(ins.op, dst, a, b, ins.pred))
+    return out
+
+
+def _flat_refs(stream: Sequence[Instr]) -> List[Instr]:
+    return _to_refs(stream,
+                    lambda p, slot: ("k", getattr(stream[p], slot)))
+
+
+def _segment(stream: Sequence[Instr]):
+    """Split a ref-stream into ('op', ins) and ('chain', [ins...]) items.
+
+    A chain is a maximal run of same-opcode, same-predication OP_FA or
+    OP_FS micro-ops in which no cycle reads a row written by an earlier
+    cycle of the run (read-before-write within one cycle is fine: the
+    bit-lines sense operands before write-back).  Such a run is a
+    ripple-carry add/sub over bit-planes and folds into ONE per-column
+    integer op; any run violating the conditions simply splits, so
+    correctness never depends on the matcher being clever.
+    """
+    items = []
+    i, n = 0, len(stream)
+    while i < n:
+        ins = stream[i]
+        if ins.op in (OP_FA, OP_FS):
+            run = [ins]
+            written = {ins.dst}
+            j = i + 1
+            while (j < n and len(run) < MAX_CHAIN
+                   and stream[j].op == ins.op
+                   and stream[j].pred == ins.pred
+                   and stream[j].a not in written
+                   and stream[j].b not in written):
+                run.append(stream[j])
+                written.add(stream[j].dst)
+                j += 1
+            if len(run) >= MIN_CHAIN:
+                items.append(("chain", run))
+            else:
+                items.extend(("op", r) for r in run)
+            i = j
+        elif ins.op == OP_AND and not ins.pred:
+            # partial-product idiom: a run of ANDs against one shared
+            # operand row (the multiplier bit) is the bit-plane product
+            # a_int * bit -- one integer multiply
+            run = [ins]
+            written = {ins.dst}
+            j = i + 1
+            while (j < n and len(run) < MAX_CHAIN
+                   and stream[j].op == OP_AND
+                   and not stream[j].pred
+                   and stream[j].b == ins.b
+                   and stream[j].a not in written
+                   and stream[j].b not in written
+                   and stream[j].dst not in written):
+                run.append(stream[j])
+                written.add(stream[j].dst)
+                j += 1
+            if len(run) >= MIN_CHAIN:
+                items.append(("andrun", run))
+            else:
+                items.extend(("op", r) for r in run)
+            i = j
+        else:
+            items.append(("op", ins))
+            i += 1
+    return items
+
+
+# ---------------------------------------------------------------------------
+# The abstract machine: executes a segmented ref-stream with pluggable
+# row storage.  Values are (cols,) bool or (W,) uint32 vectors, with an
+# optional leading lane axis; &, |, ^, ~ mean the same thing column-wise
+# in every case, which is why one op-semantics body serves all stages.
+# ---------------------------------------------------------------------------
+class _Ctx:
+    def __init__(self, cols: int, packed: bool):
+        self.cols = cols
+        self.packed = packed
+        if packed:
+            self.empty = jnp.zeros((n_words(cols),), jnp.uint32)
+            self.full = jnp.full((n_words(cols),), 0xFFFFFFFF, jnp.uint32)
+        else:
+            self.empty = jnp.zeros((cols,), jnp.bool_)
+            self.full = jnp.ones((cols,), jnp.bool_)
+
+    def to_bits(self, v):
+        """repr value(s) -> (..., cols) int32 of 0/1 bits."""
+        if self.packed:
+            return unpack_cols(v, self.cols).astype(jnp.int32)
+        return v.astype(jnp.int32)
+
+    def from_bools(self, bits):
+        """(..., cols) bool -> repr value(s)."""
+        return pack_cols(bits) if self.packed else bits
+
+
+def _select(mask, x, y):
+    # column-wise mux; 3 ops instead of 4 for (m & x) | (~m & y)
+    return y ^ ((x ^ y) & mask)
+
+
+def _stack(vals):
+    """jnp.stack with broadcasting of base-shaped values to lane shape."""
+    nd = max(v.ndim for v in vals)
+    if any(v.ndim != nd for v in vals):
+        shp = next(v.shape for v in vals if v.ndim == nd)
+        vals = [v if v.ndim == nd else jnp.broadcast_to(v, shp)
+                for v in vals]
+    return jnp.stack(vals)
+
+
+class _Lazy:
+    """A row value defined as bit ``k`` of a per-column integer.
+
+    Ripple chains compute whole integers; each written row is one bit of
+    that integer.  Deferring the bit extraction keeps dependent chains in
+    the integer domain (the next chain reads ``(s >> k) & mask`` instead
+    of restacking bit-planes) and lets XLA skip rows nobody reads.
+    """
+    __slots__ = ("src", "bit", "_mat")
+
+    def __init__(self, src, bit: int):
+        self.src = src            # (..., cols) int32
+        self.bit = bit
+        self._mat = None
+
+    def materialize(self, ctx: "_Ctx"):
+        if self._mat is None:
+            bit = ((self.src >> self.bit) & 1).astype(jnp.bool_)
+            self._mat = ctx.from_bools(bit)
+        return self._mat
+
+
+def _mat(ctx, v):
+    return v.materialize(ctx) if isinstance(v, _Lazy) else v
+
+
+def _mat_many(ctx, vals):
+    """Materialize a batch of values, extracting bits of a shared source
+    integer together (one shift/pack for the whole group)."""
+    groups: Dict[int, list] = {}
+    for v in vals:
+        if isinstance(v, _Lazy) and v._mat is None:
+            groups.setdefault(id(v.src), []).append(v)
+    for lazies in groups.values():
+        if len(lazies) < 2:
+            continue
+        src = lazies[0].src
+        ks = jnp.asarray([v.bit for v in lazies], jnp.int32)
+        ks = ks.reshape((len(lazies),) + (1,) * src.ndim)
+        bits = ((src[None] >> ks) & 1).astype(jnp.bool_)
+        reprs = ctx.from_bools(bits)
+        for j, v in enumerate(lazies):
+            v._mat = reprs[j]
+    return [_mat(ctx, v) for v in vals]
+
+
+class _Machine:
+    """Runs segmented micro-ops against read/write callbacks.
+
+    ``prov`` maps row refs to ``(src_int, bit)`` -- the provenance of a
+    row as one bit of a chain's integer result.  Chains whose operands
+    are consecutive bits of one source skip bit-plane restacking
+    entirely: ``a_int = (src >> k) & mask``.  The dict may be shared
+    across machines (prefix -> serial suffix); ``lane_view`` then maps a
+    lane-shaped (T, cols) source into this machine's frame.
+    """
+
+    def __init__(self, ctx: _Ctx, read, write, carry, tag,
+                 prov=None, lane_view=None, peek=None):
+        self.ctx = ctx
+        self._read_cb = read
+        self._write_cb = write
+        self.carry = carry        # repr array, _Lazy bit, or None (poison)
+        self.tag = tag
+        self.prov = {} if prov is None else prov
+        self.lane_view = lane_view or (lambda v: v)
+        self.peek = peek or (lambda ref: None)
+        self._int_cache: Dict[tuple, jax.Array] = {}
+        self._int_deps: Dict[tuple, set] = {}
+        self._tagb = None
+
+    # -- value access -------------------------------------------------------
+    def read(self, ref):
+        return _mat(self.ctx, self._read_cb(ref))
+
+    def write(self, ref, v):
+        self.prov.pop(ref, None)
+        for key in self._int_deps.pop(ref, ()):
+            self._int_cache.pop(key, None)
+        self._write_cb(ref, v)
+
+    def carry_repr(self):
+        assert self.carry is not None, "read of uninitialized carry latch"
+        return _mat(self.ctx, self.carry)
+
+    def _carry_bits(self):
+        c = self.carry
+        assert c is not None, "read of uninitialized carry latch"
+        if c is self.ctx.empty:
+            return 0
+        if isinstance(c, _Lazy):
+            return (self.lane_view(c.src) >> c.bit) & 1
+        return self.ctx.to_bits(c)
+
+    def _tag_bits(self):
+        if self._tagb is None or self._tagb[0] is not self.tag:
+            self._tagb = (self.tag,
+                          self.ctx.to_bits(_mat(self.ctx, self.tag)))
+        return self._tagb[1]
+
+    # -- integers -----------------------------------------------------------
+    def _int_prov(self, refs, m):
+        """(src >> k) & mask when refs are consecutive bits of one
+        source int, optionally tailed by known-zero rows."""
+        p0 = self.prov.get(refs[0])
+        if p0 is None:
+            return None
+        src0, k0 = p0
+        n = 1
+        for r in refs[1:]:
+            p = self.prov.get(r)
+            if p is not None and p[0] is src0 and p[1] == k0 + n:
+                n += 1
+            else:
+                break
+        for r in refs[n:]:
+            if self.peek(r) is not self.ctx.empty:
+                return None
+        src = self.lane_view(src0)
+        out = (src >> k0) if k0 else src
+        return out & ((1 << n) - 1)
+
+    def _int_of(self, refs, m):
+        key = tuple(refs)
+        v = self._int_cache.get(key)
+        if v is not None:
+            return v
+        v = self._int_prov(refs, m)
+        if v is None:
+            bits = self.ctx.to_bits(_stack(
+                _mat_many(self.ctx, [self._read_cb(r) for r in refs])))
+            w = (jnp.int32(1) << jnp.arange(m, dtype=jnp.int32))
+            w = w.reshape((m,) + (1,) * (bits.ndim - 1))
+            v = jnp.sum(bits * w, axis=0, dtype=jnp.int32)
+        self._int_cache[key] = v
+        for r in refs:
+            self._int_deps.setdefault(r, set()).add(key)
+        return v
+
+    def _chain(self, run):
+        """One FA/FS ripple chain == one per-column integer add/sub,
+        computed and kept in the integer domain (writes become lazy
+        bit extractions; the carry latch becomes a lazy bit)."""
+        m = len(run)
+        a_refs = [c.a for c in run]
+        b_refs = [c.b for c in run]
+        a_int = self._int_of(a_refs, m)
+        b_int = self._int_of(b_refs, m)
+        c_in = self._carry_bits()
+        is_fa = run[0].op == OP_FA
+        if is_fa:
+            s = a_int + b_int + c_in
+            c_out = None                # bit m of s (kept implicit)
+        else:                           # OP_FS: d = a - b - borrow
+            s = a_int - b_int - c_in
+            c_out = (s < 0).astype(jnp.int32)
+        if run[0].pred:
+            # integer-domain mux: tag=0 columns keep old rows and carry
+            tb = self._tag_bits()
+            dst_refs = [c.dst for c in run]
+            old = (a_int if dst_refs == a_refs
+                   else self._int_of(dst_refs, m))
+            zero_cin = isinstance(c_in, int) and c_in == 0
+            if is_fa and not zero_cin:
+                c_out = (s >> m) & 1
+            s = old + (s - old) * tb
+            if is_fa and zero_cin:
+                # _int_of masks old to m bits, so bit m of the muxed sum
+                # is tag & carry-out == select(tag, carry_out, c_in=0)
+                c_out = None
+            elif c_out is not None:
+                c_out = c_in + (c_out - c_in) * tb
+        # arithmetic >> keeps the low bits of s mod 2^m correct even for
+        # a negative FS difference (two's complement)
+        for i, c in enumerate(run):
+            self.write(c.dst, _Lazy(s, i))
+            self.prov[c.dst] = (s, i)
+        # FA carry-out is bit m of the same sum: keeping that provenance
+        # lets the next chain read [rows..., CSTORE row] as one integer
+        self.carry = _Lazy(s, m) if c_out is None else _Lazy(c_out, 0)
+
+    def _and_run(self, run):
+        """Partial-product AND run == integer multiply by the shared bit."""
+        m = len(run)
+        a_int = self._int_of([c.a for c in run], m)
+        b_bit = self.ctx.to_bits(self.read(run[0].b))
+        s = a_int * b_bit
+        for i, c in enumerate(run):
+            self.write(c.dst, _Lazy(s, i))
+            self.prov[c.dst] = (s, i)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, items):
+        ctx = self.ctx
+        empty, full = ctx.empty, ctx.full
+        for kind, ins in items:
+            if kind == "chain":
+                self._chain(ins)
+                continue
+            if kind == "andrun":
+                self._and_run(ins)
+                continue
+            op = ins.op
+            if op == OP_NOP:
+                continue
+            # carry / tag latch ops ----------------------------------------
+            if op == OP_C0:
+                self.carry = (_select(self.tag, empty, self.carry_repr())
+                              if ins.pred else empty)
+            elif op == OP_C1:
+                self.carry = (_select(self.tag, full, self.carry_repr())
+                              if ins.pred else full)
+            elif op == OP_CROW:
+                ra = self.read(ins.a)
+                self.carry = (_select(self.tag, ra, self.carry_repr())
+                              if ins.pred else ra)
+            elif op == OP_TC:
+                self.tag = self.carry_repr()
+            elif op == OP_TNC:
+                self.tag = ~self.carry_repr()
+            elif op == OP_TROW:
+                self.tag = self.read(ins.a)
+            elif op == OP_TNROW:
+                self.tag = ~self.read(ins.a)
+            elif op == OP_T1:
+                self.tag = full
+            elif op == OP_TAND:
+                self.tag = self.tag & self.read(ins.a)
+            elif op == OP_TOR:
+                self.tag = self.tag | self.read(ins.a)
+            elif op == OP_TNOT:
+                self.tag = ~self.tag
+            # row-writing ops ----------------------------------------------
+            else:
+                new_carry = self.carry
+                if op == OP_COPY:
+                    val = self.read(ins.a)
+                elif op == OP_NOT:
+                    val = ~self.read(ins.a)
+                elif op == OP_AND:
+                    val = self.read(ins.a) & self.read(ins.b)
+                elif op == OP_OR:
+                    val = self.read(ins.a) | self.read(ins.b)
+                elif op == OP_XOR:
+                    val = self.read(ins.a) ^ self.read(ins.b)
+                elif op == OP_NOR:
+                    val = ~(self.read(ins.a) | self.read(ins.b))
+                elif op == OP_FA:
+                    ra, rb = self.read(ins.a), self.read(ins.b)
+                    carry = self.carry_repr()
+                    axb = ra ^ rb
+                    val = axb ^ carry
+                    new_carry = (ra & rb) | (carry & axb)
+                elif op == OP_FS:
+                    ra, rb = self.read(ins.a), self.read(ins.b)
+                    carry = self.carry_repr()
+                    axb = ra ^ rb
+                    val = axb ^ carry
+                    new_carry = (~ra & rb) | (carry & ~axb)
+                elif op == OP_W0:
+                    val = empty
+                elif op == OP_W1:
+                    val = full
+                elif op == OP_CSTORE:
+                    val = self.carry   # may stay lazy on the unpred path
+                    new_carry = empty
+                elif op == OP_TSTORE:
+                    val = self.tag
+                else:
+                    raise ValueError(f"unknown opcode {op}")
+                if ins.pred:
+                    val = _select(self.tag, _mat(ctx, val),
+                                  self.read(ins.dst))
+                    if new_carry is not self.carry:   # op touched carry
+                        new_carry = _select(self.tag, _mat(ctx, new_carry),
+                                            self.carry_repr())
+                keep_prov = (op == OP_CSTORE and not ins.pred
+                             and isinstance(val, _Lazy))
+                self.write(ins.dst, val)
+                if keep_prov:     # CSTORE forwards the carry bit's source
+                    self.prov[ins.dst] = (val.src, val.bit)
+                self.carry = new_carry
+
+
+# ---------------------------------------------------------------------------
+# Lane analysis
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LanePlan:
+    lanes: int                  # T
+    stride: int                 # row offset between consecutive lanes
+    serial_start: int           # body position where the serial suffix begins
+    pre: List[Instr]            # flat streams around the lane loop
+    post: List[Instr]
+    body: List[Instr]           # ref-stream of one iteration (lane 0 rows)
+    const_kind: Dict[int, str]  # const row -> "kill" | "ro" | "red"
+    carry_in_prefix: bool       # prefix writes the carry latch
+    tag_in_prefix: bool
+    carry_in_body: bool
+    tag_in_body: bool
+
+
+def _used_slots(ins: Instr):
+    reads, writes = [], []
+    if ins.op in _READS_A:
+        reads.append("a")
+    if ins.op in _READS_B:
+        reads.append("b")
+    if ins.op in _WRITES_ROW:
+        writes.append("dst")
+        if ins.pred:
+            reads.append("dst")   # predicated writes read back dst
+    return reads, writes
+
+
+def analyze(program: isa.Program) -> Optional[LanePlan]:
+    """Try to build a lane-vectorization plan; None means fall back."""
+    grouped = program.expand_grouped()
+    if grouped is None:
+        return None
+    pre, iters, post = grouped
+    T = len(iters)
+    L = len(iters[0])
+    if T < 2 or L == 0:
+        return None
+    sig = [(i.op, i.pred) for i in iters[0]]
+    if any([(i.op, i.pred) for i in it] != sig for it in iters[1:]):
+        return None
+
+    # per-position operand rows across lanes -> const or affine refs
+    stride = None
+    refs: List[Dict[str, tuple]] = []
+    for p in range(L):
+        slots = {}
+        reads, writes = _used_slots(iters[0][p])
+        for slot in set(reads + writes):
+            rows = [getattr(iters[t][p], slot) for t in range(T)]
+            d = rows[1] - rows[0]
+            if any(rows[t] != rows[0] + t * d for t in range(T)):
+                return None
+            if d == 0:
+                slots[slot] = ("k", rows[0])
+            else:
+                if stride is None:
+                    stride = d
+                elif d != stride:
+                    return None
+                slots[slot] = ("l", rows[0])
+        refs.append(slots)
+    if stride is None:
+        return None               # nothing varies; vectorizing buys nothing
+
+    # lanes must occupy disjoint row windows
+    residues = [ref[1] for slots in refs for ref in slots.values()
+                if ref[0] == "l"]
+    if not residues or max(residues) - min(residues) >= abs(stride):
+        return None
+    affine_rows = {c + t * stride for c in residues for t in range(T)}
+    const_rows = {ref[1] for slots in refs for ref in slots.values()
+                  if ref[0] == "k"}
+    if affine_rows & const_rows:
+        return None
+
+    # classify const rows by their first access within an iteration
+    const_written = set()
+    for p in range(L):
+        _, writes = _used_slots(iters[0][p])
+        for slot in writes:
+            if refs[p].get(slot, (None,))[0] == "k":
+                const_written.add(refs[p][slot][1])
+    const_kind: Dict[int, str] = {}
+    for p in range(L):
+        ins = iters[0][p]
+        reads, writes = _used_slots(ins)
+        for slot in reads:
+            r = refs[p].get(slot)
+            if r and r[0] == "k" and r[1] not in const_kind:
+                const_kind[r[1]] = ("ro" if r[1] not in const_written
+                                    else "red")
+        for slot in writes:
+            r = refs[p].get(slot)
+            if r and r[0] == "k" and r[1] not in const_kind:
+                const_kind[r[1]] = "kill" if not ins.pred else "red"
+
+    # find where the serial suffix must begin: the first position that
+    # touches a reduction row, or reads a carry/tag value inherited from
+    # the previous iteration
+    carry_in_body = any(i.op in _CARRY_WRITE for i in iters[0])
+    tag_in_body = any(i.op in _TAG_WRITE for i in iters[0])
+    carry_ok = not carry_in_body
+    tag_ok = not tag_in_body
+    serial_start = L
+    for p, ins in enumerate(iters[0]):
+        reads_carry = (ins.op in _CARRY_READ
+                       or (ins.pred and ins.op in (OP_C0, OP_C1, OP_CROW)))
+        reads_tag = ins.pred or ins.op in _TAG_READ
+        touches_red = any(
+            ref[0] == "k" and const_kind.get(ref[1]) == "red"
+            for ref in refs[p].values())
+        if ((reads_carry and not carry_ok) or (reads_tag and not tag_ok)
+                or touches_red):
+            serial_start = p
+            break
+        if not ins.pred and ins.op in _CARRY_KILL:
+            carry_ok = True
+        if ins.op in _TAG_KILL:
+            tag_ok = True         # TC/TNC read carry: checked above
+    if serial_start == 0:
+        return None
+
+    body = _to_refs(iters[0], lambda p, s: refs[p][s])
+    prefix_ins = iters[0][:serial_start]
+    return LanePlan(
+        lanes=T, stride=stride, serial_start=serial_start,
+        pre=pre, post=post, body=body, const_kind=const_kind,
+        carry_in_prefix=any(i.op in _CARRY_WRITE for i in prefix_ins),
+        tag_in_prefix=any(i.op in _TAG_WRITE for i in prefix_ins),
+        carry_in_body=carry_in_body, tag_in_body=tag_in_body)
+
+
+# ---------------------------------------------------------------------------
+# Lowerings
+# ---------------------------------------------------------------------------
+def _row(arr, r: int):
+    """Static single-row read (slice+squeeze: no bounds clamping)."""
+    return jax.lax.squeeze(jax.lax.slice_in_dim(arr, r, r + 1, axis=0), (0,))
+
+
+def _rows(arr, idx: np.ndarray):
+    """Gather of statically-known in-bounds row indices."""
+    return arr.at[idx].get(mode="promise_in_bounds", unique_indices=True)
+
+
+def _lane_last(v):
+    """Final (lane T-1) view of a possibly lane-shaped value."""
+    if isinstance(v, _Lazy):
+        return _Lazy(v.src[-1], v.bit) if v.src.ndim == 2 else v
+    return v if v.ndim == 1 else v[-1]
+
+
+def _lane_at(v, t):
+    if isinstance(v, _Lazy):
+        return _Lazy(v.src[t], v.bit) if v.src.ndim == 2 else v
+    return v if v.ndim == 1 else v[t]
+
+
+def _scatter(ctx, arr, updates: Dict[int, jax.Array]):
+    """One batched row update from a {row: value} dict."""
+    if not updates:
+        return arr
+    rows = sorted(updates)
+    idx = np.asarray(rows, np.int32)
+    vals = jnp.stack(_mat_many(ctx, [updates[r] for r in rows]))
+    return arr.at[idx].set(vals, mode="promise_in_bounds",
+                           unique_indices=True)
+
+
+def _run_flat(ctx, items, arr, store, carry, tag):
+    """Run a flat ('k'-ref) segmented stream over a row store."""
+    def read(ref):
+        v = store.get(ref[1])
+        if v is None:
+            v = store[ref[1]] = _row(arr, ref[1])
+        return v
+
+    written = {}
+
+    def write(ref, v):
+        store[ref[1]] = written[ref[1]] = v
+
+    m = _Machine(ctx, read, write, carry, tag,
+                 peek=lambda ref: store.get(ref[1]))
+    m.run(items)
+    return written, m.carry, m.tag
+
+
+def _lower_flat(program: isa.Program, rows: int, cols: int, packed: bool):
+    items = _segment(_flat_refs(program.expand()))
+
+    def fn(state):
+        ctx = _Ctx(cols, packed)
+        if packed:
+            arr = pack_cols(state.array)
+            carry, tag = pack_cols(state.carry), pack_cols(state.tag)
+        else:
+            arr, carry, tag = state.array, state.carry, state.tag
+        written, carry, tag = _run_flat(ctx, items, arr, {}, carry, tag)
+        arr = _scatter(ctx, arr, written)
+        if packed:
+            return type(state)(unpack_cols(arr, cols),
+                               unpack_cols(_mat(ctx, carry), cols),
+                               unpack_cols(_mat(ctx, tag), cols))
+        return type(state)(arr, _mat(ctx, carry), _mat(ctx, tag))
+
+    return fn
+
+
+def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
+                 plan: LanePlan):
+    T, s = plan.lanes, plan.stride
+    pre_items = _segment(_flat_refs(plan.pre))
+    post_items = _segment(_flat_refs(plan.post))
+    prefix = plan.body[:plan.serial_start]
+    suffix = plan.body[plan.serial_start:]
+    prefix_items = _segment(prefix)
+    suffix_items = _segment(suffix)
+    suffix_affine_writes = {ins.dst[1] for ins in suffix
+                            if ins.op in _WRITES_ROW and ins.dst[0] == "l"}
+
+    # affine rows whose first body access is a read come straight from
+    # the array: fetch them all in ONE gather instead of one per residue
+    written_refs, prefetch = set(), []
+    for ins in plan.body:
+        reads, writes = _used_slots(ins)
+        for slot in reads:
+            ref = getattr(ins, slot)
+            if (ref is not None and ref[0] == "l"
+                    and ref not in written_refs
+                    and ref[1] not in prefetch):
+                prefetch.append(ref[1])
+        if writes:
+            written_refs.add(ins.dst)
+    prefetch = sorted(prefetch)
+
+    def fn(state):
+        ctx = _Ctx(cols, packed)
+        if packed:
+            arr = pack_cols(state.array)
+            carry, tag = pack_cols(state.carry), pack_cols(state.tag)
+        else:
+            arr, carry, tag = state.array, state.carry, state.tag
+
+        # ---- prelude (flat) ----------------------------------------------
+        pre_store: Dict[int, jax.Array] = {}
+        pre_written, carry, tag = _run_flat(ctx, pre_items, arr, pre_store,
+                                            carry, tag)
+        arr = _scatter(ctx, arr, pre_written)
+
+        # ---- vectorized prefix: all lanes at once ------------------------
+        lane_store: Dict[tuple, jax.Array] = {}
+        lane_written: Dict[tuple, bool] = {}
+        if prefetch:
+            idx = np.asarray([[c + t * s for t in range(T)]
+                              for c in prefetch], np.int32)
+            block = _rows(arr, idx)            # (n_prefetch, T, cols|W)
+            for i, c in enumerate(prefetch):
+                lane_store[("l", c)] = block[i]
+
+        def lane_read(ref):
+            v = lane_store.get(ref)
+            if v is None:
+                if ref[0] == "k":
+                    v = pre_store.get(ref[1])
+                    if v is None:
+                        v = _row(arr, ref[1])
+                else:
+                    idx = np.asarray(
+                        [ref[1] + t * s for t in range(T)], np.int32)
+                    v = _rows(arr, idx)
+                lane_store[ref] = v
+            return v
+
+        def lane_write(ref, v):
+            lane_store[ref] = v
+            lane_written[ref] = True
+
+        def lane_peek(ref):
+            v = lane_store.get(ref)
+            if v is None and ref[0] == "k":
+                v = pre_store.get(ref[1])
+            return v
+
+        # a poisoned latch would mean the analysis mis-ordered a kill;
+        # reading it raises at trace time rather than miscomputing
+        pm = _Machine(ctx, lane_read, lane_write,
+                      None if plan.carry_in_prefix else carry,
+                      None if plan.tag_in_prefix else tag,
+                      peek=lane_peek)
+        pm.run(prefix_items)
+
+        # ---- serial suffix, one lane at a time ---------------------------
+        suffix_store: Dict[int, jax.Array] = {}
+        suffix_lane_vals: Dict[int, list] = {c: [] for c
+                                             in suffix_affine_writes}
+        if suffix:
+            # chain operands produced by the prefix (e.g. idot's product
+            # rows) are integer-summarized ONCE across all lanes here,
+            # instead of once per lane inside the serial loop
+            suffix_written = {ins.dst for ins in suffix
+                              if ins.op in _WRITES_ROW}
+            shared_ints: Dict[tuple, jax.Array] = {}
+            for kind, run in suffix_items:
+                if kind not in ("chain", "andrun"):
+                    continue
+                ref_lists = [[c.a for c in run]]
+                if kind == "chain":
+                    ref_lists.append([c.b for c in run])
+                for refs in ref_lists:
+                    key = tuple(refs)
+                    if key in shared_ints or (set(refs) & suffix_written):
+                        continue
+                    shared_ints[key] = pm._int_of(refs, len(run))
+            ser_carry = carry if not plan.carry_in_prefix else None
+            ser_tag = tag if not plan.tag_in_prefix else None
+            kill_scoped: Dict[int, jax.Array] = {}
+            for t in range(T):
+                # "kill" rows are lane-private scratch: every lane
+                # overwrites them before reading, so suffix writes to
+                # them must not leak into the next lane (which still
+                # sees its own prefix value)
+                kill_scoped = {}
+
+                def ser_read(ref, t=t, ks=kill_scoped):
+                    if ref[0] == "k":
+                        r = ref[1]
+                        if plan.const_kind.get(r) == "kill":
+                            v = ks.get(r)
+                            if v is None:
+                                v = lane_store.get(ref)
+                                return (_row(arr, r) if v is None
+                                        else _lane_at(v, t))
+                            return v
+                        v = suffix_store.get(r)
+                        if v is not None:
+                            return v
+                        v = lane_store.get(ref)
+                        if v is not None:
+                            return _lane_at(v, t)
+                        v = pre_store.get(r)
+                        return _row(arr, r) if v is None else v
+                    lst = suffix_lane_vals.get(ref[1])
+                    if lst is not None and len(lst) > t:
+                        return lst[t]
+                    v = lane_store.get(ref)
+                    if v is not None:
+                        return _lane_at(v, t)
+                    return _row(arr, ref[1] + t * s)
+
+                def ser_peek(ref, t=t, ks=kill_scoped):
+                    if ref[0] == "k":
+                        r = ref[1]
+                        for d in (ks, suffix_store, pre_store):
+                            if r in d:
+                                return d[r]
+                        return None
+                    lst = suffix_lane_vals.get(ref[1])
+                    if lst is not None and len(lst) > t:
+                        return lst[t]
+                    return None
+
+                def ser_write(ref, v, t=t, ks=kill_scoped):
+                    if ref[0] == "k":
+                        if plan.const_kind.get(ref[1]) == "kill":
+                            ks[ref[1]] = v
+                        else:
+                            suffix_store[ref[1]] = v
+                    else:
+                        lst = suffix_lane_vals[ref[1]]
+                        if len(lst) == t:      # first write this lane
+                            lst.append(v)
+                        else:                  # rewrite: last value wins
+                            lst[t] = v
+
+                sm = _Machine(
+                    ctx, ser_read, ser_write,
+                    _lane_at(pm.carry, t) if plan.carry_in_prefix
+                    else ser_carry,
+                    _lane_at(pm.tag, t) if plan.tag_in_prefix else ser_tag,
+                    prov=pm.prov, peek=ser_peek,
+                    lane_view=lambda v, t=t: v[t] if v.ndim == 2 else v)
+                for key, v in shared_ints.items():
+                    sm._int_cache[key] = v[t] if v.ndim == 2 else v
+                sm.run(suffix_items)
+                ser_carry, ser_tag = sm.carry, sm.tag
+            carry, tag = ser_carry, ser_tag
+            # final values of lane-private rows rewritten by the last
+            # lane's suffix override its prefix values
+            suffix_store.update(kill_scoped)
+        else:
+            if plan.carry_in_body:
+                carry = _lane_last(pm.carry)
+            if plan.tag_in_body:
+                tag = _lane_last(pm.tag)
+
+        # ---- materialize final rows --------------------------------------
+        const_updates: Dict[int, jax.Array] = {}
+        for ref in lane_written:
+            if ref[0] == "k":
+                const_updates[ref[1]] = _lane_last(lane_store[ref])
+        const_updates.update(suffix_store)
+        arr = _scatter(ctx, arr, const_updates)
+
+        # all affine row groups land in one batched scatter
+        aff_idx, aff_vals = [], []
+        for ref in lane_written:            # prefix affine writes
+            if ref[0] == "l" and ref[1] not in suffix_affine_writes:
+                aff_idx.append(np.asarray(
+                    [ref[1] + t * s for t in range(T)], np.int32))
+                v = _mat(ctx, lane_store[ref])
+                if v.ndim == 1:
+                    v = jnp.broadcast_to(v, (T,) + v.shape)
+                aff_vals.append(v)
+        for c, lst in suffix_lane_vals.items():
+            aff_idx.append(np.asarray(
+                [c + t * s for t in range(T)], np.int32))
+            aff_vals.append(_stack(_mat_many(ctx, lst)))
+        if aff_idx:
+            arr = arr.at[np.concatenate(aff_idx)].set(
+                jnp.concatenate(aff_vals), mode="promise_in_bounds",
+                unique_indices=True)
+
+        # ---- postlude (flat) ---------------------------------------------
+        if post_items:
+            post_written, carry, tag = _run_flat(ctx, post_items, arr, {},
+                                                 carry, tag)
+            arr = _scatter(ctx, arr, post_written)
+
+        carry, tag = _mat(ctx, carry), _mat(ctx, tag)
+        if packed:
+            return type(state)(unpack_cols(arr, cols),
+                               unpack_cols(carry, cols),
+                               unpack_cols(tag, cols))
+        return type(state)(arr, carry, tag)
+
+    return fn
+
+
+def lower(program: isa.Program, rows: int, cols: int, packed: bool):
+    """Lower ``program`` to a pure fn(CRState) -> CRState (un-jitted).
+
+    Prefix-affine reads (``lane_read``) only appear when the lane plan
+    validates; otherwise the whole stream goes through `_lower_flat`.
+    """
+    meta = program.meta()
+    if meta.max_row >= rows:
+        raise ValueError(
+            f"program {program.name!r} touches row {meta.max_row} but the "
+            f"geometry has only {rows} rows")
+    plan = analyze(program)
+    if plan is not None:
+        return _lower_lanes(program, rows, cols, packed, plan)
+    return _lower_flat(program, rows, cols, packed)

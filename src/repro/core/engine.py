@@ -5,17 +5,23 @@ plus per-column ``carry`` and ``tag`` latches (the logic peripherals of
 paper §III-A4).  Every micro-op operates on *all columns simultaneously* --
 the bit-line-computing parallelism axis.
 
-Two executors are provided:
+Three executors are provided (``run(..., executor=...)`` dispatches):
 
-* :func:`execute` -- unrolls the micro-op stream at trace time.  Fastest
-  for short programs under ``jit``.
-* :func:`execute_scan` -- the faithful "controller": the program is
-  assembled into opcode/operand arrays and executed with ``jax.lax.scan``
-  + ``jax.lax.switch`` (compact HLO, cycle-per-step), mirroring the
-  fetch/decode/execute pipeline of the in-block controller.
+* :func:`execute` (``"unroll"``) -- unrolls the micro-op stream eagerly,
+  one host op per cycle.  The simplest oracle.
+* :func:`execute_scan` (``"scan"``) -- the faithful "controller": the
+  program is assembled into opcode/operand arrays and executed with
+  ``jax.lax.scan`` + ``jax.lax.switch`` (compact HLO, cycle-per-step),
+  mirroring the fetch/decode/execute pipeline of the in-block controller.
+* :func:`execute_compiled` (``"compiled"``) -- lowers the expanded
+  stream into a statically-specialized fused jnp function (constant
+  opcodes, batched row writes, optional uint32 bit-packing of the column
+  axis) and jits it once per (program, geometry).  Bit-exact with the
+  other two; orders of magnitude faster to replay.  See ``docs/engine.md``.
 
 ``jax.vmap`` over a leading block axis models many Compute RAM blocks
-operating in parallel (an FPGA has hundreds of BRAM sites).
+operating in parallel (an FPGA has hundreds of BRAM sites); see
+:func:`execute_blocks`.
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import isa
+from . import compiler, isa
 
 
 class CRState(NamedTuple):
@@ -64,7 +70,7 @@ def _apply(state: CRState, op: int, dst, a, b, pred: bool) -> CRState:
         new_c = jnp.ones_like(carry)
         return state._replace(carry=jnp.where(tag, new_c, carry) if pred else new_c)
     if op == O.OP_CROW:
-        return state._replace(carry=ra)
+        return state._replace(carry=jnp.where(tag, ra, carry) if pred else ra)
     if op == O.OP_TC:
         return state._replace(tag=carry)
     if op == O.OP_TNC:
@@ -212,7 +218,111 @@ def execute_scan(program: isa.Program, state: CRState) -> CRState:
     return final
 
 
-# vmap-able multi-block execution ------------------------------------------
-def execute_blocks(program: isa.Program, states: CRState) -> CRState:
-    """Run the same program on many blocks: states have a leading block dim."""
-    return jax.vmap(lambda s: execute_scan(program, s))(states)
+# ---------------------------------------------------------------------------
+# Executor 3: compiled fast path
+#
+# The expanded micro-op stream has *constant* opcodes and row operands,
+# so instead of a cycle-per-step interpreter (scan + 24-way switch) the
+# whole program lowers to one statically-specialized fused jnp function;
+# see :mod:`repro.core.compiler` for the two lowering strategies (lane
+# vectorization over the tuple loop, flat specialization) and the
+# ripple-chain -> integer-add folding shared by both.  With
+# ``packed=True`` the bool column axis is bit-packed into uint32 words
+# (:func:`repro.core.compiler.pack_cols`) so one host op covers 32
+# columns.
+# ---------------------------------------------------------------------------
+pack_cols = compiler.pack_cols
+unpack_cols = compiler.unpack_cols
+
+
+# Module-level compiled-program cache: repeated replays (the dominant
+# test cost) compile once per (program content, geometry, representation).
+_COMPILE_CACHE: dict = {}
+
+
+def compile_program(program: isa.Program, rows: int = 512, cols: int = 40,
+                    *, packed: bool = False):
+    """Compile ``program`` for a fixed geometry into a jitted fn.
+
+    Returns ``fn(CRState) -> CRState``.  Results are cached module-wide;
+    the key includes :meth:`Program.fingerprint` so same-named programs
+    with different nodes never collide.
+    """
+    key = (program.name, rows, cols, bool(packed), program.fingerprint())
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(compiler.lower(program, rows, cols, packed))
+        _COMPILE_CACHE[key] = fn
+    return fn
+
+
+def clear_compile_cache() -> None:
+    """Drop all cached compiled programs (tests / memory pressure)."""
+    _COMPILE_CACHE.clear()
+
+
+def execute_compiled(program: isa.Program, state: CRState,
+                     *, packed: bool = False) -> CRState:
+    """Run ``program`` through the statically-specialized compiled path."""
+    rows, cols = state.array.shape
+    return compile_program(program, rows, cols, packed=packed)(state)
+
+
+# ---------------------------------------------------------------------------
+# Executor dispatch
+# ---------------------------------------------------------------------------
+EXECUTORS = ("unroll", "scan", "compiled")
+
+
+def run(program: isa.Program, state: CRState, executor: str = "compiled",
+        *, packed: bool = False) -> CRState:
+    """Run ``program`` with the chosen executor (see module docstring)."""
+    if executor == "unroll":
+        return execute(program, state)
+    if executor == "scan":
+        return execute_scan(program, state)
+    if executor == "compiled":
+        return execute_compiled(program, state, packed=packed)
+    raise ValueError(
+        f"unknown executor {executor!r}; expected one of {EXECUTORS}")
+
+
+# multi-block execution -----------------------------------------------------
+def execute_blocks(program: isa.Program, states: CRState,
+                   executor: str = "compiled",
+                   *, packed: bool = False) -> CRState:
+    """Run the same program on many blocks: states have a leading block dim.
+
+    The compiled path exploits that every micro-op is column-parallel:
+    B blocks of C columns are exactly one block of B*C columns, so the
+    fabric is simulated by reshaping into a single wide block (no vmap,
+    no per-block overhead).  The scan/unroll paths vmap per block.
+    """
+    if executor == "compiled":
+        blocks, rows, cols = states.array.shape
+        key = ("blocks", program.name, blocks, rows, cols, bool(packed),
+               program.fingerprint())
+        fn = _COMPILE_CACHE.get(key)
+        if fn is None:
+            inner = compiler.lower(program, rows, blocks * cols, packed)
+
+            def wide_fn(st: CRState, blocks=blocks, rows=rows, cols=cols):
+                wide = CRState(
+                    array=jnp.moveaxis(st.array, 0, 1).reshape(
+                        rows, blocks * cols),
+                    carry=st.carry.reshape(blocks * cols),
+                    tag=st.tag.reshape(blocks * cols))
+                out = inner(wide)
+                return CRState(
+                    array=jnp.moveaxis(
+                        out.array.reshape(rows, blocks, cols), 1, 0),
+                    carry=out.carry.reshape(blocks, cols),
+                    tag=out.tag.reshape(blocks, cols))
+
+            fn = _COMPILE_CACHE[key] = jax.jit(wide_fn)
+        return fn(states)
+    if executor not in ("unroll", "scan"):
+        raise ValueError(
+            f"unknown executor {executor!r}; expected one of {EXECUTORS}")
+    inner = execute if executor == "unroll" else execute_scan
+    return jax.vmap(lambda s: inner(program, s))(states)

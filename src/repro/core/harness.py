@@ -3,6 +3,10 @@
 In a real deployment the FPGA-side state machine writes operands into the
 block in storage mode (paper §III-B); here, numpy plays that role.  Data
 is laid out transposed per :class:`repro.core.programs.TupleLayout`.
+
+:func:`run_program` is the one-call harness used by tests and examples:
+pack operands, execute with a chosen executor (``unroll`` / ``scan`` /
+``compiled``), and return the final main-array image.
 """
 
 from __future__ import annotations
@@ -49,3 +53,28 @@ def unpack_acc(arr: np.ndarray, layout: TupleLayout) -> np.ndarray:
     for i in range(layout.acc_bits):
         out |= arr[i, :].astype(np.uint64) << np.uint64(i)
     return out
+
+
+def make_jax_state(arr: np.ndarray):
+    """Wrap a packed main-array image into a fresh CRState."""
+    import jax.numpy as jnp
+
+    from . import engine
+
+    cols = arr.shape[1]
+    return engine.CRState(jnp.asarray(arr), jnp.zeros((cols,), bool),
+                          jnp.ones((cols,), bool))
+
+
+def run_program(program, layout: TupleLayout, data: dict, cols: int,
+                executor: str = "compiled") -> np.ndarray:
+    """Pack ``data``, run ``program`` with ``executor``, return the array.
+
+    The default ``compiled`` executor caches its jitted program per
+    (program, geometry), so repeated calls -- the dominant test cost --
+    replay in fractions of a millisecond.
+    """
+    from . import engine
+
+    state = make_jax_state(pack_state(layout, data, cols))
+    return np.asarray(engine.run(program, state, executor=executor).array)

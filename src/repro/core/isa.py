@@ -30,6 +30,7 @@ references; registers are maintained by the expansion (the controller).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import List, Sequence, Union
 
 # ---------------------------------------------------------------------------
@@ -159,6 +160,44 @@ class Loop:
 Node = Union[Instr, SetReg, AddReg, MovReg, Loop]
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamMeta:
+    """Static metadata of an expanded micro-op stream.
+
+    This is what the compiled executor (``engine.compile_program``)
+    consumes: it bounds the rows a program touches (so geometry
+    mismatches fail loudly at compile time instead of silently indexing
+    out of range) and summarizes the op mix for diagnostics.
+    """
+    n_cycles: int                 # array micro-ops executed
+    rows_read: frozenset          # absolute rows read as operands
+    rows_written: frozenset       # absolute rows written
+    max_row: int                  # highest row touched (-1: none)
+    uses_pred: bool               # any tag-predicated micro-op?
+    op_histogram: tuple           # ((opcode, count), ...) sorted by opcode
+
+
+def stream_meta(stream: Sequence["Instr"]) -> StreamMeta:
+    """Compute :class:`StreamMeta` for an expanded micro-op stream."""
+    reads, writes = set(), set()
+    hist: dict = {}
+    uses_pred = False
+    for ins in stream:
+        hist[ins.op] = hist.get(ins.op, 0) + 1
+        uses_pred = uses_pred or ins.pred
+        if ins.op in _READS_A:
+            reads.add(ins.a)
+        if ins.op in _READS_B:
+            reads.add(ins.b)
+        if ins.op in _WRITES_ROW:
+            writes.add(ins.dst)
+            if ins.pred:          # predicated writes read back dst
+                reads.add(ins.dst)
+    max_row = max(reads | writes, default=-1)
+    return StreamMeta(len(stream), frozenset(reads), frozenset(writes),
+                      max_row, uses_pred, tuple(sorted(hist.items())))
+
+
 @dataclasses.dataclass
 class Program:
     """A Compute RAM program (contents of the instruction memory)."""
@@ -188,11 +227,64 @@ class Program:
 
         The returned list length == cycle count of the array portion;
         controller ALU ops (SetReg/AddReg) each cost 1 cycle and are
-        accounted in ``cycles()``.
+        accounted in ``cycles()``.  Memoized: like ``fingerprint()``,
+        a Program is frozen once executed -- don't mutate ``nodes``.
         """
+        cached = self.__dict__.get("_expanded")
+        if cached is None:
+            regs = [0] * NUM_REGS
+            ctrl = [0]
+            cached = self._expand_with(regs, ctrl)
+            self._ctrl_cycles = ctrl[0]
+            self.__dict__["_expanded"] = cached
+        return cached
+
+    def cycles(self) -> int:
+        """Total cycles = array micro-ops + controller ALU ops executed."""
+        stream = self.expand()
+        return len(stream) + self._ctrl_cycles
+
+    def meta(self) -> StreamMeta:
+        """Metadata of the expanded stream (compiled-executor input)."""
+        return stream_meta(self.expand())
+
+    def expand_grouped(self):
+        """Expand, split at the dominant top-level hardware loop.
+
+        Returns ``(pre, iters, post)`` where ``iters`` is one micro-op
+        stream per iteration of the top-level :class:`Loop` contributing
+        the most cycles, and ``pre``/``post`` are the surrounding
+        streams; or ``None`` when there is no top-level loop with at
+        least 2 iterations.  ``pre + sum(iters) + post`` is always
+        identical to :meth:`expand` -- the grouping only adds boundaries,
+        so compilers can fall back to the flat stream at any point.
+        """
+        best, best_cycles = None, 0
+        for idx, nd in enumerate(self.nodes):
+            if isinstance(nd, Loop) and nd.count >= 2:
+                body_cycles = Program("_", nd.body).cycles()
+                if nd.count * body_cycles > best_cycles:
+                    best, best_cycles = idx, nd.count * body_cycles
+        if best is None:
+            return None
+        loop = self.nodes[best]
         regs = [0] * NUM_REGS
+        ctrl = [0]
+
+        def expand_nodes(nodes):
+            sub = Program("_", list(nodes))
+            stream = sub._expand_with(regs, ctrl)
+            return stream
+
+        pre = expand_nodes(self.nodes[:best])
+        iters = [expand_nodes(loop.body) for _ in range(loop.count)]
+        post = expand_nodes(self.nodes[best + 1:])
+        return pre, iters, post
+
+    def _expand_with(self, regs, ctrl):
+        """Like :meth:`expand` but threading caller-owned register state
+        (``regs``) and a 1-element controller-cycle accumulator."""
         stream: List[Instr] = []
-        self._ctrl_cycles = 0
 
         def resolve(ref: RowRef) -> int:
             if isinstance(ref, R):
@@ -206,13 +298,13 @@ class Program:
                         run(nd.body)
                 elif isinstance(nd, SetReg):
                     regs[nd.reg] = nd.value
-                    self._ctrl_cycles += 1
+                    ctrl[0] += 1
                 elif isinstance(nd, AddReg):
                     regs[nd.reg] += nd.delta
-                    self._ctrl_cycles += 1
+                    ctrl[0] += 1
                 elif isinstance(nd, MovReg):
                     regs[nd.dst] = regs[nd.src] + nd.offset
-                    self._ctrl_cycles += 1
+                    ctrl[0] += 1
                 else:
                     stream.append(Instr(nd.op, resolve(nd.dst),
                                         resolve(nd.a), resolve(nd.b),
@@ -222,10 +314,31 @@ class Program:
         run(self.nodes)
         return stream
 
-    def cycles(self) -> int:
-        """Total cycles = array micro-ops + controller ALU ops executed."""
-        stream = self.expand()
-        return len(stream) + self._ctrl_cycles
+    def fingerprint(self) -> str:
+        """Stable content hash of the program.
+
+        Covers both the 16-bit encoded instruction words (structure) and
+        the expanded micro-op stream (absolute row operands, which the
+        16-bit encoding carries in registers and therefore does not pin
+        down by itself).  Two programs sharing a name but differing in
+        nodes hash differently, so compiled-executor caches keyed on
+        this never cross-contaminate.
+
+        Memoized on first use (it feeds every compiled-executor cache
+        lookup): treat a Program as frozen once it has been executed --
+        mutating ``nodes`` in place afterwards is not supported (build
+        a new Program instead, as ``__add__`` does).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha256()
+            for w in encode(self):
+                h.update(w.to_bytes(2, "little"))
+            for ins in self.expand():
+                h.update(f"{ins.op},{ins.dst},{ins.a},{ins.b},"
+                         f"{int(ins.pred)};".encode())
+            fp = self.__dict__["_fingerprint"] = h.hexdigest()[:16]
+        return fp
 
     def __add__(self, other: "Program") -> "Program":
         return Program(f"{self.name}+{other.name}", self.nodes + other.nodes,

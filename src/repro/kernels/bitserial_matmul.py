@@ -34,6 +34,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# support both so the kernels import on whichever the image bakes in.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _pick_block(dim: int, target: int, mult: int) -> int:
     """Largest divisor of ``dim`` that is <= target and a multiple of
@@ -110,7 +115,7 @@ def quant_matmul(a, w_packed, scale_w, *, bits: int,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, w_packed, scale_w.reshape(1, n).astype(jnp.float32))
@@ -171,7 +176,7 @@ def popcount_matmul(a_packed, w_packed, *, a_signed: bool = True,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_packed, w_packed)

@@ -1,1 +1,2 @@
 from .linear import PimConfig, linear_init, linear_apply, pack_linear  # noqa
+from .cram import cram_dot, cram_matmul  # noqa

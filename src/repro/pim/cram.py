@@ -1,0 +1,91 @@
+"""Compute-RAM-backed matmul: run integer GEMMs on the engine itself.
+
+The other pim backends (``pallas`` / ``popcount`` / ``ref``) re-express
+the paper's bit-plane arithmetic with TPU-native ops.  This module closes
+the loop the other way: it maps a quantized matmul onto the *actual*
+Compute RAM block simulator -- operands transposed into bit-serial
+columns, one ``idot`` program per block, blocks batched with
+``engine.execute_blocks``.  With the compiled executor this is fast
+enough to use in tests as a cross-layer oracle: the same numbers must
+fall out of the Pallas popcount kernel and the cycle-accurate block.
+
+Mapping for ``cram_matmul(x, w)`` with x ``(M, K)`` and w ``(K, N)``
+unsigned ints: output column ``n`` lives in CR column ``n`` (paper's
+40-column block => N <= cols per block), K is the serial tuple axis,
+and each output row m is one CR block (vmap axis).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine, harness, programs
+
+
+def idot_geometry(n: int, rows: int = 512, acc_bits: int = 32):
+    """Max dot-product length (tuples) an ``idot`` program supports."""
+    _, lay = programs.idot(n, rows=rows, acc_bits=acc_bits)
+    return lay.tuples
+
+
+def cram_dot(a, b, n: int, rows: int = 512,
+             executor: str = "compiled") -> np.ndarray:
+    """Per-column dot products on one Compute RAM block.
+
+    a, b: ``(T, cols)`` unsigned ints (< 2^n).  Returns ``(cols,)``
+    ``sum_t a[t] * b[t]`` as uint64 (exact; int32 accumulator).
+    """
+    a = np.asarray(a, np.uint64)
+    b = np.asarray(b, np.uint64)
+    if np.any(a >= (1 << n)) or np.any(b >= (1 << n)):
+        raise ValueError(f"operands must be < 2^{n}")
+    prog, lay = programs.idot(n, rows=rows, tuples=a.shape[0])
+    arr = harness.run_program(prog, lay, {"a": a, "b": b}, a.shape[1],
+                              executor=executor)
+    return harness.unpack_acc(arr, lay)
+
+
+def cram_matmul(x, w, n: int = 4, rows: int = 512, cols: int = 40,
+                executor: str = "compiled") -> np.ndarray:
+    """``(M, K) @ (K, N)`` unsigned integer matmul on CR blocks.
+
+    Tiles N over the block's columns and K over idot tuple capacity;
+    M runs as parallel blocks via :func:`engine.execute_blocks`.  All
+    tiles share ONE compiled idot program (same geometry), so the
+    compile cost is paid once per (n, rows, K-tile) shape.
+    """
+    import jax.numpy as jnp
+
+    x = np.asarray(x, np.uint64)
+    w = np.asarray(w, np.uint64)
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"shape mismatch {x.shape} @ {w.shape}")
+    if np.any(x >= (1 << n)) or np.any(w >= (1 << n)):
+        raise ValueError(f"operands must be < 2^{n}")
+
+    kt = idot_geometry(n, rows)
+    out = np.zeros((M, N), np.uint64)
+    for k0 in range(0, K, kt):
+        ksl = slice(k0, min(K, k0 + kt))
+        t = ksl.stop - k0
+        prog, lay = programs.idot(n, rows=rows, tuples=t)
+        for n0 in range(0, N, cols):
+            nsl = slice(n0, min(N, n0 + cols))
+            c = nsl.stop - n0
+            # one block per output row: (M, rows, c) batched state
+            arrs = np.stack([
+                harness.pack_state(lay, {
+                    "a": np.repeat(x[m, ksl][:, None], c, axis=1),
+                    "b": w[ksl, nsl],
+                }, c) for m in range(M)])
+            states = engine.CRState(
+                array=jnp.asarray(arrs),
+                carry=jnp.zeros((M, c), bool),
+                tag=jnp.ones((M, c), bool))
+            res = engine.execute_blocks(prog, states, executor=executor)
+            res = np.asarray(res.array)
+            out[:, nsl] += np.stack([
+                harness.unpack_acc(res[m], lay) for m in range(M)])
+    return out

@@ -1,0 +1,41 @@
+"""Shared test configuration.
+
+Environment is pinned BEFORE jax is imported anywhere: tests always run
+on CPU with 4 virtual host devices (so sharding/mesh tests see a multi-
+device topology deterministically, even on GPU build hosts).
+"""
+
+import os
+import random
+
+# must happen before `import jax` in any test module -- conftest is
+# imported by pytest before collection of the test modules themselves
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    """Every test starts from the same global RNG state."""
+    random.seed(0)
+    np.random.seed(0)
+
+
+@pytest.fixture
+def rng():
+    """Seeded numpy Generator for tests that want local randomness."""
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def jax_key():
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -23,6 +23,7 @@ def _batch(cfg, b=2, s=16, key=0):
     return batch
 
 
+@pytest.mark.slow     # full-model jit per arch: minutes on CPU
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_shapes_and_finite(arch):
     cfg = configs.get_config(arch, smoke=True)
@@ -41,6 +42,7 @@ def test_forward_shapes_and_finite(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+@pytest.mark.slow     # full-model jit per arch: minutes on CPU
 @pytest.mark.parametrize("arch", ARCHS)
 def test_loss_and_grad_step(arch):
     cfg = configs.get_config(arch, smoke=True)
@@ -59,6 +61,7 @@ def test_loss_and_grad_step(arch):
     assert float(loss2) != float(loss)
 
 
+@pytest.mark.slow     # full-model jit per arch: minutes on CPU
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_prefill(arch):
     """Prefill s tokens, then decode token s; compare against a full

@@ -3,21 +3,12 @@
 import numpy as np
 import pytest
 
-import jax
-
-from repro.core import engine, harness, isa, programs, ref
+from repro.core import harness, isa, programs, ref
 
 
-def _run(program, layout, data, cols=8, scan=False):
-    arr = harness.pack_state(layout, data, cols)
-    state = engine.CRState(
-        array=jax.numpy.asarray(arr),
-        carry=jax.numpy.zeros((cols,), bool),
-        tag=jax.numpy.ones((cols,), bool),
-    )
-    exe = engine.execute_scan if scan else engine.execute
-    out = exe(program, state)
-    return np.asarray(out.array)
+def _run(program, layout, data, cols=8, executor="compiled"):
+    return harness.run_program(program, layout, data, cols,
+                               executor=executor)
 
 
 def _rand(rng, n, shape):
@@ -65,21 +56,23 @@ def test_scan_executor_matches_unrolled():
     prog, lay = programs.iadd(4, rows=64)
     a = _rand(rng, 4, (lay.tuples, 8))
     b = _rand(rng, 4, (lay.tuples, 8))
-    arr1 = _run(prog, lay, {"a": a, "b": b}, scan=False)
-    arr2 = _run(prog, lay, {"a": a, "b": b}, scan=True)
+    arr1 = _run(prog, lay, {"a": a, "b": b}, executor="unroll")
+    arr2 = _run(prog, lay, {"a": a, "b": b}, executor="scan")
     np.testing.assert_array_equal(arr1, arr2)
 
 
-def test_scan_executor_matches_unrolled_bf16():
-    """The lax.scan controller covers every opcode class used by the
-    float programs (predication, tag chains, CSTORE, W0/W1, XOR...)."""
+def test_executors_match_unrolled_bf16():
+    """All executors cover every opcode class used by the float
+    programs (predication, tag chains, CSTORE, W0/W1, XOR...)."""
     rng = np.random.default_rng(5)
     prog, lay = programs.bf16_add(rows=512, tuples=2)
     a = _bf16_bits(rng, (2, 8))
     b = _bf16_bits(rng, (2, 8))
-    arr1 = _run(prog, lay, {"a": a, "b": b}, cols=8, scan=False)
-    arr2 = _run(prog, lay, {"a": a, "b": b}, cols=8, scan=True)
+    arr1 = _run(prog, lay, {"a": a, "b": b}, cols=8, executor="unroll")
+    arr2 = _run(prog, lay, {"a": a, "b": b}, cols=8, executor="scan")
+    arr3 = _run(prog, lay, {"a": a, "b": b}, cols=8, executor="compiled")
     np.testing.assert_array_equal(arr1, arr2)
+    np.testing.assert_array_equal(arr1, arr3)
 
 
 def _bf16_bits(rng, shape, emin=100, emax=150, with_zero=True):

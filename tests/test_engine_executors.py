@@ -1,0 +1,250 @@
+"""Executor equivalence matrix + compiled-program cache behaviour.
+
+The compiled executor (`engine.compile_program`) re-derives program
+semantics through a real compiler pipeline (lane vectorization, ripple-
+chain folding, integer provenance), so these tests pin it bit-exactly
+against the two reference executors on every opcode and every shipped
+instruction-sequence generator, plus golden cycle/footprint numbers.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler, engine, harness, isa, programs
+from repro.core.isa import Instr, Loop, Program, R, SetReg
+
+
+def _states_equal(a, b):
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("array", "carry", "tag"))
+
+
+def _rand_state(rng, rows, cols):
+    return engine.CRState(
+        array=jnp.asarray(rng.integers(0, 2, (rows, cols)).astype(bool)),
+        carry=jnp.asarray(rng.integers(0, 2, cols).astype(bool)),
+        tag=jnp.asarray(rng.integers(0, 2, cols).astype(bool)))
+
+
+def _assert_all_executors_agree(prog, state, packed_variants=(False, True)):
+    ref = engine.execute(prog, state)
+    scan = engine.execute_scan(prog, state)
+    assert _states_equal(ref, scan), f"{prog.name}: scan != unroll"
+    for packed in packed_variants:
+        comp = engine.execute_compiled(prog, state, packed=packed)
+        assert _states_equal(ref, comp), \
+            f"{prog.name}: compiled(packed={packed}) != unroll"
+
+
+# ---------------------------------------------------------------------------
+# Every opcode, predicated and not, through all three executors
+# ---------------------------------------------------------------------------
+_ROW_OPS = sorted(isa._WRITES_ROW)
+_LATCH_OPS = sorted(set(range(isa.N_ARRAY_OPS)) - isa._WRITES_ROW)
+
+
+@pytest.mark.parametrize("pred", [False, True])
+def test_every_opcode_bit_exact(rng, pred):
+    rows, cols = 16, 8
+    nodes = []
+    for i, op in enumerate(_ROW_OPS + _LATCH_OPS):
+        nodes.append(Instr(op, dst=(3 + i) % rows, a=(5 + 2 * i) % rows,
+                           b=(1 + 3 * i) % rows, pred=pred))
+        nodes.append(Instr(isa.OP_TROW, a=(7 * i) % rows))   # vary tag
+    prog = Program(f"allops_pred{pred}", nodes)
+    assert set(isa.stream_meta(prog.expand()).op_histogram) \
+        .issuperset((op, 1) for op in _ROW_OPS)
+    _assert_all_executors_agree(prog, _rand_state(rng, rows, cols))
+
+
+def test_chain_idioms_bit_exact(rng):
+    """Ripple chains / partial-product runs (the folded fast paths)."""
+    rows, cols = 64, 8
+    nodes = [
+        Instr(isa.OP_C0),
+        SetReg(1, 16), SetReg(2, 0), SetReg(3, 8),
+        Loop(8, [Instr(isa.OP_FA, R(1), R(2), R(3),
+                       inc=((1, 1), (2, 1), (3, 1)))]),
+        # in-place predicated subtract chain
+        Instr(isa.OP_TROW, a=40),
+        Instr(isa.OP_C0),
+        SetReg(1, 16), SetReg(2, 0),
+        Loop(8, [Instr(isa.OP_FS, R(1), R(1), R(2),
+                       inc=((1, 1), (2, 1)))]),
+        Instr(isa.OP_CSTORE, 30),
+        # AND run against one shared row (partial-product idiom)
+        SetReg(1, 48), SetReg(2, 8),
+        Loop(6, [Instr(isa.OP_AND, R(1), R(2), 41,
+                       inc=((1, 1), (2, 1)))]),
+    ]
+    prog = Program("chains", nodes)
+    _assert_all_executors_agree(prog, _rand_state(rng, rows, cols))
+
+
+# ---------------------------------------------------------------------------
+# Every shipped program generator, all executors, bit-exact
+# ---------------------------------------------------------------------------
+def _operand_data(rng, lay, cols):
+    w = lay.fields["a"][1]
+    names = [n for n in lay.fields if n in ("a", "b", "q")]
+    out = {}
+    for n in names:
+        v = rng.integers(0, 1 << min(w, 16), (lay.tuples, cols),
+                         dtype=np.uint64)
+        out[n] = np.where(rng.random((lay.tuples, cols)) < 0.1, 0, v)
+    return out
+
+
+_GEN_CASES = [
+    ("add_int4", lambda: programs.iadd(4, rows=128)),
+    ("add_int8", lambda: programs.iadd(8, rows=128)),
+    ("sub_int8", lambda: programs.isub(8, rows=128)),
+    ("add_int16", lambda: programs.iadd(16, rows=128)),
+    ("mul_int4", lambda: programs.imul(4, rows=128)),
+    ("mul_int8", lambda: programs.imul(8, rows=256)),
+    ("mul_int16", lambda: programs.imul(16, rows=256, tuples=2)),
+    ("dot_int4", lambda: programs.idot(4, rows=128)),
+    ("dot_int8", lambda: programs.idot(8, rows=256)),
+    ("dot_int16", lambda: programs.idot(16, rows=256, tuples=2)),
+    ("add_bf16", lambda: programs.bf16_add(rows=512, tuples=2)),
+    ("mul_bf16", lambda: programs.bf16_mul(rows=512, tuples=2)),
+    ("add_fp16", lambda: programs.fp16_add(rows=512, tuples=2)),
+    ("mul_fp16", lambda: programs.fp16_mul(rows=512, tuples=2)),
+    ("add_fp8", lambda: programs.fp8_add(rows=512, tuples=2)),
+    ("mul_fp8", lambda: programs.fp8_mul(rows=512, tuples=2)),
+    ("vsearch8", lambda: programs.vsearch(8, rows=128)),
+    ("vcmp_gt4", lambda: programs.vcmp_gt(4, rows=128)),
+]
+
+
+@pytest.mark.parametrize("name,gen", _GEN_CASES,
+                         ids=[c[0] for c in _GEN_CASES])
+def test_program_executor_matrix(rng, name, gen):
+    prog, lay = gen()
+    cols = 8
+    state = harness.make_jax_state(
+        harness.pack_state(lay, _operand_data(rng, lay, cols), cols))
+    # packed=True covered on the cheap programs; the float programs use
+    # the default representation (same lowering, 10x the compile time)
+    packed_variants = (False, True) if "int" in name or "v" in name \
+        else (False,)
+    _assert_all_executors_agree(prog, state, packed_variants)
+
+
+def test_golden_cycles_and_footprints():
+    """Cycle/footprint goldens for the paper geometry (rows=512).
+
+    These pin the *program generators*: an executor can never change
+    them, so a diff here means the ISA-level cost model moved.
+    """
+    golden = {
+        ("add", "int4"): (211, 6),
+        ("add", "int8"): (190, 6),
+        ("mul", "int4"): (931, 16),
+        ("mul", "int8"): (1351, 16),
+        ("dot", "int4"): (2820, 28),
+        ("dot", "int8"): (3256, 28),
+    }
+    for key, (cycles, slots) in golden.items():
+        prog, _ = programs.GENERATORS[key](rows=512)
+        assert prog.cycles() == cycles, key
+        assert prog.footprint() == slots, key
+
+
+# ---------------------------------------------------------------------------
+# Multi-block execution
+# ---------------------------------------------------------------------------
+def test_execute_blocks_compiled_matches_scan(rng):
+    prog, lay = programs.idot(4, rows=128)
+    blocks, rows, cols = 4, 128, 8
+    states = engine.CRState(
+        array=jnp.asarray(
+            rng.integers(0, 2, (blocks, rows, cols)).astype(bool)),
+        carry=jnp.zeros((blocks, cols), bool),
+        tag=jnp.ones((blocks, cols), bool))
+    out_scan = engine.execute_blocks(prog, states, executor="scan")
+    out_comp = engine.execute_blocks(prog, states, executor="compiled")
+    assert _states_equal(out_scan, out_comp)
+
+
+def test_run_dispatch_rejects_unknown_executor():
+    prog, _ = programs.iadd(4, rows=64)
+    state = engine.make_state(64, 8)
+    with pytest.raises(ValueError, match="unknown executor"):
+        engine.run(prog, state, executor="warp")
+
+
+def test_compile_rejects_too_small_geometry():
+    prog, _ = programs.iadd(8, rows=512)
+    with pytest.raises(ValueError, match="rows"):
+        engine.compile_program(prog, rows=16, cols=8)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program cache
+# ---------------------------------------------------------------------------
+def test_cache_hits_same_program_and_geometry():
+    engine.clear_compile_cache()
+    prog1, _ = programs.iadd(4, rows=64)
+    prog2, _ = programs.iadd(4, rows=64)       # fresh but identical object
+    assert prog1.fingerprint() == prog2.fingerprint()
+    f1 = engine.compile_program(prog1, 64, 8)
+    assert len(engine._COMPILE_CACHE) == 1
+    f2 = engine.compile_program(prog2, 64, 8)
+    assert f1 is f2, "identical (program, geometry) must hit the cache"
+
+
+def test_cache_misses_on_geometry_change():
+    engine.clear_compile_cache()
+    prog, _ = programs.iadd(4, rows=64)
+    f1 = engine.compile_program(prog, 64, 8)
+    f2 = engine.compile_program(prog, 128, 8)
+    f3 = engine.compile_program(prog, 64, 16)
+    assert f1 is not f2 and f1 is not f3
+    assert len(engine._COMPILE_CACHE) == 3
+
+
+def test_cache_no_cross_contamination_same_name(rng):
+    """Two same-named programs with different nodes: the 16-bit encoded
+    words are identical (absolute rows live in registers), so the
+    fingerprint must hash the expanded stream too."""
+    p1 = Program("twin", [Instr(isa.OP_W1, dst=3)])
+    p2 = Program("twin", [Instr(isa.OP_W1, dst=5)])
+    assert isa.encode(p1) == isa.encode(p2)
+    assert p1.fingerprint() != p2.fingerprint()
+
+    state = engine.make_state(16, 8)
+    out1 = engine.execute_compiled(p1, state)
+    out2 = engine.execute_compiled(p2, state)
+    assert np.asarray(out1.array)[3].all() and not \
+        np.asarray(out1.array)[5].any()
+    assert np.asarray(out2.array)[5].all() and not \
+        np.asarray(out2.array)[3].any()
+
+
+def test_cache_keys_include_packed_and_blocks():
+    engine.clear_compile_cache()
+    prog, _ = programs.iadd(4, rows=64)
+    engine.compile_program(prog, 64, 8, packed=False)
+    engine.compile_program(prog, 64, 8, packed=True)
+    assert len(engine._COMPILE_CACHE) == 2
+
+
+# ---------------------------------------------------------------------------
+# CRAM-backed matmul (pim <-> engine cross-layer)
+# ---------------------------------------------------------------------------
+def test_cram_matmul_exact(rng):
+    from repro.pim import cram_dot, cram_matmul
+    a = rng.integers(0, 16, (12, 8), dtype=np.uint64)
+    b = rng.integers(0, 16, (12, 8), dtype=np.uint64)
+    np.testing.assert_array_equal(cram_dot(a, b, 4, rows=256),
+                                  (a * b).sum(axis=0))
+    # tiles across both K (idot capacity) and N (block columns)
+    x = rng.integers(0, 16, (2, 24), dtype=np.uint64)
+    w = rng.integers(0, 16, (24, 12), dtype=np.uint64)
+    np.testing.assert_array_equal(
+        cram_matmul(x, w, n=4, rows=128, cols=8), x @ w)

@@ -66,18 +66,15 @@ def test_popcount_matches_engine_semantics():
     Both implement sum_t a_t*b_t by bit-level AND/add -- verify they
     agree end-to-end (unsigned int4, one output column per CR column).
     """
-    from repro.core import engine, harness, programs
+    from repro.core import harness, programs
     from repro.core import ref as cref
     rng = np.random.default_rng(3)
     prog, lay = programs.idot(4, rows=128)
     cols = 8
     a = rng.integers(0, 16, (lay.tuples, cols), dtype=np.uint64)
     b = rng.integers(0, 16, (lay.tuples, cols), dtype=np.uint64)
-    arr = harness.pack_state(lay, {"a": a, "b": b}, cols)
-    st = engine.CRState(jnp.asarray(arr), jnp.zeros((cols,), bool),
-                        jnp.ones((cols,), bool))
     got_engine = harness.unpack_acc(
-        np.asarray(engine.execute(prog, st).array), lay)
+        harness.run_program(prog, lay, {"a": a, "b": b}, cols), lay)
 
     # same dot products via the packed kernel: per column c,
     # acc[c] = a[:, c] . b[:, c]

@@ -6,6 +6,7 @@ import subprocess
 import sys
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +69,7 @@ def test_resolve_spec_divisibility_guard():
     assert spec == P(None, None)
 
 
+@pytest.mark.slow     # spawns a subprocess that jit-compiles a model
 def test_dryrun_cell_subprocess(tmp_path):
     """End-to-end dry-run of one real cell on the 256-chip mesh."""
     cmd = [sys.executable, "-m", "repro.launch.dryrun",

@@ -46,6 +46,7 @@ def test_pim_ref_equals_pallas_exactly():
                                np.asarray(yp, np.float32), rtol=1e-5)
 
 
+@pytest.mark.slow     # LM decode loop: ~10-25s compile+run
 def test_serve_engine_matches_manual_decode():
     cfg = configs.get_config("llama3.2-1b", smoke=True)
     model = LM(cfg)
@@ -77,6 +78,7 @@ def test_serve_engine_matches_manual_decode():
     assert outs == done[0].out
 
 
+@pytest.mark.slow     # LM decode loop: ~10-25s compile+run
 def test_serve_engine_continuous_batching():
     cfg = configs.get_config("qwen2-0.5b", smoke=True)
     model = LM(cfg)

@@ -1,6 +1,11 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
@@ -25,10 +30,7 @@ def _int_vectors(draw, nbits):
 
 
 def _run(prog, lay, data, cols):
-    arr = harness.pack_state(lay, data, cols)
-    st_ = engine.CRState(jnp.asarray(arr), jnp.zeros((cols,), bool),
-                         jnp.ones((cols,), bool))
-    return np.asarray(engine.execute(prog, st_).array)
+    return harness.run_program(prog, lay, data, cols)
 
 
 @settings(max_examples=15, deadline=None)

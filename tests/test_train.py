@@ -65,6 +65,7 @@ def test_checkpoint_retention(tmp_path):
     assert ckpt.all_steps(tmp_path) == [4, 5]
 
 
+@pytest.mark.slow     # multi-step training loop + restarts
 def test_runner_end_to_end_with_fault_injection(tmp_path):
     cfg = configs.get_config("qwen2-0.5b", smoke=True)
     model = LM(cfg)
@@ -99,6 +100,7 @@ def test_elastic_remesh_resizing():
         elastic_remesh(256, 16, 7)               # non-divisible topology
 
 
+@pytest.mark.slow     # 30-step training run
 def test_loss_decreases_over_short_run(tmp_path):
     """End-to-end sanity: 30 steps of a tiny model on synthetic data."""
     cfg = configs.get_config("llama3.2-1b", smoke=True)
@@ -161,6 +163,7 @@ def test_compressed_gradient_allreduce():
         assert np.abs(gc - ge).max() < np.abs(ge).max() / 40
 
 
+@pytest.mark.slow     # pmap compile across 4 host devices
 def test_compressed_gradient_allreduce_multidevice():
     """Run the compressed-psum test on 4 fake devices via subprocess
     (the in-process test skips on single-device environments)."""
@@ -177,6 +180,7 @@ def test_compressed_gradient_allreduce_multidevice():
     assert "1 passed" in r.stdout
 
 
+@pytest.mark.slow     # subprocess training restart
 def test_elastic_restart_subprocess():
     """Full elastic scenario: train on (2,2), checkpoint, lose half the
     data axis, restore on (1,2), continue -- losses match an
