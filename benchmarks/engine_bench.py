@@ -5,10 +5,19 @@ parallel), plus instruction-memory footprints (paper §III-A2).
 
 Writes the executor numbers to ``BENCH_engine.json`` so regressions in
 the compiled path show up as a diff, not just a log line.
+
+CLI: ``python benchmarks/engine_bench.py [--quick] [--json PATH]
+[--min-idot-speedup X]``.  ``--quick`` runs a reduced program set with
+fewer replays (CI tier-1 budget); ``--min-idot-speedup`` exits non-zero
+if any ``idot`` compiled-vs-scan speedup falls below the floor, which is
+how CI fails loudly on executor regressions (ROADMAP "benchmark
+hygiene").
 """
 
+import argparse
 import json
 import pathlib
+import sys
 import time
 
 import jax
@@ -34,11 +43,15 @@ def _replay_pair(f1, f2, n=25):
     return b1, b2
 
 
-def bench_executors(print_fn=print, rows=512, cols=40):
+def bench_executors(print_fn=print, rows=512, cols=40, quick=False):
     """Replay scan vs compiled on the paper geometry; return results."""
     rng = np.random.default_rng(0)
     results = {}
-    for name, (prog, lay) in [
+    cases = [
+        ("idot4", programs.idot(4, rows=rows)),
+        ("idot8", programs.idot(8, rows=rows)),
+        ("iadd8", programs.iadd(8, rows=rows)),
+    ] if quick else [
         ("imul4", programs.imul(4, rows=rows)),
         ("imul8", programs.imul(8, rows=rows)),
         ("imul16", programs.imul(16, rows=rows)),
@@ -46,7 +59,8 @@ def bench_executors(print_fn=print, rows=512, cols=40):
         ("idot8", programs.idot(8, rows=rows)),
         ("idot16", programs.idot(16, rows=rows)),
         ("iadd8", programs.iadd(8, rows=rows)),
-    ]:
+    ]
+    for name, (prog, lay) in cases:
         a = rng.integers(0, 1 << lay.nbits, (lay.tuples, cols),
                          dtype=np.uint64)
         b = rng.integers(0, 1 << lay.nbits, (lay.tuples, cols),
@@ -63,7 +77,8 @@ def bench_executors(print_fn=print, rows=512, cols=40):
 
         t_scan, t_compiled = _replay_pair(
             lambda: jax.block_until_ready(scan_fn(state).array),
-            lambda: jax.block_until_ready(fn(state).array))
+            lambda: jax.block_until_ready(fn(state).array),
+            n=8 if quick else 25)
 
         speedup = t_scan / t_compiled
         results[name] = {
@@ -79,12 +94,12 @@ def bench_executors(print_fn=print, rows=512, cols=40):
     return results
 
 
-def bench_blocks(print_fn=print, rows=512, cols=40):
+def bench_blocks(print_fn=print, rows=512, cols=40, quick=False):
     """Multi-block fabric simulation (int4 dot product per block):
     vmapped scan vs the compiled wide-block path."""
     prog, lay = programs.idot(4, rows=rows)
     results = {}
-    for blocks in (1, 16, 64):
+    for blocks in (1, 16) if quick else (1, 16, 64):
         states = engine.CRState(
             array=jnp.zeros((blocks, rows, cols), jnp.bool_),
             carry=jnp.zeros((blocks, cols), jnp.bool_),
@@ -112,21 +127,55 @@ def bench_blocks(print_fn=print, rows=512, cols=40):
     return results
 
 
-def run(print_fn=print, json_path=BENCH_JSON):
-    for (op, prec), gen in programs.GENERATORS.items():
-        prog, lay = gen(rows=512)
-        cyc = prog.cycles()
-        per_op = cyc / lay.tuples
-        us = cyc / cm.FREQ_CR_MHZ
-        print_fn(f"engine/{op}_{prec}/cycles,{cyc},"
-                 f"per_op={per_op:.1f};imem_slots={prog.footprint()}"
-                 f";time_us={us:.2f}@{cm.FREQ_CR_MHZ:.0f}MHz")
+def run(print_fn=print, json_path=BENCH_JSON, quick=False):
+    if not quick:
+        for (op, prec), gen in programs.GENERATORS.items():
+            prog, lay = gen(rows=512)
+            cyc = prog.cycles()
+            per_op = cyc / lay.tuples
+            us = cyc / cm.FREQ_CR_MHZ
+            print_fn(f"engine/{op}_{prec}/cycles,{cyc},"
+                     f"per_op={per_op:.1f};imem_slots={prog.footprint()}"
+                     f";time_us={us:.2f}@{cm.FREQ_CR_MHZ:.0f}MHz")
 
     payload = {
         "geometry": {"rows": 512, "cols": 40},
-        "executors": bench_executors(print_fn),
-        "blocks": bench_blocks(print_fn),
+        "quick": quick,
+        "executors": bench_executors(print_fn, quick=quick),
+        "blocks": bench_blocks(print_fn, quick=quick),
     }
     pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
     print_fn(f"engine/bench_json,{json_path},written")
     return payload
+
+
+def check_idot_speedup(payload: dict, floor: float) -> list:
+    """Return the idot entries whose compiled-vs-scan speedup < floor."""
+    return [f"{k}: {v['speedup']:.2f}x < {floor}x"
+            for k, v in sorted(payload["executors"].items())
+            if k.startswith("idot") and v["speedup"] < floor]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced program set + fewer replays (CI tier-1)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help=f"output path (default {BENCH_JSON})")
+    ap.add_argument("--min-idot-speedup", type=float, default=None,
+                    metavar="X",
+                    help="fail (exit 1) if any idot compiled-vs-scan "
+                    "speedup drops below X")
+    args = ap.parse_args(argv)
+    payload = run(json_path=args.json, quick=args.quick)
+    if args.min_idot_speedup is not None:
+        bad = check_idot_speedup(payload, args.min_idot_speedup)
+        if bad:
+            print("SPEEDUP REGRESSION: " + "; ".join(bad))
+            return 1
+        print(f"idot speedups >= {args.min_idot_speedup}x: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

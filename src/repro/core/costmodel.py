@@ -76,6 +76,11 @@ WIRE_FJ_PER_BIT_MM = 34.0
 FPGA_SWITCH_FACTOR = 4.0
 NET_LENGTH_BASE_MM = 0.60            # VTR-style average net length, baseline
 NET_LENGTH_CR_MM = 0.08              # only mode/start/done + host control
+# Fabric-level operand movement (schedule roll-up): a storage-mode block
+# feeding a compute-mode block is a short block-to-block hop; operands
+# spilled to off-fabric memory ride the long I/O column nets.
+NET_LENGTH_FABRIC_MM = 0.30
+NET_LENGTH_SPILL_MM = 1.20
 
 GEOMETRIES = {(512, 40): "512x40", (1024, 20): "1024x20",
               (2048, 10): "2048x10"}
@@ -242,6 +247,106 @@ def compare(op: str, precision: str, cr_cols: int = 40) -> dict:
         "time_ratio": cr.time_per_op_ns / base.time_per_op_ns,
         "freq_gain": cr.freq_mhz / base.freq_mhz - 1.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Schedule-level roll-up (fabric scheduler, paper §IV/§V): many blocks,
+# some in storage mode holding operands, some in compute mode executing
+# instruction sequences, cooperating on one workload.  ``repro.pim.fabric``
+# counts *events* (cycles, rows touched, bits moved); this section turns
+# the counts into energy/time with the same constants as the per-block
+# model, so per-block and fabric numbers are directly comparable.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleCost:
+    """Energy/time roll-up of one executed fabric schedule."""
+    name: str
+    n_blocks: int                 # grid size
+    n_compute: int                # blocks in compute mode
+    n_storage: int                # blocks in storage mode
+    rounds: int                   # serialized execute_blocks launches
+    compute_block_cycles: float   # sum over (active block, cycle) pairs
+    round_cycles: float           # critical-path compute cycles (per round
+    #                               blocks run in parallel -> max, summed)
+    storage_rows_touched: float   # storage-mode row reads/writes (loads +
+    #                               readback), across all blocks
+    fabric_bits_moved: float      # operand/result bits on block-to-block nets
+    spill_bits_moved: float       # bits to/from off-fabric memory
+    ops: int                      # useful MACs (padding excluded)
+    energy_compute_pj: float
+    energy_storage_pj: float
+    energy_wire_pj: float
+
+    @property
+    def energy_pj(self) -> float:
+        return (self.energy_compute_pj + self.energy_storage_pj
+                + self.energy_wire_pj)
+
+    @property
+    def time_us(self) -> float:
+        """Compute rounds serialize at the compute-mode frequency; data
+        movement overlaps row-by-row with storage-mode accesses at the
+        (faster) storage frequency."""
+        return (self.round_cycles / FREQ_CIRCUIT_CR_MHZ
+                + self.storage_rows_touched / FREQ_BRAM_MHZ)
+
+    @property
+    def energy_per_op_pj(self) -> float:
+        return self.energy_pj / max(self.ops, 1)
+
+    @property
+    def gops(self) -> float:
+        return self.ops / max(self.time_us, 1e-12) / 1e3
+
+    def report(self) -> dict:
+        """Flat summary (benchmarks / examples / JSON artifacts)."""
+        return {
+            "name": self.name, "blocks": self.n_blocks,
+            "compute": self.n_compute, "storage": self.n_storage,
+            "rounds": self.rounds, "ops": self.ops,
+            "energy_pj": round(self.energy_pj, 3),
+            "energy_compute_pj": round(self.energy_compute_pj, 3),
+            "energy_storage_pj": round(self.energy_storage_pj, 3),
+            "energy_wire_pj": round(self.energy_wire_pj, 3),
+            "time_us": round(self.time_us, 4),
+            "energy_per_op_pj": round(self.energy_per_op_pj, 4),
+            "gops": round(self.gops, 3),
+        }
+
+
+def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
+                         n_storage: int, rounds: int,
+                         compute_block_cycles: float, round_cycles: float,
+                         storage_rows_touched: float,
+                         fabric_bits_moved: float, spill_bits_moved: float,
+                         ops: int) -> ScheduleCost:
+    """Price a fabric schedule's event counts (see :class:`ScheduleCost`).
+
+    * compute energy: every (active compute block, cycle) pair burns the
+      compute-mode block energy (elevated activity factor, §IV-C);
+    * storage energy: each storage-mode row access costs one cycle of a
+      block at storage activity (0.1) -- the BRAM-like half of the
+      dual-mode claim;
+    * wire energy: operand/result bits times the fabric hop length
+      (block-to-block) or the spill length (off-fabric), Keckler-style.
+    """
+    e_cr_compute = COMPUTE_MODE_ACTIVITY_FACTOR * \
+        block_energy_per_cycle_fj(AREA_CR_UM2, 0.75)
+    e_cr_storage = block_energy_per_cycle_fj(AREA_CR_UM2, 0.9)
+    return ScheduleCost(
+        name=name, n_blocks=n_blocks, n_compute=n_compute,
+        n_storage=n_storage, rounds=rounds,
+        compute_block_cycles=compute_block_cycles,
+        round_cycles=round_cycles,
+        storage_rows_touched=storage_rows_touched,
+        fabric_bits_moved=fabric_bits_moved,
+        spill_bits_moved=spill_bits_moved, ops=ops,
+        energy_compute_pj=compute_block_cycles * e_cr_compute / 1e3,
+        energy_storage_pj=storage_rows_touched * e_cr_storage / 1e3,
+        energy_wire_pj=(
+            wire_energy_fj(fabric_bits_moved, NET_LENGTH_FABRIC_MM)
+            + wire_energy_fj(spill_bits_moved, NET_LENGTH_SPILL_MM)) / 1e3,
+    )
 
 
 def cr_throughput_gops(op: str, precision: str, cols: int = 40,

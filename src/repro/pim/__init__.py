@@ -1,2 +1,4 @@
 from .linear import PimConfig, linear_init, linear_apply, pack_linear  # noqa
-from .cram import cram_dot, cram_matmul  # noqa
+from .cram import cram_dot, cram_matmul, idot_geometry  # noqa
+from .fabric import (FabricConfig, FabricLinearProbe, Schedule,  # noqa
+                     fabric_attention_scores, fabric_matmul, schedule_gemm)

@@ -13,6 +13,18 @@ Mapping for ``cram_matmul(x, w)`` with x ``(M, K)`` and w ``(K, N)``
 unsigned ints: output column ``n`` lives in CR column ``n`` (paper's
 40-column block => N <= cols per block), K is the serial tuple axis,
 and each output row m is one CR block (vmap axis).
+
+Signed operands (``signed=True``) use the standard zero-point offset:
+the ``idot`` program is unsigned-only hardware (the paper handles sign
+"one level up" via bit-plane weighting), so signed values in
+``[-2^(n-1), 2^(n-1))`` are biased by ``off = 2^(n-1)`` into unsigned
+range, run exactly, and corrected on readback:
+
+    x @ w = (u_x - off) @ (u_w - off)
+          = u_x @ u_w - off*rowsum(u_x) - off*colsum(u_w) + K*off^2
+
+The correction terms are host-side sums of values the host loaded into
+storage mode anyway -- no extra block cycles.
 """
 
 from __future__ import annotations
@@ -28,33 +40,110 @@ def idot_geometry(n: int, rows: int = 512, acc_bits: int = 32):
     return lay.tuples
 
 
+def idot_tile(n: int, rows: int = 512, acc_bits: int = 32) -> int:
+    """K-tile for exact accumulation: :func:`idot_geometry` clamped so
+    ``tuples * (2^n - 1)^2`` provably fits the accumulator (the wide
+    precisions -- int16 -- would otherwise wrap mod ``2^acc_bits``)."""
+    acc_limit = ((1 << acc_bits) - 1) // max((1 << n) - 1, 1) ** 2
+    return max(1, min(idot_geometry(n, rows, acc_bits), acc_limit))
+
+
+def _bias_signed(x, n: int):
+    """Two's-complement -> biased-unsigned (``u = x + 2^(n-1)``)."""
+    off = np.int64(1 << (n - 1))
+    return (np.asarray(x, np.int64) + off).astype(np.uint64), off
+
+
+def _unbias(raw, off, a_sums, b_sums, T: int) -> np.ndarray:
+    """Invert the offset on a raw biased-unsigned accumulator:
+
+        x @ w = u_x @ u_w - off*sum(u_x) - off*sum(u_w) + T*off^2
+
+    ``a_sums`` / ``b_sums`` are the biased operands' reduction sums,
+    already broadcast to ``raw``'s shape; ``T`` is the reduction length.
+    Shared by cram_dot / cram_matmul / the fabric scheduler so the
+    algebra can never diverge between layers.
+    """
+    corr = off * a_sums + off * b_sums - np.int64(T) * off * off
+    return np.asarray(raw).astype(np.int64) - corr
+
+
+def _check_range(arrs, n: int, signed: bool):
+    if signed:
+        lo, hi = -(1 << (n - 1)), 1 << (n - 1)
+        for a in arrs:
+            ai = np.asarray(a, np.int64)
+            if np.any(ai < lo) or np.any(ai >= hi):
+                raise ValueError(
+                    f"signed operands must be in [{lo}, {hi})")
+    else:
+        for a in arrs:
+            ai = np.asarray(a, np.int64)
+            if np.any(ai < 0) or np.any(ai >= (1 << n)):
+                raise ValueError(f"operands must be < 2^{n}")
+
+
 def cram_dot(a, b, n: int, rows: int = 512,
-             executor: str = "compiled") -> np.ndarray:
+             executor: str = "compiled", signed: bool = False) -> np.ndarray:
     """Per-column dot products on one Compute RAM block.
 
-    a, b: ``(T, cols)`` unsigned ints (< 2^n).  Returns ``(cols,)``
-    ``sum_t a[t] * b[t]`` as uint64 (exact; int32 accumulator).
+    a, b: ``(T, cols)`` ints (unsigned ``< 2^n``, or two's-complement
+    signed with ``signed=True``).  Returns ``(cols,)`` ``sum_t
+    a[t] * b[t]`` -- uint64 for unsigned, int64 for signed (exact).
+
+    ``T`` may exceed one program's tuple capacity (partial-tile
+    support): the dot is K-tiled over multiple program launches and
+    accumulated host-side, mirroring how the fabric scheduler streams
+    a long reduction through one block.
     """
+    _check_range((a, b), n, signed)
+    if signed:
+        au, off = _bias_signed(a, n)
+        bu, _ = _bias_signed(b, n)
+        raw = cram_dot(au, bu, n, rows=rows, executor=executor)
+        return _unbias(raw, off, au.sum(axis=0, dtype=np.int64),
+                       bu.sum(axis=0, dtype=np.int64), a.shape[0])
     a = np.asarray(a, np.uint64)
     b = np.asarray(b, np.uint64)
-    if np.any(a >= (1 << n)) or np.any(b >= (1 << n)):
-        raise ValueError(f"operands must be < 2^{n}")
-    prog, lay = programs.idot(n, rows=rows, tuples=a.shape[0])
-    arr = harness.run_program(prog, lay, {"a": a, "b": b}, a.shape[1],
-                              executor=executor)
-    return harness.unpack_acc(arr, lay)
+    kt = idot_tile(n, rows)
+    out = np.zeros((a.shape[1],), np.uint64)
+    for k0 in range(0, a.shape[0], kt):
+        ksl = slice(k0, min(a.shape[0], k0 + kt))
+        prog, lay = programs.idot(n, rows=rows, tuples=ksl.stop - k0)
+        arr = harness.run_program(prog, lay, {"a": a[ksl], "b": b[ksl]},
+                                  a.shape[1], executor=executor)
+        out += harness.unpack_acc(arr, lay)
+    return out
 
 
 def cram_matmul(x, w, n: int = 4, rows: int = 512, cols: int = 40,
-                executor: str = "compiled") -> np.ndarray:
-    """``(M, K) @ (K, N)`` unsigned integer matmul on CR blocks.
+                executor: str = "compiled",
+                signed: bool = False) -> np.ndarray:
+    """``(M, K) @ (K, N)`` integer matmul on CR blocks.
 
-    Tiles N over the block's columns and K over idot tuple capacity;
-    M runs as parallel blocks via :func:`engine.execute_blocks`.  All
-    tiles share ONE compiled idot program (same geometry), so the
-    compile cost is paid once per (n, rows, K-tile) shape.
+    Tiles N over the block's columns and K over idot tuple capacity
+    (ragged/partial edge tiles supported); M runs as parallel blocks via
+    :func:`engine.execute_blocks`.  All full tiles share ONE compiled
+    idot program (same geometry), so the compile cost is paid once per
+    (n, rows, K-tile) shape.
+
+    ``signed=True`` accepts two's-complement operands in
+    ``[-2^(n-1), 2^(n-1))`` and returns exact int64 (see module
+    docstring for the offset algebra) -- this is what lets
+    ``pim/linear.py`` quantized weights run without manual re-biasing.
     """
     import jax.numpy as jnp
+
+    _check_range((x, w), n, signed)
+    if signed:
+        xu, off = _bias_signed(x, n)
+        wu, _ = _bias_signed(w, n)
+        raw = cram_matmul(xu, wu, n=n, rows=rows, cols=cols,
+                          executor=executor)
+        return _unbias(raw, off,
+                       xu.sum(axis=1, dtype=np.int64)[:, None],
+                       wu.sum(axis=0, dtype=np.int64)[None, :],
+                       xu.shape[1])
 
     x = np.asarray(x, np.uint64)
     w = np.asarray(w, np.uint64)
@@ -62,10 +151,8 @@ def cram_matmul(x, w, n: int = 4, rows: int = 512, cols: int = 40,
     K2, N = w.shape
     if K != K2:
         raise ValueError(f"shape mismatch {x.shape} @ {w.shape}")
-    if np.any(x >= (1 << n)) or np.any(w >= (1 << n)):
-        raise ValueError(f"operands must be < 2^{n}")
 
-    kt = idot_geometry(n, rows)
+    kt = idot_tile(n, rows)
     out = np.zeros((M, N), np.uint64)
     for k0 in range(0, K, kt):
         ksl = slice(k0, min(K, k0 + kt))

@@ -1,0 +1,477 @@
+"""Fabric scheduler: tile GEMM/attention across a Compute RAM block grid.
+
+The paper's fabric-level claim (§IV, §V): an FPGA carries hundreds of
+Compute RAM sites, each *dynamically* allocated to storage mode (a plain
+BRAM holding operands) or compute mode (executing an instruction
+sequence), and a DL workload is tiled across the grid.  This module is
+that layer for the simulator: it turns "one block runs one program"
+(:mod:`repro.pim.cram`) into "a simulated FPGA runs a matmul".
+
+Pipeline
+--------
+1. :func:`schedule_gemm` builds an explicit :class:`Schedule` IR:
+
+   * **mode map** -- each of the grid's ``n_blocks`` blocks is assigned
+     ``storage`` (operand residency) or ``compute`` (paper §II dual-mode
+     allocation).  Storage demand is sized from the operand footprint;
+     whatever does not fit on-fabric is marked *spilled* (off-fabric
+     memory, longer wires).
+   * **tiling** -- K is tiled to the ``idot`` tuple capacity of the
+     block geometry (:func:`repro.pim.cram.idot_geometry`, clamped so
+     the int32 accumulator provably cannot overflow), N to the block's
+     columns, and each output row ``m`` is one tile task.  Ragged edge
+     tiles are zero-padded to the fixed tile geometry so **every round
+     replays one compiled program**.
+   * **rounds** -- tile tasks are packed ``n_compute`` at a time into
+     :class:`Round`\\ s; one round is one ``engine.execute_blocks``
+     launch.  Blocks without a task in a partial round are *not
+     started* (each block has its own start line from the host FSM, so
+     idle blocks burn no compute energy); the simulator still steps
+     them on zeros purely as a wide-batch convenience, and their
+     results are discarded.
+
+2. :func:`execute_schedule` runs the rounds **exactly** on the block
+   simulator and accumulates per-tile accumulators into the output.
+
+3. :func:`schedule_cost` walks the same IR and prices it with
+   :mod:`repro.core.costmodel` (compute-mode cycles, storage-mode row
+   traffic, and block-to-block / spill wire energy for every operand
+   move), returning a :class:`repro.core.costmodel.ScheduleCost`.
+
+Signed operands use the same zero-point offset algebra as
+:func:`repro.pim.cram.cram_matmul` (the blocks are unsigned-only
+hardware); corrections are host-side sums.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import costmodel, engine, harness, programs
+from repro.pim import cram
+
+ACC_BITS = 32
+
+
+# ---------------------------------------------------------------------------
+# Config + IR
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """A grid of Compute RAM blocks (one simulated FPGA)."""
+    n_blocks: int = 8
+    rows: int = 512
+    cols: int = 40
+    executor: str = "compiled"
+    min_compute_blocks: int = 1    # never storage-starve the grid
+
+    @property
+    def block_bits(self) -> int:
+        return self.rows * self.cols
+
+    def __post_init__(self):
+        if self.n_blocks < 1:
+            raise ValueError("fabric needs at least one block")
+        if not 1 <= self.min_compute_blocks <= self.n_blocks:
+            raise ValueError("min_compute_blocks out of range")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileTask:
+    """One (output-row, K-tile, N-tile) unit of work on one compute block."""
+    block: int                 # compute-block slot executing this tile
+    m: int                     # output row
+    k0: int
+    k1: int
+    n0: int
+    n1: int
+    x_src: int                 # storage block holding x[m, :] (-1 = spill)
+    w_src: int                 # storage block holding w tile (-1 = spill)
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """One lockstep ``execute_blocks`` launch over the compute blocks."""
+    tasks: Tuple[TileTask, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Explicit fabric schedule for one quantized GEMM (the IR every
+    later scaling PR -- sharding, async rounds, multi-backend -- builds
+    on)."""
+    cfg: FabricConfig
+    nbits: int
+    signed: bool
+    M: int
+    K: int
+    N: int
+    kt: int                              # K-tile (idot tuples per launch)
+    modes: Tuple[str, ...]               # per block: "compute" | "storage"
+    x_home: Tuple[int, ...]              # per output row m -> block | -1
+    w_home: Dict[Tuple[int, int], int]   # (k-tile, n-tile) -> block | -1
+    rounds: Tuple[Round, ...]
+
+    @property
+    def n_compute(self) -> int:
+        return self.modes.count("compute")
+
+    @property
+    def n_storage(self) -> int:
+        return self.modes.count("storage")
+
+    @property
+    def program(self):
+        """The single idot program every round replays."""
+        prog, _ = programs.idot(self.nbits, rows=self.cfg.rows,
+                                tuples=self.kt)
+        return prog
+
+    @property
+    def ops(self) -> int:
+        """Useful MACs (zero-padding excluded)."""
+        return sum((t.k1 - t.k0) * (t.n1 - t.n0)
+                   for r in self.rounds for t in r.tasks)
+
+    def describe(self) -> str:
+        lines = [
+            f"Schedule {self.M}x{self.K}@{self.K}x{self.N} "
+            f"int{self.nbits}{'s' if self.signed else 'u'} on "
+            f"{self.cfg.n_blocks} blocks "
+            f"({self.n_compute} compute / {self.n_storage} storage)",
+            f"  K-tile={self.kt} tuples, N-tile={self.cfg.cols} cols, "
+            f"{len(self.rounds)} round(s), "
+            f"{sum(len(r.tasks) for r in self.rounds)} tile task(s)",
+        ]
+        spills = sum(1 for t_ in self.w_home.values() if t_ < 0) \
+            + sum(1 for t_ in self.x_home if t_ < 0)
+        if spills:
+            lines.append(f"  {spills} operand(s) spilled off-fabric")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Scheduling
+# ---------------------------------------------------------------------------
+def schedule_gemm(M: int, K: int, N: int, nbits: int,
+                  cfg: FabricConfig = FabricConfig(),
+                  signed: bool = False) -> Schedule:
+    """Plan ``(M, K) @ (K, N)`` onto the block grid (no execution)."""
+    if min(M, K, N) < 1:
+        raise ValueError(f"degenerate GEMM {M}x{K}x{N}")
+    kt = cram.idot_tile(nbits, cfg.rows, ACC_BITS)
+    k_tiles = math.ceil(K / kt)
+    n_tiles = math.ceil(N / cfg.cols)
+
+    # --- mode map: size storage demand, keep >= min_compute_blocks ----------
+    w_tile_bits = {}
+    for ki in range(k_tiles):
+        for ni in range(n_tiles):
+            kw = min(K, (ki + 1) * kt) - ki * kt
+            nw = min(N, (ni + 1) * cfg.cols) - ni * cfg.cols
+            w_tile_bits[(ki, ni)] = kw * nw * nbits
+    x_row_bits = K * nbits
+    total_bits = sum(w_tile_bits.values()) + M * x_row_bits
+    n_storage = min(math.ceil(total_bits / cfg.block_bits),
+                    cfg.n_blocks - cfg.min_compute_blocks)
+    n_storage = max(n_storage, 0)
+    n_compute = cfg.n_blocks - n_storage
+    modes = tuple(["storage"] * n_storage + ["compute"] * n_compute)
+
+    # --- operand residency: first-fit into the storage blocks ---------------
+    free = [cfg.block_bits] * n_storage
+
+    def place(bits: int) -> int:
+        for b in range(n_storage):
+            if free[b] >= bits:
+                free[b] -= bits
+                return b
+        return -1                                  # spill off-fabric
+
+    w_home = {key: place(bits) for key, bits in sorted(w_tile_bits.items())}
+    x_home = tuple(place(x_row_bits) for _ in range(M))
+
+    # --- tile tasks -> lockstep rounds of n_compute ------------------------
+    # (ki, ni, m) order: consecutive tasks share a weight tile, so a
+    # future broadcast optimization can coalesce their fetches.
+    units = [(m, ki, ni) for ki in range(k_tiles) for ni in range(n_tiles)
+             for m in range(M)]
+    rounds = []
+    for r0 in range(0, len(units), n_compute):
+        tasks = []
+        for slot, (m, ki, ni) in enumerate(units[r0:r0 + n_compute]):
+            tasks.append(TileTask(
+                block=n_storage + slot, m=m,
+                k0=ki * kt, k1=min(K, (ki + 1) * kt),
+                n0=ni * cfg.cols, n1=min(N, (ni + 1) * cfg.cols),
+                x_src=x_home[m], w_src=w_home[(ki, ni)]))
+        rounds.append(Round(tasks=tuple(tasks)))
+
+    return Schedule(cfg=cfg, nbits=nbits, signed=signed, M=M, K=K, N=N,
+                    kt=kt, modes=modes, x_home=x_home, w_home=w_home,
+                    rounds=tuple(rounds))
+
+
+# ---------------------------------------------------------------------------
+# Exact execution on the block simulator
+# ---------------------------------------------------------------------------
+def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
+                     executor: Optional[str] = None) -> np.ndarray:
+    """Run the schedule's rounds exactly; operands already unsigned.
+
+    x_u ``(M, K)``, w_u ``(K, N)`` unsigned ``< 2^nbits``.  Returns the
+    raw uint64 accumulator image ``(M, N)`` (callers apply the signed
+    zero-point correction; see :func:`fabric_matmul`).
+    """
+    import jax.numpy as jnp
+
+    cfg = sched.cfg
+    executor = executor or cfg.executor
+    x_u = np.asarray(x_u, np.uint64)
+    w_u = np.asarray(w_u, np.uint64)
+    if x_u.shape != (sched.M, sched.K) or w_u.shape != (sched.K, sched.N):
+        raise ValueError(f"operands {x_u.shape} @ {w_u.shape} do not match "
+                         f"schedule {sched.M}x{sched.K}x{sched.N}")
+    if np.any(x_u >= (1 << sched.nbits)) or np.any(w_u >= (1 << sched.nbits)):
+        raise ValueError(f"operands must be < 2^{sched.nbits}")
+
+    prog, lay = programs.idot(sched.nbits, rows=cfg.rows, tuples=sched.kt)
+    n_compute = sched.n_compute
+    out = np.zeros((sched.M, sched.N), np.uint64)
+    zero = np.zeros((sched.kt, cfg.cols), np.uint64)
+
+    for rnd in sched.rounds:
+        arrs = np.zeros((n_compute, cfg.rows, cfg.cols), bool)
+        for t in rnd.tasks:
+            a = zero.copy()
+            b = zero.copy()
+            kw, nw = t.k1 - t.k0, t.n1 - t.n0
+            a[:kw, :] = x_u[t.m, t.k0:t.k1][:, None]   # broadcast to cols
+            b[:kw, :nw] = w_u[t.k0:t.k1, t.n0:t.n1]
+            arrs[t.block - sched.n_storage] = harness.pack_state(
+                lay, {"a": a, "b": b}, cfg.cols)
+        states = engine.CRState(
+            array=jnp.asarray(arrs),
+            carry=jnp.zeros((n_compute, cfg.cols), bool),
+            tag=jnp.ones((n_compute, cfg.cols), bool))
+        res = np.asarray(
+            engine.execute_blocks(prog, states, executor=executor).array)
+        for t in rnd.tasks:
+            acc = harness.unpack_acc(res[t.block - sched.n_storage], lay)
+            out[t.m, t.n0:t.n1] += acc[: t.n1 - t.n0]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricResult:
+    out: np.ndarray
+    schedule: Schedule
+    cost: costmodel.ScheduleCost
+
+
+def fabric_matmul(x, w, nbits: int = 4,
+                  cfg: FabricConfig = FabricConfig(),
+                  signed: bool = False) -> FabricResult:
+    """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
+
+    Bit-exact vs ``x @ w`` in int64 for any operand in range; the cost
+    report prices the *executed* schedule (same IR), so correctness and
+    accounting can never drift apart.
+    """
+    x = np.asarray(x)
+    w = np.asarray(w)
+    sched = schedule_gemm(x.shape[0], x.shape[1], w.shape[1], nbits,
+                          cfg=cfg, signed=signed)
+    if signed:
+        cram._check_range((x, w), nbits, signed=True)
+        xu, off = cram._bias_signed(x, nbits)
+        wu, _ = cram._bias_signed(w, nbits)
+        raw = execute_schedule(sched, xu, wu)
+        out = cram._unbias(raw, off,
+                           xu.sum(axis=1, dtype=np.int64)[:, None],
+                           wu.sum(axis=0, dtype=np.int64)[None, :],
+                           x.shape[1])
+    else:
+        out = execute_schedule(sched, x, w)
+    return FabricResult(out=out, schedule=sched, cost=schedule_cost(sched))
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (walks the IR, prices with core.costmodel)
+# ---------------------------------------------------------------------------
+def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
+    """Roll one schedule up into energy (pJ) / time (us).
+
+    Event counts per tile task (transposed bit-serial layout):
+
+    * operand load: ``a`` moves ``kw * nbits`` bits once (broadcast
+      across columns happens inside the destination block), ``w`` moves
+      ``kw * nw * nbits`` bits; each travels a fabric hop when its home
+      is a storage-mode block, the spill path when off-fabric.
+    * storage-mode traffic: source rows read (``ceil(bits / row width)``
+      at the home block) plus destination rows written (the tile spans
+      ``kt * 2n`` rows of the compute block while it is still in storage
+      mode), plus ``ACC_BITS`` accumulator rows read back.
+    * compute: every *started* block burns ``program.cycles()``
+      compute-mode cycles; idle blocks in a partial round are never
+      started (per-block start lines) and burn nothing.  Rounds
+      serialize (lockstep launches), so the critical path still spans
+      every round regardless of occupancy.
+    """
+    cfg = sched.cfg
+    cycles = sched.program.cycles()
+    row_bits = cfg.cols
+
+    n_active = sum(len(r.tasks) for r in sched.rounds)
+    rows_touched = 0.0
+    fabric_bits = 0.0
+    spill_bits = 0.0
+    for rnd in sched.rounds:
+        for t in rnd.tasks:
+            kw, nw = t.k1 - t.k0, t.n1 - t.n0
+            a_bits = kw * sched.nbits
+            w_bits = kw * nw * sched.nbits
+            res_bits = ACC_BITS * nw
+            for bits, src in ((a_bits, t.x_src), (w_bits, t.w_src)):
+                if src >= 0:
+                    fabric_bits += bits
+                    rows_touched += math.ceil(bits / row_bits)  # src reads
+                else:
+                    spill_bits += bits
+            # result readback always crosses the fabric to the host edge
+            fabric_bits += res_bits
+            # dst writes while in storage mode + acc rows read back
+            rows_touched += sched.kt * 2 * sched.nbits + ACC_BITS
+
+    return costmodel.schedule_cost_rollup(
+        f"fabric/gemm{sched.M}x{sched.K}x{sched.N}/int{sched.nbits}",
+        n_blocks=cfg.n_blocks, n_compute=sched.n_compute,
+        n_storage=sched.n_storage, rounds=len(sched.rounds),
+        compute_block_cycles=float(n_active * cycles),
+        round_cycles=float(len(sched.rounds) * cycles),
+        storage_rows_touched=rows_touched,
+        fabric_bits_moved=fabric_bits, spill_bits_moved=spill_bits,
+        ops=sched.ops)
+
+
+# ---------------------------------------------------------------------------
+# Attention on the fabric (the paper's DL workload, via models/attention
+# shapes: q/k are (B, S, H, hd) exactly as produced by ``_qkv``)
+# ---------------------------------------------------------------------------
+def _quantize_sym(x: np.ndarray, bits: int):
+    """Symmetric per-tensor quantization to signed ``bits`` ints."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = max(float(np.abs(x).max()), 1e-8)
+    scale = amax / qmax
+    q = np.clip(np.round(x / scale), -qmax - 1, qmax).astype(np.int64)
+    return q, scale
+
+
+def fabric_attention_scores(q: np.ndarray, k: np.ndarray,
+                            cfg: FabricConfig = FabricConfig(),
+                            bits: int = 8):
+    """Attention score matmul ``q @ k^T`` per (batch, head) on the fabric.
+
+    q: ``(B, Sq, H, hd)``, k: ``(B, Sk, H, hd)`` floats (the
+    ``models.attention._qkv`` layout).  Each (batch, head) score tile is
+    one fabric GEMM of the *quantized* operands; scores come back
+    dequantized and pre-scaled by ``hd ** -0.5`` -- ready for the
+    softmax of :func:`repro.models.attention.chunked_attention`.
+
+    Returns ``(scores (B, Sq, H, Sk) float32, int_scores int64,
+    costs list[ScheduleCost])``.
+    """
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k, np.float32)
+    B, Sq, H, hd = q.shape
+    Bk, Sk, Hk, hdk = k.shape
+    if (B, H, hd) != (Bk, Hk, hdk):
+        raise ValueError(f"q {q.shape} vs k {k.shape}")
+
+    qq, sq = _quantize_sym(q, bits)
+    qk, sk = _quantize_sym(k, bits)
+    scores = np.zeros((B, Sq, H, Sk), np.float32)
+    int_scores = np.zeros((B, Sq, H, Sk), np.int64)
+    costs = []
+    for b in range(B):
+        for h in range(H):
+            res = fabric_matmul(qq[b, :, h, :], qk[b, :, h, :].T,
+                                nbits=bits, cfg=cfg, signed=True)
+            int_scores[b, :, h, :] = res.out
+            scores[b, :, h, :] = res.out * (sq * sk * hd ** -0.5)
+            costs.append(res.cost)
+    return scores, int_scores, costs
+
+
+class FabricLinearProbe:
+    """Run one decode step's linear projection on the simulated fabric.
+
+    Attached to :class:`repro.serve.engine.ServeEngine`, the probe takes
+    the engine's *live* per-step activations (the token embeddings of
+    the batch being decoded), quantizes activation and weight to
+    ``bits``, and runs the projection as a fabric-scheduled GEMM --
+    i.e. a small slice of a real decode step executes on the
+    cycle-accurate block grid, with a cost report per step.
+
+    The fabric simulator is an oracle, not a serving fast path, so the
+    probe only samples the first ``max_steps`` decode steps.
+    """
+
+    def __init__(self, w, cfg: FabricConfig = FabricConfig(),
+                 bits: int = 8, max_steps: int = 1):
+        self.w = np.asarray(w, np.float32)       # (d_in, d_out)
+        if self.w.ndim != 2:
+            raise ValueError(f"probe weight must be 2-D, got {self.w.shape}")
+        self.cfg = cfg
+        self.bits = bits
+        self.max_steps = max_steps
+        self.costs: list = []
+        self.outputs: list = []
+
+    @property
+    def done(self) -> bool:
+        return len(self.costs) >= self.max_steps
+
+    def observe(self, x) -> Optional[np.ndarray]:
+        """x: (B, d_in) float activation of the current decode step."""
+        if self.done:
+            return None
+        x = np.asarray(x, np.float32)
+        qx, sx = _quantize_sym(x, self.bits)
+        qw, sw = _quantize_sym(self.w, self.bits)
+        res = fabric_matmul(qx, qw, nbits=self.bits, cfg=self.cfg,
+                            signed=True)
+        y = res.out.astype(np.float32) * (sx * sw)
+        self.costs.append(res.cost)
+        self.outputs.append(y)
+        return y
+
+    def report(self) -> Optional[dict]:
+        if not self.costs:
+            return None
+        return combine_costs("fabric/decode_linear", self.costs).report()
+
+
+def combine_costs(name: str, costs) -> costmodel.ScheduleCost:
+    """Sum a list of :class:`ScheduleCost` (sequential launches)."""
+    if not costs:
+        raise ValueError("no costs to combine")
+    c0 = costs[0]
+    return costmodel.ScheduleCost(
+        name=name, n_blocks=c0.n_blocks,
+        n_compute=max(c.n_compute for c in costs),
+        n_storage=max(c.n_storage for c in costs),
+        rounds=sum(c.rounds for c in costs),
+        compute_block_cycles=sum(c.compute_block_cycles for c in costs),
+        round_cycles=sum(c.round_cycles for c in costs),
+        storage_rows_touched=sum(c.storage_rows_touched for c in costs),
+        fabric_bits_moved=sum(c.fabric_bits_moved for c in costs),
+        spill_bits_moved=sum(c.spill_bits_moved for c in costs),
+        ops=sum(c.ops for c in costs),
+        energy_compute_pj=sum(c.energy_compute_pj for c in costs),
+        energy_storage_pj=sum(c.energy_storage_pj for c in costs),
+        energy_wire_pj=sum(c.energy_wire_pj for c in costs))

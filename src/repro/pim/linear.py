@@ -14,6 +14,11 @@ Backends (``PimConfig.mode``):
 * ``popcount`` -- packed weights + AND/popcount bit-serial arithmetic
                   (PIM-faithful path).
 * ``ref``      -- pure-jnp oracle of the packed path (tests, CPU).
+* ``fabric``   -- the whole GEMM scheduled across a simulated Compute RAM
+                  block grid (``repro.pim.fabric``): storage/compute mode
+                  allocation, per-round block launches, exact integer
+                  arithmetic on the cycle-accurate simulator.  Host-side
+                  (numpy) -- an oracle/accounting path, not a jit path.
 
 Activations are dynamically quantized to int8 per call in packed modes
 (standard W4A8/W8A8 serving).  ``linear_apply`` is differentiable only
@@ -34,9 +39,12 @@ from repro.kernels import ref as kref
 
 @dataclasses.dataclass(frozen=True)
 class PimConfig:
-    mode: str = "off"            # off | ref | pallas | popcount
+    mode: str = "off"            # off | ref | pallas | popcount | fabric
     weight_bits: int = 4
     act_bits: int = 8
+    # fabric mode only: the block grid to schedule onto (a
+    # repro.pim.fabric.FabricConfig; None = that module's default grid)
+    fabric: Optional[object] = None
 
     @property
     def packed(self) -> bool:
@@ -78,6 +86,21 @@ def linear_apply(params: dict, x: jnp.ndarray, cfg: PimConfig) -> jnp.ndarray:
         ap = kops.pack_bitplanes(qx, cfg.act_bits, axis=1)
         raw = kops.popcount_matmul(ap, wp)
         acc = raw.astype(jnp.float32) * ws[None, :]
+    elif cfg.mode == "fabric":
+        import numpy as np
+
+        from repro.pim import fabric as fabric_mod
+
+        qw = kref.unpack_bitplanes(wp, axis=0, signed=True)   # (K, N) int32
+        fcfg = cfg.fabric if cfg.fabric is not None \
+            else fabric_mod.FabricConfig()
+        # both operands ride the wider precision's idot geometry; int4
+        # weights are in-range int8 values, so the arithmetic is exact
+        nbits = max(cfg.act_bits, cfg.weight_bits)
+        res = fabric_mod.fabric_matmul(
+            np.asarray(qx, np.int64), np.asarray(qw, np.int64),
+            nbits=nbits, cfg=fcfg, signed=True)
+        acc = jnp.asarray(res.out.astype(np.float32)) * ws[None, :]
     else:
         raise ValueError(cfg.mode)
 

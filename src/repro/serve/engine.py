@@ -1,5 +1,10 @@
 """Batched serving engine: prefill + decode with slot-based continuous
-batching (vLLM-style lite) and greedy/temperature sampling."""
+batching (vLLM-style lite) and greedy/temperature sampling.
+
+An optional ``fabric_probe`` (:class:`repro.pim.fabric.FabricLinearProbe`)
+routes one linear projection of the live decode step through the
+simulated Compute RAM block grid -- the paper's fabric executing a slice
+of real serving traffic, with per-step energy/time accounting."""
 
 from __future__ import annotations
 
@@ -25,12 +30,14 @@ class ServeEngine:
     finished slots are refilled from the queue (continuous batching)."""
 
     def __init__(self, model, params, batch_slots: int = 4,
-                 capacity: int = 256, temperature: float = 0.0):
+                 capacity: int = 256, temperature: float = 0.0,
+                 fabric_probe=None):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.capacity = capacity
         self.temperature = temperature
+        self.fabric_probe = fabric_probe
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros((batch_slots,), np.int32)
@@ -74,6 +81,11 @@ class ServeEngine:
         self._admit()
         if all(s is None for s in self.slots):
             return []
+        if self.fabric_probe is not None and not self.fabric_probe.done:
+            # this step's real activations (token embeddings of the
+            # batch) through the simulated Compute RAM fabric
+            x = self.model._embed(self.params, jnp.asarray(self.tokens))
+            self.fabric_probe.observe(np.asarray(x, np.float32)[:, 0, :])
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self.tokens),
             jnp.asarray(self.pos))
@@ -103,3 +115,9 @@ class ServeEngine:
         while self.queue or any(s is not None for s in self.slots):
             done.extend(self.step())
         return done
+
+    def fabric_report(self):
+        """Combined cost report of the fabric probe (None if unused)."""
+        if self.fabric_probe is None:
+            return None
+        return self.fabric_probe.report()

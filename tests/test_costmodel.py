@@ -65,6 +65,106 @@ def test_fig6_dot_product_claims():
     assert r72["compute_ram"].area_um2 / r40["compute_ram"].area_um2 < 1.1
 
 
+# ---------------------------------------------------------------------------
+# Entry-point pins: compare / cr_throughput_gops / wire_energy_fj
+# (paper Table III/IV methodology encoded as constants -- any drift in
+# the derivation chain moves these numbers)
+# ---------------------------------------------------------------------------
+def test_wire_energy_pinned():
+    """Keckler-style wire energy: bits x mm x 34 fJ/bit/mm x 4 (FPGA
+    switch factor).  One 40-bit BRAM row over the baseline average net
+    = 3264 fJ; the CR control nets are ~75x cheaper."""
+    assert cm.wire_energy_fj(40, cm.NET_LENGTH_BASE_MM) == \
+        pytest.approx(3264.0)
+    assert cm.wire_energy_fj(4, cm.NET_LENGTH_CR_MM) == \
+        pytest.approx(43.52)
+    assert cm.wire_energy_fj(0, cm.NET_LENGTH_BASE_MM) == 0.0
+    # fabric hop is strictly cheaper than the spill path per bit
+    assert cm.wire_energy_fj(1, cm.NET_LENGTH_FABRIC_MM) < \
+        cm.wire_energy_fj(1, cm.NET_LENGTH_SPILL_MM)
+
+
+def test_cr_throughput_gops_dot_pinned():
+    """Dot-product throughput from *executed* instruction sequences at
+    the compute-mode frequency (paper §V-D operating point)."""
+    assert cm.cr_throughput_gops("dot", "int4") == pytest.approx(0.501,
+                                                                 abs=0.02)
+    assert cm.cr_throughput_gops("dot", "int8") == pytest.approx(0.210,
+                                                                 abs=0.02)
+    assert cm.cr_throughput_gops("mul", "int4") == pytest.approx(0.811,
+                                                                 abs=0.03)
+    # wider geometry (§V-D, 72 cols) scales throughput ~linearly
+    r40 = cm.cr_throughput_gops("dot", "int4", cols=40, rows=512)
+    r72 = cm.cr_throughput_gops("dot", "int4", cols=72,
+                                rows=512 * 40 // 72)
+    assert r72 > r40
+
+
+def test_compare_record_is_self_consistent():
+    """compare() must expose both CircuitCosts and ratios derived from
+    them -- for every shipped baseline composition."""
+    for (op, prec) in cm.BASELINES:
+        r = cm.compare(op, prec)
+        base, cr = r["baseline"], r["compute_ram"]
+        assert r["area_ratio"] == pytest.approx(cr.area_um2 / base.area_um2)
+        assert r["energy_ratio"] == pytest.approx(
+            cr.energy_per_op_pj / base.energy_per_op_pj)
+        assert r["time_ratio"] == pytest.approx(
+            cr.time_per_op_ns / base.time_per_op_ns)
+        assert base.energy_pj > 0 and cr.energy_pj > 0
+        assert base.ops > 0 and cr.ops > 0
+
+
+# ---------------------------------------------------------------------------
+# Schedule-level roll-up (fabric scheduler accounting)
+# ---------------------------------------------------------------------------
+def _rollup(**kw):
+    base = dict(n_blocks=4, n_compute=2, n_storage=2, rounds=2,
+                compute_block_cycles=0.0, round_cycles=0.0,
+                storage_rows_touched=0.0, fabric_bits_moved=0.0,
+                spill_bits_moved=0.0, ops=100)
+    base.update(kw)
+    return cm.schedule_cost_rollup("t", **base)
+
+
+def test_schedule_rollup_compute_energy_pinned():
+    """1000 compute-mode block-cycles = 4429 pJ (compute activity 2.5x,
+    75% SRAM-fraction CR block -- same constants as ComputeRamDesign)."""
+    c = _rollup(compute_block_cycles=1000.0)
+    assert c.energy_compute_pj == pytest.approx(4429.0, rel=1e-3)
+    assert c.energy_storage_pj == 0 and c.energy_wire_pj == 0
+    assert c.energy_pj == pytest.approx(c.energy_compute_pj)
+
+
+def test_schedule_rollup_storage_and_wire():
+    c = _rollup(storage_rows_touched=1000.0, fabric_bits_moved=100.0,
+                spill_bits_moved=100.0)
+    # storage-mode row access at activity 0.1, 90% SRAM fraction
+    assert c.energy_storage_pj == pytest.approx(2037.3, rel=1e-3)
+    # 100 bits on each path; spill nets are NET_LENGTH_SPILL/FABRIC x
+    want_wire = (cm.wire_energy_fj(100, cm.NET_LENGTH_FABRIC_MM)
+                 + cm.wire_energy_fj(100, cm.NET_LENGTH_SPILL_MM)) / 1e3
+    assert c.energy_wire_pj == pytest.approx(want_wire)
+
+
+def test_schedule_rollup_time_model():
+    """Rounds serialize at the CR circuit frequency; storage traffic
+    overlaps row-by-row at the (faster) BRAM frequency."""
+    c = _rollup(round_cycles=1212.0, storage_rows_touched=922.9)
+    assert c.time_us == pytest.approx(1212.0 / cm.FREQ_CIRCUIT_CR_MHZ
+                                      + 1.0)
+    assert c.gops == pytest.approx(c.ops / c.time_us / 1e3)
+
+
+def test_schedule_rollup_report_roundtrip():
+    rep = _rollup(compute_block_cycles=10, storage_rows_touched=5,
+                  fabric_bits_moved=64).report()
+    assert rep["blocks"] == 4 and rep["rounds"] == 2 and rep["ops"] == 100
+    assert rep["energy_pj"] == pytest.approx(
+        rep["energy_compute_pj"] + rep["energy_storage_pj"]
+        + rep["energy_wire_pj"], abs=0.01)
+
+
 def test_energy_average_savings():
     """Paper headline: 'average savings of 80% in energy' -- holds for the
     ops whose cycle counts match the paper's (int add); our from-scratch

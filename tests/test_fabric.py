@@ -1,0 +1,316 @@
+"""Differential test harness for the fabric scheduler (docs/fabric.md).
+
+Oracle layering, cheapest-to-richest:
+
+1. **numpy** -- ground-truth integer arithmetic (``x @ w`` in int64);
+2. **cram_matmul** -- the single-shot per-tile primitive (one program per
+   tile, no grid, no residency);
+3. **fabric** -- the scheduled block grid (mode allocation + rounds);
+4. **pallas popcount** -- the TPU-native bit-plane kernel.
+
+Every layer must produce the *same integers*: the arithmetic is exact at
+every level, so any mismatch is a scheduling/packing bug, not tolerance.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.pim import cram, fabric
+from repro.pim.fabric import FabricConfig
+
+# small block geometry: tiny programs, shared compile cache across tests
+ROWS, COLS = 128, 8
+
+
+def _grid(n_blocks):
+    return FabricConfig(n_blocks=n_blocks, rows=ROWS, cols=COLS)
+
+
+def _signed_operands(rng, nbits, m, k, n):
+    lo, hi = -(1 << (nbits - 1)), 1 << (nbits - 1)
+    x = rng.integers(lo, hi, (m, k)).astype(np.int64)
+    w = rng.integers(lo, hi, (k, n)).astype(np.int64)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Differential matrix: fabric vs numpy across precision / shape / grid
+# ---------------------------------------------------------------------------
+_MATRIX = [
+    # (nbits, n_blocks, (M, K, N)) -- K/N/M deliberately not tile multiples
+    (4, 1, (3, 10, 11)),
+    (4, 4, (3, 10, 11)),
+    (4, 4, (1, 1, 1)),
+    (4, 4, (2, 20, 16)),       # exact tile multiples (kt=10, cols=8)
+    (4, 64, (5, 23, 17)),
+    (8, 1, (2, 7, 5)),
+    (8, 4, (2, 23, 5)),
+    (8, 64, (3, 9, 10)),
+]
+
+
+@pytest.mark.parametrize("nbits,blocks,shape", _MATRIX,
+                         ids=[f"int{n}-{b}blk-{'x'.join(map(str, s))}"
+                              for n, b, s in _MATRIX])
+def test_fabric_matches_numpy_signed(rng, nbits, blocks, shape):
+    m, k, n = shape
+    x, w = _signed_operands(rng, nbits, m, k, n)
+    res = fabric.fabric_matmul(x, w, nbits=nbits, cfg=_grid(blocks),
+                               signed=True)
+    np.testing.assert_array_equal(res.out, x @ w)
+    # the cost report is derived from the same executed IR
+    assert res.cost.ops == m * k * n
+    assert res.cost.energy_pj > 0 and res.cost.time_us > 0
+
+
+@pytest.mark.parametrize("nbits", [4, 8])
+def test_fabric_matches_numpy_unsigned_ragged(rng, nbits):
+    x = rng.integers(0, 1 << nbits, (3, 13)).astype(np.uint64)
+    w = rng.integers(0, 1 << nbits, (13, 11)).astype(np.uint64)
+    res = fabric.fabric_matmul(x, w, nbits=nbits, cfg=_grid(4))
+    np.testing.assert_array_equal(res.out, x.astype(np.int64)
+                                  @ w.astype(np.int64))
+
+
+def test_fabric_matches_cram_single_shot(rng):
+    """Scheduled grid == the single-shot per-tile primitive."""
+    x, w = _signed_operands(rng, 4, 3, 23, 11)
+    via_cram = cram.cram_matmul(x, w, n=4, rows=ROWS, cols=COLS,
+                                signed=True)
+    via_fabric = fabric.fabric_matmul(x, w, nbits=4, cfg=_grid(4),
+                                      signed=True).out
+    np.testing.assert_array_equal(via_cram, via_fabric)
+
+
+@pytest.mark.parametrize("nbits", [4, 8])
+def test_fabric_matches_pallas_popcount(rng, nbits):
+    """Fabric vs the Pallas bit-plane popcount kernel (K % 32 == 0)."""
+    m, k, n = 4, 32, 8
+    x, w = _signed_operands(rng, nbits, m, k, n)
+    ap = kref.pack_bitplanes(jnp.asarray(x, jnp.int32), nbits, axis=1)
+    wp = kref.pack_bitplanes(jnp.asarray(w, jnp.int32), nbits, axis=0)
+    via_pallas = np.asarray(kops.popcount_matmul(ap, wp))
+    via_fabric = fabric.fabric_matmul(x, w, nbits=nbits, cfg=_grid(4),
+                                      signed=True).out
+    np.testing.assert_array_equal(via_fabric, via_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR invariants
+# ---------------------------------------------------------------------------
+def test_schedule_structure_and_residency():
+    sched = fabric.schedule_gemm(5, 23, 17, 4, cfg=_grid(8), signed=True)
+    cfg = sched.cfg
+    assert len(sched.modes) == cfg.n_blocks
+    assert sched.n_compute >= cfg.min_compute_blocks
+    assert sched.n_compute + sched.n_storage == cfg.n_blocks
+
+    # storage capacity is never oversubscribed
+    used = [0] * sched.n_storage
+    for (ki, ni), home in sched.w_home.items():
+        kw = min(23, (ki + 1) * sched.kt) - ki * sched.kt
+        nw = min(17, (ni + 1) * cfg.cols) - ni * cfg.cols
+        if home >= 0:
+            used[home] += kw * nw * sched.nbits
+    for m, home in enumerate(sched.x_home):
+        if home >= 0:
+            used[home] += 23 * sched.nbits
+    assert all(u <= cfg.block_bits for u in used)
+
+    # every (m, k-tile, n-tile) unit appears exactly once, on a compute slot
+    seen = set()
+    for rnd in sched.rounds:
+        assert len(rnd.tasks) <= sched.n_compute
+        for t in rnd.tasks:
+            assert sched.modes[t.block] == "compute"
+            assert (t.m, t.k0, t.n0) not in seen
+            seen.add((t.m, t.k0, t.n0))
+    import math
+    assert len(seen) == 5 * math.ceil(23 / sched.kt) * math.ceil(17 / 8)
+
+
+def test_schedule_single_block_grid_spills_everything():
+    sched = fabric.schedule_gemm(2, 7, 5, 8, cfg=_grid(1))
+    assert sched.n_storage == 0 and sched.n_compute == 1
+    assert all(h == -1 for h in sched.x_home)
+    assert all(h == -1 for h in sched.w_home.values())
+    cost = fabric.schedule_cost(sched)
+    assert cost.spill_bits_moved > 0 and cost.fabric_bits_moved > 0
+
+
+def test_fabric_rejects_bad_operands(rng):
+    x = np.full((2, 3), 8, np.int64)          # out of int4 signed range
+    w = np.zeros((3, 2), np.int64)
+    with pytest.raises(ValueError, match="signed operands"):
+        fabric.fabric_matmul(x, w, nbits=4, cfg=_grid(2), signed=True)
+    sched = fabric.schedule_gemm(2, 3, 2, 4, cfg=_grid(2))
+    with pytest.raises(ValueError, match="do not match"):
+        fabric.execute_schedule(sched, np.zeros((9, 9), np.uint64),
+                                np.zeros((9, 9), np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# Attention through the scheduler (acceptance criterion: score matmul
+# end-to-end with a costmodel-derived report)
+# ---------------------------------------------------------------------------
+def test_attention_scores_end_to_end(rng):
+    B, Sq, Sk, H, hd = 1, 5, 7, 2, 16
+    q = rng.normal(size=(B, Sq, H, hd)).astype(np.float32)
+    k = rng.normal(size=(B, Sk, H, hd)).astype(np.float32)
+    scores, int_scores, costs = fabric.fabric_attention_scores(
+        q, k, cfg=_grid(4), bits=8)
+
+    # integer scores are bit-exact vs numpy on the quantized operands
+    qq, sq = fabric._quantize_sym(q, 8)
+    qk, sk = fabric._quantize_sym(k, 8)
+    want = np.einsum("bqhd,bchd->bqhc", qq, qk)
+    np.testing.assert_array_equal(int_scores, want)
+
+    # float scores approximate the fp32 attention scores (int8 quant)
+    ref = np.einsum("bqhd,bchd->bqhc", q, k) * hd ** -0.5
+    assert np.abs(scores - ref).max() < 0.05 * max(np.abs(ref).max(), 1)
+
+    # cost report: energy pJ / time us roll up through core.costmodel
+    total = fabric.combine_costs("attn_scores", costs)
+    assert total.ops == B * H * Sq * Sk * hd
+    rep = total.report()
+    assert rep["energy_pj"] > 0 and rep["time_us"] > 0
+    assert rep["energy_pj"] == pytest.approx(
+        rep["energy_compute_pj"] + rep["energy_storage_pj"]
+        + rep["energy_wire_pj"], rel=1e-6)
+
+
+def test_attention_value_matmul_through_fabric(rng):
+    """The second attention GEMM (probs @ V) also runs on the grid:
+    probs are unsigned (softmax output), V is signed."""
+    Sq, Sk, hd = 4, 6, 8
+    p = rng.random((Sq, Sk)).astype(np.float32)
+    p /= p.sum(axis=-1, keepdims=True)
+    v = rng.normal(size=(Sk, hd)).astype(np.float32)
+    qp = np.clip(np.round(p * 255), 0, 255).astype(np.int64)   # uint8 probs
+    qv, sv = fabric._quantize_sym(v, 8)
+    # both operands must share the idot geometry: run unsigned with the
+    # signed V biased through the schedule's zero-point algebra
+    res = fabric.fabric_matmul(qp, qv, nbits=9, cfg=_grid(4), signed=True)
+    np.testing.assert_array_equal(res.out, qp @ qv)
+
+
+# ---------------------------------------------------------------------------
+# PIM linear backend + serve probe
+# ---------------------------------------------------------------------------
+def test_linear_fabric_backend_equals_ref():
+    import jax
+
+    from repro.pim import PimConfig, linear_apply, linear_init, pack_linear
+
+    cfgf = PimConfig(mode="fabric", weight_bits=4, fabric=_grid(6))
+    cfgr = PimConfig(mode="ref", weight_bits=4)
+    dense = linear_init(jax.random.PRNGKey(0), 32, 8, cfgr)
+    packed = pack_linear(dense, cfgr)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32), jnp.bfloat16)
+    yr = linear_apply(packed, x, cfgr)
+    yf = linear_apply(packed, x, cfgf)
+    np.testing.assert_array_equal(np.asarray(yr, np.float32),
+                                  np.asarray(yf, np.float32))
+
+
+class _StubModel:
+    """Minimal model exposing the ServeEngine surface (fast probe test)."""
+
+    def __init__(self, vocab=11, d=16):
+        rng = np.random.default_rng(0)
+        self.embed = rng.normal(size=(vocab, d)).astype(np.float32)
+
+    def init_cache(self, b, cap):
+        return {"n": jnp.zeros((b,), jnp.int32)}
+
+    def _embed(self, params, tokens):
+        return jnp.asarray(self.embed)[tokens]
+
+    def prefill(self, params, tokens, capacity=None):
+        b, s = tokens.shape
+        logits = jnp.ones((b, s, self.embed.shape[0]))
+        return logits, {"n": jnp.zeros((1,), jnp.int32)}
+
+    def decode_step(self, params, caches, tokens, pos):
+        b = tokens.shape[0]
+        logits = jnp.ones((b, 1, self.embed.shape[0]))
+        return logits, caches
+
+
+def test_serve_engine_fabric_probe(rng):
+    from repro.pim.fabric import FabricLinearProbe
+    from repro.serve.engine import Request, ServeEngine
+
+    model = _StubModel()
+    w = rng.normal(size=(16, 6)).astype(np.float32)
+    probe = FabricLinearProbe(w, cfg=_grid(4), bits=8, max_steps=2)
+    eng = ServeEngine(model, params={}, batch_slots=2, capacity=8,
+                      fabric_probe=probe)
+    eng.add(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new=4))
+    done = eng.run()
+    assert len(done) == 1
+
+    rep = eng.fabric_report()
+    assert rep is not None and rep["energy_pj"] > 0
+    assert len(probe.costs) == 2                     # capped at max_steps
+    # probe output == quantized matmul of the live embeddings
+    y = probe.outputs[0]
+    assert y.shape == (2, 6) and np.isfinite(y).all()
+
+
+def test_serve_engine_without_probe_reports_none():
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(_StubModel(), params={}, batch_slots=1, capacity=8)
+    assert eng.fabric_report() is None
+
+
+# ---------------------------------------------------------------------------
+# cram boundary behaviour, example-based (the same edges the hypothesis
+# suite in test_fabric_property.py fuzzes -- these run even without
+# hypothesis installed)
+# ---------------------------------------------------------------------------
+def test_cram_signed_regression(rng):
+    """Regression for the signed two's-complement offset path: exact over
+    the full signed range, including the asymmetric minimum."""
+    for n in (4, 8):
+        lo, hi = -(1 << (n - 1)), 1 << (n - 1)
+        x = rng.integers(lo, hi, (3, 9)).astype(np.int64)
+        w = rng.integers(lo, hi, (9, 5)).astype(np.int64)
+        x.flat[0] = lo                              # asymmetric extreme
+        w.flat[0] = hi - 1
+        got = cram.cram_matmul(x, w, n=n, rows=ROWS, cols=COLS, signed=True)
+        np.testing.assert_array_equal(got, x @ w)
+        d = cram.cram_dot(w, w, n, rows=ROWS, signed=True)
+        np.testing.assert_array_equal(d, (w * w).sum(axis=0))
+
+
+def test_cram_wide_precision_acc_clamp(rng):
+    """int16 regression: idot's capacity exceeds what the 32-bit
+    accumulator can hold exactly, so the K-tiling must clamp
+    (cram.idot_tile) -- full-capacity max operands used to wrap."""
+    assert cram.idot_tile(16, 512) < cram.idot_geometry(16, 512)
+    T = cram.idot_geometry(16, ROWS)          # unclamped capacity
+    a = np.full((T, 2), (1 << 16) - 1, np.uint64)
+    got = cram.cram_dot(a, a, 16, rows=ROWS)
+    np.testing.assert_array_equal(got, (a * a).sum(axis=0))
+
+
+def test_cram_dot_capacity_edges(rng):
+    """K at exact idot tuple capacity -1 / exact / +1 (the +1 case tiles
+    into a second program launch), with operands at 2^n - 1."""
+    for n in (4, 8):
+        cap = cram.idot_geometry(n, ROWS)
+        for T in (cap - 1, cap, cap + 1):
+            a = rng.integers(0, 1 << n, (T, 3)).astype(np.uint64)
+            b = rng.integers(0, 1 << n, (T, 3)).astype(np.uint64)
+            a[0] = b[0] = (1 << n) - 1
+            got = cram.cram_dot(a, b, n, rows=ROWS)
+            np.testing.assert_array_equal(got, (a * b).sum(axis=0))

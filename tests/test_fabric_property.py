@@ -1,0 +1,88 @@
+"""Hypothesis property tests: cram_matmul / cram_dot boundary behaviour.
+
+Fuzzes the edges the fabric scheduler leans on: operands at ``2^n - 1``,
+K at exact ``idot_geometry`` capacity +/- 1, N at the paper's 40 block
+columns, and the full signed range (asymmetric two's-complement minimum
+included).  Example-based pins of the same edges live in
+``test_fabric.py`` so they run even without hypothesis installed.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.pim import cram, fabric  # noqa: E402
+from repro.pim.fabric import FabricConfig  # noqa: E402
+
+ROWS, COLS = 128, 8
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([-1, 0, 1]))
+def test_prop_cram_dot_capacity_edge(seed, n, delta):
+    """K at exact idot tuple capacity -1 / exact / +1 (the +1 case tiles
+    into a second program launch) stays exact, including max operands."""
+    rng = np.random.default_rng(seed)
+    cap = cram.idot_geometry(n, ROWS)
+    T = max(1, cap + delta)
+    a = rng.integers(0, 1 << n, (T, 3)).astype(np.uint64)
+    b = rng.integers(0, 1 << n, (T, 3)).astype(np.uint64)
+    a[0] = b[0] = (1 << n) - 1                    # operands at 2^n - 1
+    got = cram.cram_dot(a, b, n, rows=ROWS)
+    np.testing.assert_array_equal(got, (a * b).sum(axis=0))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from([4, 8]))
+def test_prop_cram_dot_all_max_operands(n):
+    """Worst-case accumulation: every operand at 2^n - 1 for a full
+    capacity tile -- the bounded carry-ripple proof obligation."""
+    cap = cram.idot_geometry(n, ROWS)
+    a = np.full((cap, 2), (1 << n) - 1, np.uint64)
+    got = cram.cram_dot(a, a, n, rows=ROWS)
+    np.testing.assert_array_equal(got, (a * a).sum(axis=0))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([39, 40, 41]))
+def test_prop_cram_matmul_block_width_edge(seed, n_out):
+    """N at exactly the paper's 40 block columns, one short, and one past
+    (forces a second ragged N tile)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, (2, 5)).astype(np.uint64)
+    w = rng.integers(0, 16, (5, n_out)).astype(np.uint64)
+    got = cram.cram_matmul(x, w, n=4, rows=ROWS, cols=40)
+    np.testing.assert_array_equal(got, x @ w)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8]))
+def test_prop_cram_matmul_signed(seed, n):
+    """Signed path is exact over the full two's-complement range."""
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (n - 1)), 1 << (n - 1)
+    m, k, nn = (int(v) for v in rng.integers(1, 6, 3))
+    x = rng.integers(lo, hi, (m, k)).astype(np.int64)
+    w = rng.integers(lo, hi, (k, nn)).astype(np.int64)
+    x.flat[0] = lo                                  # asymmetric extreme
+    w.flat[0] = hi - 1
+    got = cram.cram_matmul(x, w, n=n, rows=ROWS, cols=COLS, signed=True)
+    np.testing.assert_array_equal(got, x @ w)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8), st.integers(1, 12),
+       st.integers(1, 12))
+def test_prop_fabric_gemm_exact_any_shape(seed, m, k, n):
+    """The scheduled fabric GEMM is exact for arbitrary ragged shapes."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 8, (m, k)).astype(np.int64)
+    w = rng.integers(-8, 8, (k, n)).astype(np.int64)
+    cfg = FabricConfig(n_blocks=4, rows=ROWS, cols=COLS)
+    res = fabric.fabric_matmul(x, w, nbits=4, cfg=cfg, signed=True)
+    np.testing.assert_array_equal(res.out, x @ w)
