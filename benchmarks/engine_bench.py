@@ -7,11 +7,13 @@ Writes the executor numbers to ``BENCH_engine.json`` so regressions in
 the compiled path show up as a diff, not just a log line.
 
 CLI: ``python benchmarks/engine_bench.py [--quick] [--json PATH]
-[--min-idot-speedup X]``.  ``--quick`` runs a reduced program set with
-fewer replays (CI tier-1 budget); ``--min-idot-speedup`` exits non-zero
-if any ``idot`` compiled-vs-scan speedup falls below the floor, which is
-how CI fails loudly on executor regressions (ROADMAP "benchmark
-hygiene").
+[--min-idot-speedup X] [--max-compile-s S]``.  ``--quick`` runs a
+reduced program set with fewer replays (CI tier-1 budget);
+``--min-idot-speedup`` exits non-zero if any ``idot`` compiled-vs-scan
+speedup falls below the floor, which is how CI fails loudly on executor
+regressions (ROADMAP "benchmark hygiene"); ``--max-compile-s`` exits
+non-zero if the float-program compile (bf16 add through the jaxpr-level
+CSE pass) exceeds the ceiling -- the compile-time regression guard.
 """
 
 import argparse
@@ -127,6 +129,35 @@ def bench_blocks(print_fn=print, rows=512, cols=40, quick=False):
     return results
 
 
+def bench_float_compile(print_fn=print, quick=False):
+    """Compile-time regression guard for float programs.
+
+    Times one cold ``compile_program`` of the bf16 adder (the heaviest
+    flat-lowered program family, ~5-10 s each on a fast host) with the
+    jaxpr-level CSE pass forced on, and records the pass's equation
+    counts.  ``--max-compile-s`` gates on the seconds.
+    """
+    rows = 256 if quick else 512
+    prog, lay = programs.bf16_add(rows=rows)
+    engine.clear_compile_cache()              # force a cold compile
+    state = harness.make_jax_state(np.zeros((rows, 40), bool))
+    t0 = time.perf_counter()
+    fn = engine.compile_program(prog, rows, 40, cse=True)
+    jax.block_until_ready(fn(state).array)
+    t_compile = time.perf_counter() - t0
+    stats = engine.last_cse_stats or {}
+    print_fn(f"engine/float_compile_bf16add/s,{t_compile:.2f},"
+             f"rows={rows};cycles={prog.cycles()};"
+             f"cse_removed={stats.get('removed', 0)}")
+    return {
+        "program": f"bf16_add@{rows}", "cycles": prog.cycles(),
+        "compile_s": round(t_compile, 2),
+        "cse_eqns_before": stats.get("eqns_before", 0),
+        "cse_eqns_after": stats.get("eqns_after", 0),
+        "cse_removed": stats.get("removed", 0),
+    }
+
+
 def run(print_fn=print, json_path=BENCH_JSON, quick=False):
     if not quick:
         for (op, prec), gen in programs.GENERATORS.items():
@@ -143,6 +174,7 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "quick": quick,
         "executors": bench_executors(print_fn, quick=quick),
         "blocks": bench_blocks(print_fn, quick=quick),
+        "float_compile": bench_float_compile(print_fn, quick=quick),
     }
     pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
     print_fn(f"engine/bench_json,{json_path},written")
@@ -156,6 +188,21 @@ def check_idot_speedup(payload: dict, floor: float) -> list:
             if k.startswith("idot") and v["speedup"] < floor]
 
 
+def check_compile_time(payload: dict, ceiling: float) -> list:
+    """Return a failure string when the float compile exceeds the cap.
+
+    A payload with no measurement is a FAILURE, not a pass -- the gate
+    must not silently disarm if the bench stops measuring."""
+    fc = payload.get("float_compile", {})
+    s = fc.get("compile_s")
+    if s is None:
+        return ["float_compile/compile_s missing from payload "
+                "(gate has nothing to check)"]
+    if s <= ceiling:
+        return []
+    return [f"{fc.get('program', 'float')}: compile {s:.1f}s > {ceiling}s"]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -166,14 +213,24 @@ def main(argv=None) -> int:
                     metavar="X",
                     help="fail (exit 1) if any idot compiled-vs-scan "
                     "speedup drops below X")
+    ap.add_argument("--max-compile-s", type=float, default=None,
+                    metavar="S",
+                    help="fail (exit 1) if the float-program compile "
+                    "takes longer than S seconds")
     args = ap.parse_args(argv)
     payload = run(json_path=args.json, quick=args.quick)
+    bad = []
     if args.min_idot_speedup is not None:
-        bad = check_idot_speedup(payload, args.min_idot_speedup)
-        if bad:
-            print("SPEEDUP REGRESSION: " + "; ".join(bad))
-            return 1
+        bad += check_idot_speedup(payload, args.min_idot_speedup)
+    if args.max_compile_s is not None:
+        bad += check_compile_time(payload, args.max_compile_s)
+    if bad:
+        print("BENCH REGRESSION: " + "; ".join(bad))
+        return 1
+    if args.min_idot_speedup is not None:
         print(f"idot speedups >= {args.min_idot_speedup}x: OK")
+    if args.max_compile_s is not None:
+        print(f"float compile <= {args.max_compile_s}s: OK")
     return 0
 
 

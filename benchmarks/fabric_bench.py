@@ -1,0 +1,177 @@
+"""Fabric scheduler benchmarks: overlap model, batched replay, autotuner.
+
+Three numbers the PR 3 fabric work is accountable for, written to
+``BENCH_fabric.json`` (ROADMAP "benchmark hygiene" -- JSON artifact +
+CI floor, mirroring ``engine_bench.py``):
+
+* **modeled overlap** -- serial vs double-buffered
+  (``ScheduleCost.overlapped_cycles``) latency for representative
+  schedules; overlapped must be strictly below serial whenever a
+  schedule has >= 2 rounds.
+* **batched replay wall-clock** -- per-round ``execute_schedule`` vs
+  batching every round into one ``engine.execute_blocks`` launch
+  (rounds ride the compiled wide-block path as extra block-columns).
+  This is the real CPU-time speedup; ``--min-batch-speedup X`` exits
+  non-zero when it regresses below the floor (the CI gate).
+* **autotuner** -- ``search_schedule`` argmin vs the default geometry,
+  priced by the costmodel (no execution), plus the chosen config.
+
+CLI: ``python benchmarks/fabric_bench.py [--quick] [--json PATH]
+[--min-batch-speedup X]``.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from repro.pim import fabric
+from repro.pim.fabric import FabricConfig
+
+BENCH_JSON = "BENCH_fabric.json"
+
+
+def _min_of(f, n=10):
+    """Min-of-n wall clock (load-noise resistant); f() warmed up twice."""
+    f(), f()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_modeled(print_fn=print, quick=False):
+    """Serial vs overlapped modeled cycles (pure costmodel, no sim)."""
+    cases = [
+        ("int4_16blk", 8, 96, 64, 4, FabricConfig(n_blocks=16)),
+        ("int8_8blk", 4, 128, 40, 8, FabricConfig(n_blocks=8)),
+    ]
+    if not quick:
+        cases.append(
+            ("int8_64blk", 16, 256, 80, 8, FabricConfig(n_blocks=64)))
+    results = {}
+    for name, M, K, N, nbits, cfg in cases:
+        sched = fabric.schedule_gemm(M, K, N, nbits, cfg=cfg, signed=True)
+        cost = fabric.schedule_cost(sched)
+        speedup = cost.overlap_speedup
+        results[name] = {
+            "shape": f"{M}x{K}x{N}", "nbits": nbits,
+            "blocks": cfg.n_blocks, "rounds": len(sched.rounds),
+            "serial_cycles": round(cost.serial_cycles_, 1),
+            "overlapped_cycles": round(cost.overlapped_cycles_, 1),
+            "overlap_speedup": round(speedup, 3),
+        }
+        print_fn(f"fabric/overlap_{name}/speedup,{speedup:.2f},"
+                 f"serial={cost.serial_cycles_:.0f};"
+                 f"overlapped={cost.overlapped_cycles_:.0f};"
+                 f"rounds={len(sched.rounds)}")
+        if len(sched.rounds) >= 2:
+            assert cost.overlapped_cycles_ < cost.serial_cycles_, name
+    return results
+
+
+def bench_replay(print_fn=print, quick=False):
+    """Wall-clock: per-round execute_schedule vs batched multi-round
+    replay (one compiled wide-block launch for all rounds)."""
+    rng = np.random.default_rng(0)
+    # all-compute grid: every operand spills, many small rounds -- the
+    # per-launch dispatch overhead the batched path amortizes
+    cfg = FabricConfig(n_blocks=4, rows=128, cols=8, min_compute_blocks=4)
+    M, K, N, nbits = (16, 40, 16, 4) if quick else (32, 80, 16, 4)
+    sched = fabric.schedule_gemm(M, K, N, nbits, cfg=cfg)
+    x = rng.integers(0, 1 << nbits, (M, K), dtype=np.uint64)
+    w = rng.integers(0, 1 << nbits, (K, N), dtype=np.uint64)
+
+    out_serial = fabric.execute_schedule(sched, x, w, batch_rounds=False)
+    out_batch = fabric.execute_schedule(sched, x, w, batch_rounds=True)
+    np.testing.assert_array_equal(out_serial, out_batch)   # bit-identical
+
+    n = 5 if quick else 10
+    t_serial = _min_of(
+        lambda: fabric.execute_schedule(sched, x, w, batch_rounds=False), n)
+    t_batch = _min_of(
+        lambda: fabric.execute_schedule(sched, x, w, batch_rounds=True), n)
+    speedup = t_serial / t_batch
+    print_fn(f"fabric/batched_replay/speedup,{speedup:.2f},"
+             f"rounds={len(sched.rounds)};serial_ms={t_serial*1e3:.2f};"
+             f"batched_ms={t_batch*1e3:.2f}")
+    return {
+        "shape": f"{M}x{K}x{N}", "nbits": nbits,
+        "rounds": len(sched.rounds), "n_compute": sched.n_compute,
+        "per_round_ms": round(t_serial * 1e3, 3),
+        "batched_ms": round(t_batch * 1e3, 3),
+        "speedup": round(speedup, 2),
+    }
+
+
+def bench_autotune(print_fn=print, quick=False):
+    """search_schedule argmin vs the default geometry (costmodel only)."""
+    M, K, N, nbits = 8, 128, 64, 8
+    base = FabricConfig(n_blocks=16)
+    default_cost = fabric.schedule_cost(
+        fabric.schedule_gemm(M, K, N, nbits, cfg=base, signed=True))
+    sr = fabric.search_schedule(M, K, N, nbits, base=base, signed=True)
+    tuned = sr.cost
+    gain = default_cost.overlapped_cycles_ / tuned.overlapped_cycles_
+    cfg = sr.schedule.cfg
+    print_fn(f"fabric/autotune/gain,{gain:.2f},"
+             f"pick={cfg.rows}x{cfg.cols}mc{cfg.min_compute_blocks};"
+             f"candidates={len(sr.candidates)}")
+    return {
+        "shape": f"{M}x{K}x{N}", "nbits": nbits, "blocks": base.n_blocks,
+        "candidates": len(sr.candidates),
+        "default_overlapped_cycles": round(
+            default_cost.overlapped_cycles_, 1),
+        "tuned_overlapped_cycles": round(tuned.overlapped_cycles_, 1),
+        "tuned_geometry": f"{cfg.rows}x{cfg.cols}",
+        "tuned_min_compute": cfg.min_compute_blocks,
+        "gain": round(gain, 3),
+    }
+
+
+def run(print_fn=print, json_path=BENCH_JSON, quick=False):
+    payload = {
+        "quick": quick,
+        "modeled": bench_modeled(print_fn, quick=quick),
+        "replay": bench_replay(print_fn, quick=quick),
+        "autotune": bench_autotune(print_fn, quick=quick),
+    }
+    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
+    print_fn(f"fabric/bench_json,{json_path},written")
+    return payload
+
+
+def check_batch_speedup(payload: dict, floor: float):
+    """Return failure strings when the batched replay misses the floor."""
+    s = payload["replay"]["speedup"]
+    return [] if s >= floor else [f"batched replay: {s:.2f}x < {floor}x"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller schedules + fewer replays (CI tier-1)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help=f"output path (default {BENCH_JSON})")
+    ap.add_argument("--min-batch-speedup", type=float, default=None,
+                    metavar="X",
+                    help="fail (exit 1) if batched-vs-per-round replay "
+                    "speedup drops below X")
+    args = ap.parse_args(argv)
+    payload = run(json_path=args.json, quick=args.quick)
+    if args.min_batch_speedup is not None:
+        bad = check_batch_speedup(payload, args.min_batch_speedup)
+        if bad:
+            print("SPEEDUP REGRESSION: " + "; ".join(bad))
+            return 1
+        print(f"batched replay speedup >= {args.min_batch_speedup}x: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

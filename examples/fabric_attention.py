@@ -29,7 +29,25 @@ def main():
           f"({rep['energy_compute_pj']:.0f} compute / "
           f"{rep['energy_storage_pj']:.0f} storage / "
           f"{rep['energy_wire_pj']:.0f} wire), "
-          f"{rep['time_us']:.1f} us, {rep['gops']:.3f} GOPS\n")
+          f"{rep['time_us']:.1f} us, {rep['gops']:.3f} GOPS")
+    # serial vs overlapped: round i+1's loads double-buffer against
+    # round i's compute (docs/fabric.md, "Overlapped rounds")
+    print(f"  latency: serial {rep['serial_cycles']:.0f} cyc "
+          f"({rep['time_us']:.1f} us) -> overlapped "
+          f"{rep['overlapped_cycles']:.0f} cyc "
+          f"({rep['time_us_overlapped']:.1f} us), "
+          f"{rep['overlap_speedup']:.2f}x\n")
+
+    # -- the schedule autotuner picks the grid split ------------------------
+    from repro.pim import search_schedule
+    sr = search_schedule(x.shape[0], x.shape[1], w.shape[1], 4,
+                         base=cfg, signed=True)
+    print(sr.describe())
+    tuned = sr.cost.report()
+    print(f"  autotuned: {tuned['overlapped_cycles']:.0f} overlapped cyc "
+          f"vs default {rep['overlapped_cycles']:.0f} "
+          f"({rep['overlapped_cycles'] / tuned['overlapped_cycles']:.2f}x)"
+          "\n")
 
     # -- attention scores: q @ k^T per (batch, head) ------------------------
     B, Sq, Sk, H, hd = 1, 8, 8, 2, 32

@@ -956,3 +956,132 @@ def lower(program: isa.Program, rows: int, cols: int, packed: bool):
     if plan is not None:
         return _lower_lanes(program, rows, cols, packed, plan)
     return _lower_flat(program, rows, cols, packed)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level CSE.  Big flat-lowered programs (the float sequences: no
+# lane plan, thousands of micro-ops) trace to jaxprs with many repeated
+# pure equations -- identical selects, mask extractions, pack/unpack
+# ladders.  XLA eventually CSEs them too, but only after ingesting the
+# full graph; deduplicating *before* jit hands XLA a smaller program and
+# cuts compile time.  The pass is a single forward walk: equations are
+# keyed on (primitive, canonicalized invars, params) and replayed
+# through ``eval_jaxpr``; anything it cannot prove safe to key (effects,
+# sub-jaxpr params, exotic literals) is simply kept, so correctness
+# never depends on coverage.
+# ---------------------------------------------------------------------------
+def _freeze(v):
+    """Hashable snapshot of an eqn param value; None = give up."""
+    if isinstance(v, (bool, int, float, str, bytes, type(None), type)):
+        return v
+    if isinstance(v, (tuple, list)):
+        parts = tuple(_freeze(x) for x in v)
+        return None if any(p is None for p in parts) else (type(v).__name__,
+                                                           parts)
+    if isinstance(v, dict):
+        items = tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+        return None if any(p is None for _, p in items) else ("dict", items)
+    if isinstance(v, np.dtype):
+        return ("dtype", v.str)
+    if isinstance(v, np.ndarray):
+        if v.size > 256:
+            return None
+        return ("ndarray", v.dtype.str, v.shape, v.tobytes())
+    try:
+        hash(v)
+    except TypeError:
+        return None
+    # jaxprs / closures / trackers: identity is the only safe equality
+    return ("id", id(v))
+
+
+def _literal_key(lit):
+    val = lit.val
+    if isinstance(val, (bool, int, float, complex)):
+        return ("lit", str(lit.aval), val)
+    arr = np.asarray(val)
+    if arr.size > 256:
+        return None
+    return ("lit", str(lit.aval), arr.dtype.str, arr.shape, arr.tobytes())
+
+
+def cse_jaxpr(closed):
+    """Common-subexpression-eliminate a ClosedJaxpr (pure eqns only).
+
+    Returns ``(new_closed_jaxpr, n_removed)``.
+    """
+    import jax.core as jcore
+
+    jaxpr = closed.jaxpr
+    subst: Dict = {}
+
+    def canon(v):
+        if isinstance(v, jcore.Literal):
+            return v
+        return subst.get(v, v)
+
+    table: Dict = {}
+    new_eqns = []
+    removed = 0
+    for eqn in jaxpr.eqns:
+        invars = [canon(v) for v in eqn.invars]
+        key = None
+        if not eqn.effects:
+            parts = [_freeze(dict(eqn.params))]
+            for v in invars:
+                parts.append(_literal_key(v) if isinstance(v, jcore.Literal)
+                             else v)
+            if all(p is not None for p in parts):
+                key = (eqn.primitive, tuple(parts))
+        if key is not None:
+            hit = table.get(key)
+            # every output the duplicate defines must exist on the kept
+            # eqn (a DropVar there has no value to forward)
+            if hit is not None and all(
+                    isinstance(old, jcore.DropVar)
+                    or not isinstance(new, jcore.DropVar)
+                    for old, new in zip(eqn.outvars, hit)):
+                for old, new in zip(eqn.outvars, hit):
+                    if not isinstance(old, jcore.DropVar):
+                        subst[old] = new
+                removed += 1
+                continue
+        eqn = eqn.replace(invars=invars)
+        new_eqns.append(eqn)
+        if key is not None:
+            table[key] = eqn.outvars
+    new_jaxpr = jaxpr.replace(
+        eqns=new_eqns, outvars=[canon(v) for v in jaxpr.outvars])
+    return jcore.ClosedJaxpr(new_jaxpr, closed.consts), removed
+
+
+def apply_cse(fn, *example_args):
+    """Wrap ``fn`` so it evaluates through a CSE'd jaxpr (un-jitted).
+
+    ``example_args`` are pytrees of arrays or ``jax.ShapeDtypeStruct``
+    giving the call signature to trace.  On ANY failure the original
+    ``fn`` is returned untouched -- the pass is an optimization, never a
+    correctness dependency.  The returned callable carries a
+    ``_cse_stats`` dict (eqn counts) for benchmarks.
+    """
+    import jax.core as jcore
+
+    try:
+        closed, out_shape = jax.make_jaxpr(
+            fn, return_shape=True)(*example_args)
+        n_before = len(closed.jaxpr.eqns)
+        new_closed, removed = cse_jaxpr(closed)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+
+        def cse_fn(*args):
+            flat = jax.tree_util.tree_leaves(args)
+            outs = jcore.eval_jaxpr(new_closed.jaxpr, new_closed.consts,
+                                    *flat)
+            return jax.tree_util.tree_unflatten(out_tree, outs)
+
+        cse_fn._cse_stats = {"eqns_before": n_before,
+                             "eqns_after": n_before - removed,
+                             "removed": removed}
+        return cse_fn
+    except Exception:                                   # pragma: no cover
+        return fn

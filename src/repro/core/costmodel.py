@@ -257,6 +257,13 @@ def compare(op: str, precision: str, cr_cols: int = 40) -> dict:
 # the counts into energy/time with the same constants as the per-block
 # model, so per-block and fabric numbers are directly comparable.
 # ---------------------------------------------------------------------------
+# Storage-mode row accesses run at the (faster) BRAM frequency; one row
+# access therefore costs this many CR-circuit-frequency cycle
+# equivalents.  Having one cycle unit lets serial and overlapped latency
+# be compared directly.
+STORAGE_ROW_CR_CYCLES = FREQ_CIRCUIT_CR_MHZ / FREQ_BRAM_MHZ
+
+
 @dataclasses.dataclass(frozen=True)
 class ScheduleCost:
     """Energy/time roll-up of one executed fabric schedule."""
@@ -276,6 +283,16 @@ class ScheduleCost:
     energy_compute_pj: float
     energy_storage_pj: float
     energy_wire_pj: float
+    # Latency model (CR-circuit-frequency cycle units; storage rows are
+    # converted via STORAGE_ROW_CR_CYCLES).  ``serial_cycles`` is every
+    # round's load + compute + drain laid end to end -- identical to the
+    # legacy ``time_us`` roll-up by construction.  ``overlapped_cycles``
+    # is the double-buffered pipeline: round i+1's operand loads (and
+    # round i's accumulator drain) hide behind round i's compute.  0.0
+    # means "not modeled" (roll-ups that never saw per-round structure);
+    # accessors fall back to the serial number.
+    serial_cycles: float = 0.0
+    overlapped_cycles: float = 0.0
 
     @property
     def energy_pj(self) -> float:
@@ -289,6 +306,28 @@ class ScheduleCost:
         (faster) storage frequency."""
         return (self.round_cycles / FREQ_CIRCUIT_CR_MHZ
                 + self.storage_rows_touched / FREQ_BRAM_MHZ)
+
+    @property
+    def serial_cycles_(self) -> float:
+        """serial_cycles, falling back to the legacy roll-up when the
+        schedule walk did not provide per-round structure."""
+        if self.serial_cycles > 0:
+            return self.serial_cycles
+        return (self.round_cycles
+                + self.storage_rows_touched * STORAGE_ROW_CR_CYCLES)
+
+    @property
+    def overlapped_cycles_(self) -> float:
+        return (self.overlapped_cycles if self.overlapped_cycles > 0
+                else self.serial_cycles_)
+
+    @property
+    def time_us_overlapped(self) -> float:
+        return self.overlapped_cycles_ / FREQ_CIRCUIT_CR_MHZ
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.serial_cycles_ / max(self.overlapped_cycles_, 1e-12)
 
     @property
     def energy_per_op_pj(self) -> float:
@@ -309,6 +348,10 @@ class ScheduleCost:
             "energy_storage_pj": round(self.energy_storage_pj, 3),
             "energy_wire_pj": round(self.energy_wire_pj, 3),
             "time_us": round(self.time_us, 4),
+            "serial_cycles": round(self.serial_cycles_, 1),
+            "overlapped_cycles": round(self.overlapped_cycles_, 1),
+            "time_us_overlapped": round(self.time_us_overlapped, 4),
+            "overlap_speedup": round(self.overlap_speedup, 3),
             "energy_per_op_pj": round(self.energy_per_op_pj, 4),
             "gops": round(self.gops, 3),
         }
@@ -319,7 +362,8 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
                          compute_block_cycles: float, round_cycles: float,
                          storage_rows_touched: float,
                          fabric_bits_moved: float, spill_bits_moved: float,
-                         ops: int) -> ScheduleCost:
+                         ops: int, serial_cycles: float = 0.0,
+                         overlapped_cycles: float = 0.0) -> ScheduleCost:
     """Price a fabric schedule's event counts (see :class:`ScheduleCost`).
 
     * compute energy: every (active compute block, cycle) pair burns the
@@ -329,6 +373,11 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
       dual-mode claim;
     * wire energy: operand/result bits times the fabric hop length
       (block-to-block) or the spill length (off-fabric), Keckler-style.
+
+    ``serial_cycles`` / ``overlapped_cycles`` carry the per-round
+    pipeline latency model when the caller walked the round structure
+    (:func:`repro.pim.fabric.schedule_cost`); left at 0.0, the
+    :class:`ScheduleCost` accessors fall back to the serial roll-up.
     """
     e_cr_compute = COMPUTE_MODE_ACTIVITY_FACTOR * \
         block_energy_per_cycle_fj(AREA_CR_UM2, 0.75)
@@ -346,6 +395,7 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
         energy_wire_pj=(
             wire_energy_fj(fabric_bits_moved, NET_LENGTH_FABRIC_MM)
             + wire_energy_fj(spill_bits_moved, NET_LENGTH_SPILL_MM)) / 1e3,
+        serial_cycles=serial_cycles, overlapped_cycles=overlapped_cycles,
     )
 
 

@@ -235,24 +235,131 @@ pack_cols = compiler.pack_cols
 unpack_cols = compiler.unpack_cols
 
 
+class _LRUCache:
+    """Bounded mapping with LRU eviction (insertion + touch order).
+
+    The compiled-program cache used to be an unbounded dict; a
+    long-running serve process sweeping many (program, geometry, blocks)
+    shapes -- e.g. the fabric autotuner probing grids -- would grow it
+    without limit, each entry pinning a jitted executable.  Eviction
+    only drops the *host* handle; re-compiling an evicted program is
+    always correct, just slower.
+    """
+
+    def __init__(self, limit: int):
+        from collections import OrderedDict
+        self._d: "OrderedDict" = OrderedDict()
+        self.limit = limit
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        v = self._d.get(key)
+        if v is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._d.move_to_end(key)
+        return v
+
+    def put(self, key, value):
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.limit:
+            self._d.popitem(last=False)
+            self.evictions += 1
+        return value
+
+    def clear(self):
+        self._d.clear()
+
+    def __len__(self):
+        return len(self._d)
+
+    def __contains__(self, key):
+        return key in self._d
+
+
 # Module-level compiled-program cache: repeated replays (the dominant
 # test cost) compile once per (program content, geometry, representation).
-_COMPILE_CACHE: dict = {}
+COMPILE_CACHE_LIMIT = 64
+_COMPILE_CACHE = _LRUCache(COMPILE_CACHE_LIMIT)
+
+# Programs whose expanded stream is at least this many micro-ops go
+# through the jaxpr-level CSE pass before jit (the float sequences; see
+# compiler.apply_cse).  Small programs skip it -- the extra abstract
+# trace would cost more than it saves.
+CSE_MIN_CYCLES = 1500
+
+#: stats of the most recent CSE run ({"eqns_before", "eqns_after",
+#: "removed"}) -- benchmark introspection, None until a pass runs.
+last_cse_stats = None
+
+
+def set_compile_cache_limit(limit: int) -> None:
+    """Re-bound the compiled-program cache (evicts LRU down to fit)."""
+    if limit < 1:
+        raise ValueError("cache limit must be >= 1")
+    _COMPILE_CACHE.limit = limit
+    while len(_COMPILE_CACHE._d) > limit:
+        _COMPILE_CACHE._d.popitem(last=False)
+        _COMPILE_CACHE.evictions += 1
+
+
+def compile_cache_stats() -> dict:
+    return {"size": len(_COMPILE_CACHE), "limit": _COMPILE_CACHE.limit,
+            "hits": _COMPILE_CACHE.hits, "misses": _COMPILE_CACHE.misses,
+            "evictions": _COMPILE_CACHE.evictions}
+
+
+def _use_cse(program: isa.Program, cse) -> bool:
+    """Resolve the cse flag (None = auto by expanded-stream size).
+
+    ``expand()`` is memoized on the Program, so this is O(1) on the hot
+    cache-lookup path.
+    """
+    if cse is not None:
+        return bool(cse)
+    return len(program.expand()) >= CSE_MIN_CYCLES
+
+
+def _cse_pass(fn, blocks: int, rows: int, cols: int) -> "callable":
+    """Run the jaxpr CSE pass over a lowered fn (see compiler.apply_cse)."""
+    global last_cse_stats
+    shape = (rows, cols) if blocks == 0 else (blocks, rows, cols)
+    csh = shape[:-2] + shape[-1:]
+    example = CRState(
+        array=jax.ShapeDtypeStruct(shape, jnp.bool_),
+        carry=jax.ShapeDtypeStruct(csh, jnp.bool_),
+        tag=jax.ShapeDtypeStruct(csh, jnp.bool_))
+    out = compiler.apply_cse(fn, example)
+    last_cse_stats = getattr(out, "_cse_stats", None)
+    return out
 
 
 def compile_program(program: isa.Program, rows: int = 512, cols: int = 40,
-                    *, packed: bool = False):
+                    *, packed: bool = False, cse: bool | None = None):
     """Compile ``program`` for a fixed geometry into a jitted fn.
 
-    Returns ``fn(CRState) -> CRState``.  Results are cached module-wide;
-    the key includes :meth:`Program.fingerprint` so same-named programs
-    with different nodes never collide.
+    Returns ``fn(CRState) -> CRState``.  Results are cached module-wide
+    in a bounded LRU (see :data:`COMPILE_CACHE_LIMIT` /
+    :func:`set_compile_cache_limit`); the key includes
+    :meth:`Program.fingerprint` so same-named programs with different
+    nodes never collide.  ``cse=None`` auto-enables the jaxpr-level CSE
+    pass for programs of >= :data:`CSE_MIN_CYCLES` micro-ops; the
+    resolved flag is part of the cache key (forced on/off variants never
+    alias).
     """
-    key = (program.name, rows, cols, bool(packed), program.fingerprint())
+    use_cse = _use_cse(program, cse)
+    key = (program.name, rows, cols, bool(packed), use_cse,
+           program.fingerprint())
     fn = _COMPILE_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(compiler.lower(program, rows, cols, packed))
-        _COMPILE_CACHE[key] = fn
+        fn = compiler.lower(program, rows, cols, packed)
+        if use_cse:
+            fn = _cse_pass(fn, 0, rows, cols)
+        fn = _COMPILE_CACHE.put(key, jax.jit(fn))
     return fn
 
 
@@ -300,8 +407,9 @@ def execute_blocks(program: isa.Program, states: CRState,
     """
     if executor == "compiled":
         blocks, rows, cols = states.array.shape
+        use_cse = _use_cse(program, None)
         key = ("blocks", program.name, blocks, rows, cols, bool(packed),
-               program.fingerprint())
+               use_cse, program.fingerprint())
         fn = _COMPILE_CACHE.get(key)
         if fn is None:
             inner = compiler.lower(program, rows, blocks * cols, packed)
@@ -319,7 +427,9 @@ def execute_blocks(program: isa.Program, states: CRState,
                     carry=out.carry.reshape(blocks, cols),
                     tag=out.tag.reshape(blocks, cols))
 
-            fn = _COMPILE_CACHE[key] = jax.jit(wide_fn)
+            if use_cse:
+                wide_fn = _cse_pass(wide_fn, blocks, rows, cols)
+            fn = _COMPILE_CACHE.put(key, jax.jit(wide_fn))
         return fn(states)
     if executor not in ("unroll", "scan"):
         raise ValueError(

@@ -1,4 +1,5 @@
 from .linear import PimConfig, linear_init, linear_apply, pack_linear  # noqa
 from .cram import cram_dot, cram_matmul, idot_geometry  # noqa
 from .fabric import (FabricConfig, FabricLinearProbe, Schedule,  # noqa
-                     fabric_attention_scores, fabric_matmul, schedule_gemm)
+                     SearchResult, TileLoad, fabric_attention_scores,
+                     fabric_matmul, schedule_gemm, search_schedule)

@@ -29,14 +29,30 @@ Pipeline
      idle blocks burn no compute energy); the simulator still steps
      them on zeros purely as a wide-batch convenience, and their
      results are discarded.
+   * **loads** -- each round carries an explicit operand-load stage
+     (:class:`TileLoad`): the tiles its tasks read, where they live,
+     and which blocks they fan out to.  Contiguous tasks sharing a
+     weight tile coalesce into ONE broadcast load (single
+     multi-destination net).  The load/compute dependency is what the
+     cost model's double-buffered ``overlapped_cycles`` pipeline hides.
 
 2. :func:`execute_schedule` runs the rounds **exactly** on the block
-   simulator and accumulates per-tile accumulators into the output.
+   simulator and accumulates per-tile accumulators into the output.  By
+   default all rounds are *batched* into one compiled wide-block launch
+   (rounds become extra block-columns) -- the simulator-side wall-clock
+   fast path, bit-identical to the per-round loop.
 
 3. :func:`schedule_cost` walks the same IR and prices it with
    :mod:`repro.core.costmodel` (compute-mode cycles, storage-mode row
    traffic, and block-to-block / spill wire energy for every operand
-   move), returning a :class:`repro.core.costmodel.ScheduleCost`.
+   move), returning a :class:`repro.core.costmodel.ScheduleCost` whose
+   ``serial_cycles`` / ``overlapped_cycles`` pin the overlap win.
+
+4. :func:`search_schedule` autotunes: it enumerates ``FabricConfig``
+   geometries x storage/compute splits, prices every candidate through
+   the same roll-up (no execution), and returns the argmin schedule --
+   wired into ``PimConfig(mode="fabric", fabric_autotune=True)`` and
+   the serving fabric probe.
 
 Signed operands use the same zero-point offset algebra as
 :func:`repro.pim.cram.cram_matmul` (the blocks are unsigned-only
@@ -94,9 +110,34 @@ class TileTask:
 
 
 @dataclasses.dataclass(frozen=True)
+class TileLoad:
+    """One operand fetch that must retire before its round's compute.
+
+    The load stage is explicit in the IR so the cost model can price
+    round *i+1*'s loads as double-buffered against round *i*'s compute
+    (``ScheduleCost.overlapped_cycles``), and so consecutive tasks
+    sharing a weight tile coalesce into ONE fetch broadcast to several
+    destination blocks (``len(dsts) > 1``): a single multi-destination
+    net, priced once in the wire-energy split.
+    """
+    kind: str                  # "x" (activation slice) | "w" (weight tile)
+    key: Tuple[int, ...]       # ("x": (m, k0)) | ("w": (k0, n0))
+    src: int                   # storage block holding the payload (-1 = spill)
+    dsts: Tuple[int, ...]      # destination compute blocks (broadcast if >1)
+    bits: int                  # payload bits of ONE copy
+
+
+@dataclasses.dataclass(frozen=True)
 class Round:
-    """One lockstep ``execute_blocks`` launch over the compute blocks."""
+    """One lockstep ``execute_blocks`` launch over the compute blocks.
+
+    ``loads`` is the round's operand-load stage: every tile a task reads
+    is covered by exactly one load of the same round (the dependency the
+    overlap model pipelines).  Broadcast groups are contiguous task runs
+    sharing a weight tile.
+    """
     tasks: Tuple[TileTask, ...]
+    loads: Tuple[TileLoad, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +204,13 @@ def schedule_gemm(M: int, K: int, N: int, nbits: int,
     """Plan ``(M, K) @ (K, N)`` onto the block grid (no execution)."""
     if min(M, K, N) < 1:
         raise ValueError(f"degenerate GEMM {M}x{K}x{N}")
+    if cram.idot_geometry(nbits, cfg.rows, ACC_BITS) < 1:
+        # idot_tile clamps to >= 1, which would silently plan a program
+        # that does not fit the array (accumulator + scratch + 1 tuple
+        # exceed the rows); fail at schedule time instead of compile time
+        raise ValueError(
+            f"geometry {cfg.rows}x{cfg.cols} cannot host an idot{nbits} "
+            f"program (too few rows)")
     kt = cram.idot_tile(nbits, cfg.rows, ACC_BITS)
     k_tiles = math.ceil(K / kt)
     n_tiles = math.ceil(N / cfg.cols)
@@ -196,8 +244,8 @@ def schedule_gemm(M: int, K: int, N: int, nbits: int,
     x_home = tuple(place(x_row_bits) for _ in range(M))
 
     # --- tile tasks -> lockstep rounds of n_compute ------------------------
-    # (ki, ni, m) order: consecutive tasks share a weight tile, so a
-    # future broadcast optimization can coalesce their fetches.
+    # (ki, ni, m) order: consecutive tasks share a weight tile, so the
+    # load builder below coalesces their fetches into one broadcast.
     units = [(m, ki, ni) for ki in range(k_tiles) for ni in range(n_tiles)
              for m in range(M)]
     rounds = []
@@ -209,28 +257,80 @@ def schedule_gemm(M: int, K: int, N: int, nbits: int,
                 k0=ki * kt, k1=min(K, (ki + 1) * kt),
                 n0=ni * cfg.cols, n1=min(N, (ni + 1) * cfg.cols),
                 x_src=x_home[m], w_src=w_home[(ki, ni)]))
-        rounds.append(Round(tasks=tuple(tasks)))
+        rounds.append(Round(tasks=tuple(tasks),
+                            loads=_round_loads(tasks, nbits)))
 
     return Schedule(cfg=cfg, nbits=nbits, signed=signed, M=M, K=K, N=N,
                     kt=kt, modes=modes, x_home=x_home, w_home=w_home,
                     rounds=tuple(rounds))
 
 
+def _round_loads(tasks, nbits: int) -> Tuple[TileLoad, ...]:
+    """Build one round's load stage, coalescing broadcastable fetches.
+
+    A *contiguous* run of tasks reading the same weight tile (the
+    (ki, ni, m) unit order makes sharers adjacent) becomes one
+    :class:`TileLoad` with several destinations -- the payload crosses
+    the fabric once on a multi-destination net.  Activation slices get
+    the same treatment, keyed ``(m, k0)`` -- the K-slice matters: two
+    tasks reading different K-ranges of one row fetch different
+    payloads.  Runs coalesce mainly at ``M == 1`` (one slice feeding
+    several n-tiles); elsewhere ``m`` varies fastest, so runs are
+    singletons.
+    """
+    loads: list = []
+    last = {}                      # kind -> index of most recent load
+    for t in tasks:
+        kw = t.k1 - t.k0
+        for kind, key, src, bits in (
+                ("x", (t.m, t.k0), t.x_src, kw * nbits),
+                ("w", (t.k0, t.n0), t.w_src, kw * (t.n1 - t.n0) * nbits)):
+            i = last.get(kind)
+            if i is not None and loads[i].key == key:
+                loads[i] = dataclasses.replace(
+                    loads[i], dsts=loads[i].dsts + (t.block,))
+            else:
+                last[kind] = len(loads)
+                loads.append(TileLoad(kind=kind, key=key, src=src,
+                                      dsts=(t.block,), bits=bits))
+    return tuple(loads)
+
+
 # ---------------------------------------------------------------------------
 # Exact execution on the block simulator
 # ---------------------------------------------------------------------------
+# Cap on blocks per batched launch: bounds host memory for huge
+# schedules (rounds are chunked; the final chunk is zero-padded so one
+# compiled wide fn serves every chunk of a schedule).
+MAX_BATCH_BLOCKS = 512
+
+
 def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
-                     executor: Optional[str] = None) -> np.ndarray:
+                     executor: Optional[str] = None,
+                     batch_rounds: Optional[bool] = None,
+                     max_batch_blocks: int = MAX_BATCH_BLOCKS) -> np.ndarray:
     """Run the schedule's rounds exactly; operands already unsigned.
 
     x_u ``(M, K)``, w_u ``(K, N)`` unsigned ``< 2^nbits``.  Returns the
     raw uint64 accumulator image ``(M, N)`` (callers apply the signed
     zero-point correction; see :func:`fabric_matmul`).
+
+    ``batch_rounds`` (default: on for the compiled executor) replays ALL
+    rounds as one ``engine.execute_blocks`` launch: every round replays
+    the same compiled program, and the compiled wide-block path treats
+    blocks as extra columns, so R rounds of B blocks are exactly one
+    launch of R*B blocks.  One dispatch instead of R -- bit-identical to
+    the per-round loop (blocks never interact), and the wall-clock win
+    the fabric benchmark gates on.  Launches are chunked at
+    ``max_batch_blocks`` blocks (last chunk zero-padded to the chunk
+    shape so a single compiled fn serves all chunks).
     """
     import jax.numpy as jnp
 
     cfg = sched.cfg
     executor = executor or cfg.executor
+    if batch_rounds is None:
+        batch_rounds = executor == "compiled" and len(sched.rounds) > 1
     x_u = np.asarray(x_u, np.uint64)
     w_u = np.asarray(w_u, np.uint64)
     if x_u.shape != (sched.M, sched.K) or w_u.shape != (sched.K, sched.N):
@@ -242,27 +342,67 @@ def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
     prog, lay = programs.idot(sched.nbits, rows=cfg.rows, tuples=sched.kt)
     n_compute = sched.n_compute
     out = np.zeros((sched.M, sched.N), np.uint64)
-    zero = np.zeros((sched.kt, cfg.cols), np.uint64)
 
-    for rnd in sched.rounds:
-        arrs = np.zeros((n_compute, cfg.rows, cfg.cols), bool)
-        for t in rnd.tasks:
-            a = zero.copy()
-            b = zero.copy()
+    def pack_blocks(tasks_slots, n_slots: int) -> np.ndarray:
+        """Vectorized pack: all (task, block-slot) pairs of one launch.
+
+        Bit-plane transposition runs once per bit over every block at
+        once (numpy broadcasting) instead of once per task -- identical
+        images to ``harness.pack_state`` per block, but the host-side
+        cost no longer scales with task count.
+        """
+        a_vals = np.zeros((n_slots, sched.kt, cfg.cols), np.uint64)
+        b_vals = np.zeros((n_slots, sched.kt, cfg.cols), np.uint64)
+        for t, slot in tasks_slots:
             kw, nw = t.k1 - t.k0, t.n1 - t.n0
-            a[:kw, :] = x_u[t.m, t.k0:t.k1][:, None]   # broadcast to cols
-            b[:kw, :nw] = w_u[t.k0:t.k1, t.n0:t.n1]
-            arrs[t.block - sched.n_storage] = harness.pack_state(
-                lay, {"a": a, "b": b}, cfg.cols)
+            a_vals[slot, :kw, :] = x_u[t.m, t.k0:t.k1][:, None]  # -> cols
+            b_vals[slot, :kw, :nw] = w_u[t.k0:t.k1, t.n0:t.n1]
+        arrs = np.zeros((n_slots, cfg.rows, cfg.cols), bool)
+        bases = np.array([lay.base(i) for i in range(sched.kt)])
+        for name, vals in (("a", a_vals), ("b", b_vals)):
+            off, width = lay.fields[name]
+            for i in range(width):
+                arrs[:, bases + off + i, :] = \
+                    ((vals >> np.uint64(i)) & np.uint64(1)).astype(bool)
+        return arrs
+
+    def unpack_accs(res: np.ndarray) -> np.ndarray:
+        """(blocks, rows, cols) result image -> (blocks, cols) accs."""
+        acc = np.zeros((res.shape[0], res.shape[2]), np.uint64)
+        for i in range(lay.acc_bits):
+            acc |= res[:, i, :].astype(np.uint64) << np.uint64(i)
+        return acc
+
+    def launch(arrs: np.ndarray) -> np.ndarray:
+        blocks = arrs.shape[0]
         states = engine.CRState(
             array=jnp.asarray(arrs),
-            carry=jnp.zeros((n_compute, cfg.cols), bool),
-            tag=jnp.ones((n_compute, cfg.cols), bool))
+            carry=jnp.zeros((blocks, cfg.cols), bool),
+            tag=jnp.ones((blocks, cfg.cols), bool))
         res = np.asarray(
             engine.execute_blocks(prog, states, executor=executor).array)
-        for t in rnd.tasks:
-            acc = harness.unpack_acc(res[t.block - sched.n_storage], lay)
-            out[t.m, t.n0:t.n1] += acc[: t.n1 - t.n0]
+        return unpack_accs(res)
+
+    if not batch_rounds:
+        for rnd in sched.rounds:
+            slots = [(t, t.block - sched.n_storage) for t in rnd.tasks]
+            acc = launch(pack_blocks(slots, n_compute))
+            for t, slot in slots:
+                out[t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
+        return out
+
+    # batched replay: rounds become extra block-columns of one launch;
+    # the last chunk stays zero-padded to the chunk shape so ONE
+    # compiled wide fn serves every chunk
+    R = len(sched.rounds)
+    chunk_r = max(1, min(R, max(max_batch_blocks, n_compute) // n_compute))
+    for c0 in range(0, R, chunk_r):
+        chunk = sched.rounds[c0:c0 + chunk_r]
+        slots = [(t, ri * n_compute + t.block - sched.n_storage)
+                 for ri, rnd in enumerate(chunk) for t in rnd.tasks]
+        acc = launch(pack_blocks(slots, chunk_r * n_compute))
+        for t, slot in slots:
+            out[t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
     return out
 
 
@@ -275,28 +415,45 @@ class FabricResult:
 
 def fabric_matmul(x, w, nbits: int = 4,
                   cfg: FabricConfig = FabricConfig(),
-                  signed: bool = False) -> FabricResult:
+                  signed: bool = False, *,
+                  schedule: Optional[Schedule] = None,
+                  batch_rounds: Optional[bool] = None) -> FabricResult:
     """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
 
     Bit-exact vs ``x @ w`` in int64 for any operand in range; the cost
     report prices the *executed* schedule (same IR), so correctness and
     accounting can never drift apart.
+
+    ``schedule`` reuses a pre-built plan (e.g. the
+    :func:`search_schedule` argmin) instead of re-planning; its shape /
+    precision must match the operands.  ``batch_rounds`` is forwarded to
+    :func:`execute_schedule`.
     """
     x = np.asarray(x)
     w = np.asarray(w)
-    sched = schedule_gemm(x.shape[0], x.shape[1], w.shape[1], nbits,
-                          cfg=cfg, signed=signed)
+    if schedule is None:
+        sched = schedule_gemm(x.shape[0], x.shape[1], w.shape[1], nbits,
+                              cfg=cfg, signed=signed)
+    else:
+        sched = schedule
+        if (sched.M, sched.K, sched.N) != (x.shape[0], x.shape[1],
+                                           w.shape[1]) \
+                or sched.nbits != nbits or sched.signed != signed:
+            raise ValueError(
+                f"schedule {sched.M}x{sched.K}x{sched.N}/int{sched.nbits}"
+                f"{'s' if sched.signed else 'u'} does not match operands "
+                f"{x.shape} @ {w.shape} int{nbits}{'s' if signed else 'u'}")
     if signed:
         cram._check_range((x, w), nbits, signed=True)
         xu, off = cram._bias_signed(x, nbits)
         wu, _ = cram._bias_signed(w, nbits)
-        raw = execute_schedule(sched, xu, wu)
+        raw = execute_schedule(sched, xu, wu, batch_rounds=batch_rounds)
         out = cram._unbias(raw, off,
                            xu.sum(axis=1, dtype=np.int64)[:, None],
                            wu.sum(axis=0, dtype=np.int64)[None, :],
                            x.shape[1])
     else:
-        out = execute_schedule(sched, x, w)
+        out = execute_schedule(sched, x, w, batch_rounds=batch_rounds)
     return FabricResult(out=out, schedule=sched, cost=schedule_cost(sched))
 
 
@@ -306,56 +463,200 @@ def fabric_matmul(x, w, nbits: int = 4,
 def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
     """Roll one schedule up into energy (pJ) / time (us).
 
-    Event counts per tile task (transposed bit-serial layout):
+    Event counts per round (transposed bit-serial layout):
 
-    * operand load: ``a`` moves ``kw * nbits`` bits once (broadcast
-      across columns happens inside the destination block), ``w`` moves
-      ``kw * nw * nbits`` bits; each travels a fabric hop when its home
-      is a storage-mode block, the spill path when off-fabric.
+    * operand load: each :class:`TileLoad` moves its payload bits ONCE,
+      regardless of how many destinations the broadcast fans out to --
+      the fetch is a single multi-destination net (fabric hop when the
+      home is a storage-mode block, the spill path when off-fabric) and
+      one read stream at the source.
     * storage-mode traffic: source rows read (``ceil(bits / row width)``
-      at the home block) plus destination rows written (the tile spans
-      ``kt * 2n`` rows of the compute block while it is still in storage
-      mode), plus ``ACC_BITS`` accumulator rows read back.
+      at the home block, once per load) plus destination rows written
+      per task (the tile spans ``kt * 2n`` rows of the compute block
+      while it is still in storage mode), plus ``ACC_BITS`` accumulator
+      rows read back per task (the drain stage).
     * compute: every *started* block burns ``program.cycles()``
       compute-mode cycles; idle blocks in a partial round are never
       started (per-block start lines) and burn nothing.  Rounds
       serialize (lockstep launches), so the critical path still spans
       every round regardless of occupancy.
+
+    Latency (CR-cycle units, storage rows converted at the BRAM/CR
+    frequency ratio): ``serial_cycles`` lays every round's load ->
+    compute -> drain end to end.  ``overlapped_cycles`` double-buffers:
+    round *i+1*'s loads and round *i*'s drain run during round *i*'s
+    compute, so each pipeline stage costs ``max(compute, next_load +
+    drain)`` -- strictly less than serial for any schedule with >= 2
+    rounds (the hidden work is positive), identical for 1 round.
     """
     cfg = sched.cfg
     cycles = sched.program.cycles()
     row_bits = cfg.cols
 
     n_active = sum(len(r.tasks) for r in sched.rounds)
-    rows_touched = 0.0
     fabric_bits = 0.0
     spill_bits = 0.0
+    load_rows = []                 # per round: src reads + dst writes
+    drain_rows = []                # per round: accumulator readback
     for rnd in sched.rounds:
+        lr = 0.0
+        for ld in rnd.loads:
+            if ld.src >= 0:
+                fabric_bits += ld.bits
+                lr += math.ceil(ld.bits / row_bits)        # src reads, once
+            else:
+                spill_bits += ld.bits
         for t in rnd.tasks:
-            kw, nw = t.k1 - t.k0, t.n1 - t.n0
-            a_bits = kw * sched.nbits
-            w_bits = kw * nw * sched.nbits
-            res_bits = ACC_BITS * nw
-            for bits, src in ((a_bits, t.x_src), (w_bits, t.w_src)):
-                if src >= 0:
-                    fabric_bits += bits
-                    rows_touched += math.ceil(bits / row_bits)  # src reads
-                else:
-                    spill_bits += bits
             # result readback always crosses the fabric to the host edge
-            fabric_bits += res_bits
-            # dst writes while in storage mode + acc rows read back
-            rows_touched += sched.kt * 2 * sched.nbits + ACC_BITS
+            fabric_bits += ACC_BITS * (t.n1 - t.n0)
+            # dst writes while the compute block is still in storage mode
+            lr += sched.kt * 2 * sched.nbits
+        load_rows.append(lr)
+        drain_rows.append(float(len(rnd.tasks) * ACC_BITS))
+    rows_touched = sum(load_rows) + sum(drain_rows)
+
+    ratio = costmodel.STORAGE_ROW_CR_CYCLES
+    R = len(sched.rounds)
+    serial = sum(load_rows[r] * ratio + cycles + drain_rows[r] * ratio
+                 for r in range(R))
+    overlapped = load_rows[0] * ratio
+    for r in range(R - 1):
+        overlapped += max(float(cycles),
+                          (load_rows[r + 1] + drain_rows[r]) * ratio)
+    overlapped += cycles + drain_rows[R - 1] * ratio
 
     return costmodel.schedule_cost_rollup(
         f"fabric/gemm{sched.M}x{sched.K}x{sched.N}/int{sched.nbits}",
         n_blocks=cfg.n_blocks, n_compute=sched.n_compute,
-        n_storage=sched.n_storage, rounds=len(sched.rounds),
+        n_storage=sched.n_storage, rounds=R,
         compute_block_cycles=float(n_active * cycles),
-        round_cycles=float(len(sched.rounds) * cycles),
+        round_cycles=float(R * cycles),
         storage_rows_touched=rows_touched,
         fabric_bits_moved=fabric_bits, spill_bits_moved=spill_bits,
-        ops=sched.ops)
+        ops=sched.ops, serial_cycles=serial, overlapped_cycles=overlapped)
+
+
+# ---------------------------------------------------------------------------
+# Schedule autotuner: enumerate FabricConfig geometries x storage/compute
+# splits, price each candidate with the (cheap, pure-Python) costmodel
+# roll-up -- NO execution -- and return the argmin schedule.
+# ---------------------------------------------------------------------------
+#: Paper §V-D block geometries (same 20 Kb capacity, different aspect).
+GEOMETRY_CHOICES: Tuple[Tuple[int, int], ...] = tuple(
+    sorted(costmodel.GEOMETRIES))
+
+#: Objectives the search can minimize -> ScheduleCost accessor.
+OBJECTIVES = {
+    "overlapped_cycles": "overlapped_cycles_",
+    "serial_cycles": "serial_cycles_",
+    "time_us": "time_us",
+    "energy_pj": "energy_pj",
+    "energy_per_op_pj": "energy_per_op_pj",
+}
+
+# bounded memo (shared LRU implementation with the compile cache)
+_SEARCH_MEMO = engine._LRUCache(128)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Argmin of a schedule search plus the full priced candidate table."""
+    schedule: Schedule
+    cost: costmodel.ScheduleCost
+    objective: str
+    candidates: Tuple[dict, ...]     # one row per priced candidate
+
+    @property
+    def config(self) -> FabricConfig:
+        return self.schedule.cfg
+
+    def describe(self) -> str:
+        c = self.schedule.cfg
+        return (f"search[{self.objective}]: {len(self.candidates)} "
+                f"candidate(s) -> {c.rows}x{c.cols} "
+                f"min_compute={c.min_compute_blocks} "
+                f"({getattr(self.cost, OBJECTIVES[self.objective]):.0f})")
+
+
+def _split_choices(n_blocks: int) -> Tuple[int, ...]:
+    """min_compute_blocks candidates: sweep the storage/compute split."""
+    raw = {1, n_blocks // 4, n_blocks // 2, (3 * n_blocks) // 4, n_blocks}
+    return tuple(sorted(x for x in raw if 1 <= x <= n_blocks))
+
+
+def search_schedule(M: int, K: int, N: int, nbits: int, *,
+                    base: FabricConfig = FabricConfig(),
+                    signed: bool = False,
+                    geometries: Optional[Tuple[Tuple[int, int], ...]] = None,
+                    splits: Optional[Tuple[int, ...]] = None,
+                    objective: str = "overlapped_cycles") -> SearchResult:
+    """Search ``FabricConfig`` geometries x tiling splits for one GEMM.
+
+    Every candidate is planned with :func:`schedule_gemm` and priced
+    with :func:`schedule_cost` -- pure Python on the IR, no simulator
+    execution -- so the search is cheap enough to run per serving shape.
+    The argmin schedule is returned ready for :func:`fabric_matmul`
+    (``schedule=``).
+
+    ``geometries`` defaults to the base grid's geometry plus the paper
+    §V-D choices (:data:`GEOMETRY_CHOICES`).  Callers that will
+    *execute* the winner on the simulator may want to pin ``geometries``
+    to the base geometry only: each new (nbits, rows, kt) shape compiles
+    a fresh program (seconds), whereas split-only tuning reuses compiled
+    programs.  ``splits`` defaults to a sweep of
+    ``min_compute_blocks`` over the grid (:func:`_split_choices`).
+
+    Results are memoized (bounded LRU) -- serving calls the search once
+    per (shape, grid), not once per token.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {sorted(OBJECTIVES)}")
+    geometries = tuple(geometries) if geometries is not None else \
+        tuple(dict.fromkeys(((base.rows, base.cols),) + GEOMETRY_CHOICES))
+    splits = tuple(splits) if splits is not None else \
+        _split_choices(base.n_blocks)
+
+    key = (M, K, N, nbits, signed, base.n_blocks, base.executor,
+           geometries, splits, objective)
+    hit = _SEARCH_MEMO.get(key)
+    if hit is not None:
+        return hit
+
+    attr = OBJECTIVES[objective]
+    best = None
+    best_val = None
+    rows_out = []
+    for rows, cols in geometries:
+        for mcb in splits:
+            if mcb > base.n_blocks:
+                continue
+            cfg = FabricConfig(n_blocks=base.n_blocks, rows=rows, cols=cols,
+                               executor=base.executor,
+                               min_compute_blocks=mcb)
+            try:
+                sched = schedule_gemm(M, K, N, nbits, cfg=cfg, signed=signed)
+            except ValueError:
+                continue               # geometry can't host the program
+            cost = schedule_cost(sched)
+            val = float(getattr(cost, attr))
+            rows_out.append({
+                "rows": rows, "cols": cols, "min_compute": mcb,
+                "n_compute": sched.n_compute, "n_storage": sched.n_storage,
+                "rounds": len(sched.rounds), "kt": sched.kt,
+                "objective": round(val, 3),
+                "serial_cycles": round(cost.serial_cycles_, 1),
+                "overlapped_cycles": round(cost.overlapped_cycles_, 1),
+                "energy_pj": round(cost.energy_pj, 3),
+            })
+            if best_val is None or val < best_val:
+                best, best_val = (sched, cost), val
+    if best is None:
+        raise ValueError(
+            f"no candidate geometry can schedule {M}x{K}x{N} int{nbits}")
+    return _SEARCH_MEMO.put(key, SearchResult(
+        schedule=best[0], cost=best[1], objective=objective,
+        candidates=tuple(rows_out)))
 
 
 # ---------------------------------------------------------------------------
@@ -419,22 +720,46 @@ class FabricLinearProbe:
 
     The fabric simulator is an oracle, not a serving fast path, so the
     probe only samples the first ``max_steps`` decode steps.
+
+    ``autotune=True`` runs :func:`search_schedule` on the first observed
+    activation shape and serves every sampled step from the argmin
+    schedule -- serving picks its grid split automatically.  The search
+    is restricted to the probe's own block geometry by default (split
+    sweep only: executing a new geometry would compile a new program
+    mid-serve); pass ``search_geometries`` to widen it.
     """
 
     def __init__(self, w, cfg: FabricConfig = FabricConfig(),
-                 bits: int = 8, max_steps: int = 1):
+                 bits: int = 8, max_steps: int = 1,
+                 autotune: bool = False,
+                 search_geometries: Optional[tuple] = None):
         self.w = np.asarray(w, np.float32)       # (d_in, d_out)
         if self.w.ndim != 2:
             raise ValueError(f"probe weight must be 2-D, got {self.w.shape}")
         self.cfg = cfg
         self.bits = bits
         self.max_steps = max_steps
+        self.autotune = autotune
+        self.search_geometries = search_geometries
+        self.search: Optional[SearchResult] = None
         self.costs: list = []
         self.outputs: list = []
 
     @property
     def done(self) -> bool:
         return len(self.costs) >= self.max_steps
+
+    def _schedule_for(self, M: int, K: int, N: int) -> Optional[Schedule]:
+        if not self.autotune:
+            return None
+        if self.search is None or \
+                (self.search.schedule.M, self.search.schedule.K,
+                 self.search.schedule.N) != (M, K, N):
+            geoms = self.search_geometries if self.search_geometries \
+                is not None else ((self.cfg.rows, self.cfg.cols),)
+            self.search = search_schedule(M, K, N, self.bits, base=self.cfg,
+                                          signed=True, geometries=geoms)
+        return self.search.schedule
 
     def observe(self, x) -> Optional[np.ndarray]:
         """x: (B, d_in) float activation of the current decode step."""
@@ -443,17 +768,30 @@ class FabricLinearProbe:
         x = np.asarray(x, np.float32)
         qx, sx = _quantize_sym(x, self.bits)
         qw, sw = _quantize_sym(self.w, self.bits)
+        sched = self._schedule_for(qx.shape[0], qx.shape[1], qw.shape[1])
         res = fabric_matmul(qx, qw, nbits=self.bits, cfg=self.cfg,
-                            signed=True)
+                            signed=True, schedule=sched)
         y = res.out.astype(np.float32) * (sx * sw)
         self.costs.append(res.cost)
         self.outputs.append(y)
         return y
 
+    def config_summary(self) -> dict:
+        """The grid the probe actually serves from (autotuned or not)."""
+        cfg = self.search.schedule.cfg if self.search is not None else self.cfg
+        return {
+            "geometry": f"{cfg.rows}x{cfg.cols}",
+            "n_blocks": cfg.n_blocks,
+            "min_compute": cfg.min_compute_blocks,
+            "autotuned": self.search is not None,
+        }
+
     def report(self) -> Optional[dict]:
         if not self.costs:
             return None
-        return combine_costs("fabric/decode_linear", self.costs).report()
+        rep = combine_costs("fabric/decode_linear", self.costs).report()
+        rep.update(self.config_summary())
+        return rep
 
 
 def combine_costs(name: str, costs) -> costmodel.ScheduleCost:
@@ -474,4 +812,8 @@ def combine_costs(name: str, costs) -> costmodel.ScheduleCost:
         ops=sum(c.ops for c in costs),
         energy_compute_pj=sum(c.energy_compute_pj for c in costs),
         energy_storage_pj=sum(c.energy_storage_pj for c in costs),
-        energy_wire_pj=sum(c.energy_wire_pj for c in costs))
+        energy_wire_pj=sum(c.energy_wire_pj for c in costs),
+        # sequential launches: serial latencies add; overlap only exists
+        # within each schedule, so the pipelined latencies add too
+        serial_cycles=sum(c.serial_cycles_ for c in costs),
+        overlapped_cycles=sum(c.overlapped_cycles_ for c in costs))

@@ -45,6 +45,11 @@ class PimConfig:
     # fabric mode only: the block grid to schedule onto (a
     # repro.pim.fabric.FabricConfig; None = that module's default grid)
     fabric: Optional[object] = None
+    # fabric mode only: pick the grid split per GEMM shape with
+    # repro.pim.fabric.search_schedule (costmodel argmin; memoized per
+    # shape).  The search stays on the grid's own block geometry so no
+    # extra program compiles are triggered by tuning.
+    fabric_autotune: bool = False
 
     @property
     def packed(self) -> bool:
@@ -97,9 +102,15 @@ def linear_apply(params: dict, x: jnp.ndarray, cfg: PimConfig) -> jnp.ndarray:
         # both operands ride the wider precision's idot geometry; int4
         # weights are in-range int8 values, so the arithmetic is exact
         nbits = max(cfg.act_bits, cfg.weight_bits)
+        sched = None
+        if cfg.fabric_autotune:
+            sched = fabric_mod.search_schedule(
+                qx.shape[0], qx.shape[1], qw.shape[1], nbits, base=fcfg,
+                signed=True,
+                geometries=((fcfg.rows, fcfg.cols),)).schedule
         res = fabric_mod.fabric_matmul(
             np.asarray(qx, np.int64), np.asarray(qw, np.int64),
-            nbits=nbits, cfg=fcfg, signed=True)
+            nbits=nbits, cfg=fcfg, signed=True, schedule=sched)
         acc = jnp.asarray(res.out.astype(np.float32)) * ws[None, :]
     else:
         raise ValueError(cfg.mode)

@@ -4,7 +4,11 @@ batching (vLLM-style lite) and greedy/temperature sampling.
 An optional ``fabric_probe`` (:class:`repro.pim.fabric.FabricLinearProbe`)
 routes one linear projection of the live decode step through the
 simulated Compute RAM block grid -- the paper's fabric executing a slice
-of real serving traffic, with per-step energy/time accounting."""
+of real serving traffic, with per-step energy/time accounting.  A probe
+constructed with ``autotune=True`` picks its grid split via the fabric
+schedule search on the first observed shape, so serving selects the best
+geometry automatically; ``fabric_report()`` names the grid served
+from."""
 
 from __future__ import annotations
 
@@ -117,7 +121,11 @@ class ServeEngine:
         return done
 
     def fabric_report(self):
-        """Combined cost report of the fabric probe (None if unused)."""
+        """Combined cost report of the fabric probe (None if unused).
+
+        Includes the probe's ``config_summary()`` -- the block geometry
+        and storage/compute split actually served from, and whether the
+        schedule autotuner picked it."""
         if self.fabric_probe is None:
             return None
         return self.fabric_probe.report()

@@ -165,6 +165,41 @@ def test_schedule_rollup_report_roundtrip():
         + rep["energy_wire_pj"], abs=0.01)
 
 
+def test_schedule_rollup_overlap_defaults_fall_back_to_serial():
+    """Roll-ups without per-round structure expose serial == overlapped
+    (no modeled overlap), derived from the legacy time model."""
+    c = _rollup(round_cycles=1212.0, storage_rows_touched=500.0)
+    want = 1212.0 + 500.0 * cm.STORAGE_ROW_CR_CYCLES
+    assert c.serial_cycles == 0.0 and c.overlapped_cycles == 0.0
+    assert c.serial_cycles_ == pytest.approx(want)
+    assert c.overlapped_cycles_ == pytest.approx(want)
+    assert c.overlap_speedup == pytest.approx(1.0)
+    # one cycle unit: serial_cycles_ at the CR frequency IS time_us
+    assert c.serial_cycles_ / cm.FREQ_CIRCUIT_CR_MHZ == \
+        pytest.approx(c.time_us)
+
+
+def test_schedule_rollup_explicit_overlap_pinned():
+    c = _rollup(round_cycles=1000.0, serial_cycles=3000.0,
+                overlapped_cycles=1800.0)
+    assert c.serial_cycles_ == 3000.0
+    assert c.overlapped_cycles_ == 1800.0
+    assert c.overlap_speedup == pytest.approx(3000.0 / 1800.0)
+    assert c.time_us_overlapped == pytest.approx(
+        1800.0 / cm.FREQ_CIRCUIT_CR_MHZ)
+    rep = c.report()
+    assert rep["serial_cycles"] == 3000.0
+    assert rep["overlapped_cycles"] == 1800.0
+    assert rep["overlap_speedup"] == pytest.approx(1.667, abs=1e-3)
+
+
+def test_storage_row_cycle_conversion_pinned():
+    """One storage row at BRAM frequency, in CR-circuit cycle units."""
+    assert cm.STORAGE_ROW_CR_CYCLES == pytest.approx(
+        cm.FREQ_CIRCUIT_CR_MHZ / cm.FREQ_BRAM_MHZ)
+    assert 0.6 < cm.STORAGE_ROW_CR_CYCLES < 0.7    # BRAM is faster
+
+
 def test_energy_average_savings():
     """Paper headline: 'average savings of 80% in energy' -- holds for the
     ops whose cycle counts match the paper's (int add); our from-scratch

@@ -1,0 +1,292 @@
+"""PR 3 fabric fast paths: overlapped rounds, weight-tile broadcast,
+batched multi-round replay, and the schedule autotuner.
+
+Everything here holds the same line as the PR 2 differential harness:
+the *fast* paths (batched replay, broadcast-coalesced loads, autotuned
+schedules) must stay bit-identical to the serial per-round execution --
+they are optimizations of the launch structure and the cost model, never
+of the arithmetic.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.pim import fabric
+from repro.pim.fabric import FabricConfig
+
+ROWS, COLS = 128, 8
+
+
+def _grid(n_blocks, **kw):
+    return FabricConfig(n_blocks=n_blocks, rows=ROWS, cols=COLS, **kw)
+
+
+def _signed_operands(rng, nbits, m, k, n):
+    lo, hi = -(1 << (nbits - 1)), 1 << (nbits - 1)
+    x = rng.integers(lo, hi, (m, k)).astype(np.int64)
+    w = rng.integers(lo, hi, (k, n)).astype(np.int64)
+    return x, w
+
+
+# int4/int8 x ragged shapes x 1/4/64-block grids (PR 2 matrix)
+_MATRIX = [
+    (4, 1, (3, 10, 11)),
+    (4, 4, (3, 10, 11)),
+    (4, 4, (2, 20, 16)),
+    (4, 64, (5, 23, 17)),
+    (8, 1, (2, 7, 5)),
+    (8, 4, (2, 23, 5)),
+    (8, 64, (3, 9, 10)),
+]
+_IDS = [f"int{n}-{b}blk-{'x'.join(map(str, s))}" for n, b, s in _MATRIX]
+
+
+# ---------------------------------------------------------------------------
+# Differential: batched replay == serial per-round == numpy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nbits,blocks,shape", _MATRIX, ids=_IDS)
+def test_batched_replay_bit_identical(rng, nbits, blocks, shape):
+    m, k, n = shape
+    x, w = _signed_operands(rng, nbits, m, k, n)
+    sched = fabric.schedule_gemm(m, k, n, nbits, cfg=_grid(blocks),
+                                 signed=True)
+    xu, _ = fabric.cram._bias_signed(x, nbits)
+    wu, _ = fabric.cram._bias_signed(w, nbits)
+    raw_serial = fabric.execute_schedule(sched, xu, wu, batch_rounds=False)
+    raw_batch = fabric.execute_schedule(sched, xu, wu, batch_rounds=True)
+    np.testing.assert_array_equal(raw_serial, raw_batch)
+    # and the full signed path lands on numpy ground truth
+    res = fabric.fabric_matmul(x, w, nbits=nbits, cfg=_grid(blocks),
+                               signed=True)
+    np.testing.assert_array_equal(res.out, x @ w)
+
+
+def test_batched_replay_chunked(rng):
+    """Tiny max_batch_blocks forces multiple padded chunks; still exact."""
+    x, w = _signed_operands(rng, 4, 5, 23, 17)
+    sched = fabric.schedule_gemm(5, 23, 17, 4, cfg=_grid(4), signed=True)
+    assert len(sched.rounds) > 2
+    xu, _ = fabric.cram._bias_signed(x, 4)
+    wu, _ = fabric.cram._bias_signed(w, 4)
+    ref = fabric.execute_schedule(sched, xu, wu, batch_rounds=False)
+    for cap in (1, sched.n_compute, 2 * sched.n_compute + 1):
+        got = fabric.execute_schedule(sched, xu, wu, batch_rounds=True,
+                                      max_batch_blocks=cap)
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_autotuned_schedule_bit_identical(rng):
+    """The search argmin executes to the same integers as ground truth."""
+    m, k, n, nbits = 5, 23, 17, 4
+    x, w = _signed_operands(rng, nbits, m, k, n)
+    sr = fabric.search_schedule(m, k, n, nbits, base=_grid(8), signed=True,
+                                geometries=((ROWS, COLS),))
+    res = fabric.fabric_matmul(x, w, nbits=nbits, signed=True,
+                               schedule=sr.schedule)
+    np.testing.assert_array_equal(res.out, x @ w)
+
+
+def test_fabric_matmul_rejects_mismatched_schedule(rng):
+    sched = fabric.schedule_gemm(2, 7, 5, 8, cfg=_grid(2), signed=True)
+    x, w = _signed_operands(rng, 8, 3, 7, 5)           # wrong M
+    with pytest.raises(ValueError, match="does not match"):
+        fabric.fabric_matmul(x, w, nbits=8, signed=True, schedule=sched)
+
+
+# ---------------------------------------------------------------------------
+# IR invariants: the load stage
+# ---------------------------------------------------------------------------
+def _loads_by_key(rnd):
+    d = {}
+    for ld in rnd.loads:
+        d.setdefault((ld.kind,) + tuple(ld.key), []).append(ld)
+    return d
+
+
+def test_every_task_operand_loaded_in_its_round():
+    """No round reads a tile whose load hasn't retired: every operand a
+    task touches is covered by a load of the SAME round, destined to the
+    task's block."""
+    sched = fabric.schedule_gemm(5, 23, 17, 4, cfg=_grid(8), signed=True)
+    for rnd in sched.rounds:
+        by_key = _loads_by_key(rnd)
+        for t in rnd.tasks:
+            for kind, key, src in (("x", (t.m, t.k0), t.x_src),
+                                   ("w", (t.k0, t.n0), t.w_src)):
+                loads = by_key.get((kind,) + key)
+                assert loads, f"{kind}{key} never loaded in its round"
+                assert any(t.block in ld.dsts for ld in loads)
+                assert all(ld.src == src for ld in loads)
+
+
+def test_broadcast_groups_contiguous_and_shared():
+    """Broadcast loads coalesce exactly the contiguous task runs sharing
+    a weight tile (and therefore its w_src)."""
+    # M > n_compute so several tasks of one round share one (ki, ni)
+    sched = fabric.schedule_gemm(6, 10, 8, 4, cfg=_grid(4), signed=True)
+    saw_broadcast = False
+    for rnd in sched.rounds:
+        runs = []               # contiguous (k0, n0) runs over tasks
+        for t in rnd.tasks:
+            key = (t.k0, t.n0)
+            if runs and runs[-1][0] == key:
+                runs[-1][1].append(t)
+            else:
+                runs.append((key, [t]))
+        w_loads = [ld for ld in rnd.loads if ld.kind == "w"]
+        assert len(w_loads) == len(runs)
+        for ld, (key, tasks) in zip(w_loads, runs):
+            assert tuple(ld.key) == key
+            assert ld.dsts == tuple(t.block for t in tasks)
+            assert len({t.w_src for t in tasks}) == 1    # share w_src
+            assert ld.src == tasks[0].w_src
+            saw_broadcast |= len(ld.dsts) > 1
+    assert saw_broadcast, "matrix should exercise >= 1 broadcast group"
+
+
+def test_x_loads_keyed_per_k_slice():
+    """Distinct K-slices of one activation row are distinct payloads:
+    they must NOT coalesce into one load (regression: keying x loads on
+    m alone modeled a round's worth of x traffic as a single fetch)."""
+    # M=1: a round's tasks all read row 0 but across several K-tiles
+    sched = fabric.schedule_gemm(1, 40, 8, 4,
+                                 cfg=_grid(4, min_compute_blocks=4),
+                                 signed=True)
+    kt = sched.kt
+    for rnd in sched.rounds:
+        x_loads = [ld for ld in rnd.loads if ld.kind == "x"]
+        k0s = {t.k0 for t in rnd.tasks}
+        assert {tuple(ld.key) for ld in x_loads} == {(0, k0) for k0 in k0s}
+        for ld in x_loads:
+            kw = min(40, ld.key[1] + kt) - ld.key[1]
+            assert ld.bits == kw * sched.nbits
+    # total modeled x bits = every (m, k-slice) pair once per round
+    total_x = sum(ld.bits for rnd in sched.rounds for ld in rnd.loads
+                  if ld.kind == "x")
+    want = sum((t.k1 - t.k0) * sched.nbits
+               for rnd in sched.rounds
+               for t in {(tt.m, tt.k0): tt for tt in rnd.tasks}.values())
+    assert total_x == want
+
+
+def test_broadcast_moves_fewer_bits_than_unicast():
+    """The wire-energy split prices a broadcast once: coalesced loads
+    move strictly fewer fabric bits than per-task unicast would."""
+    sched = fabric.schedule_gemm(6, 10, 8, 4, cfg=_grid(4), signed=True)
+    per_task_bits = sum(
+        (t.k1 - t.k0) * sched.nbits + (t.k1 - t.k0) * (t.n1 - t.n0)
+        * sched.nbits
+        for rnd in sched.rounds for t in rnd.tasks if t.w_src >= 0
+        or t.x_src >= 0)
+    load_bits = sum(ld.bits for rnd in sched.rounds for ld in rnd.loads
+                    if ld.src >= 0)
+    assert load_bits < per_task_bits
+
+
+# ---------------------------------------------------------------------------
+# Overlap latency model
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nbits,blocks,shape", _MATRIX, ids=_IDS)
+def test_overlapped_strictly_below_serial(nbits, blocks, shape):
+    m, k, n = shape
+    sched = fabric.schedule_gemm(m, k, n, nbits, cfg=_grid(blocks),
+                                 signed=True)
+    cost = fabric.schedule_cost(sched)
+    assert cost.serial_cycles_ > 0 and cost.overlapped_cycles_ > 0
+    if len(sched.rounds) >= 2:
+        assert cost.overlapped_cycles_ < cost.serial_cycles_
+    else:
+        assert cost.overlapped_cycles_ == pytest.approx(cost.serial_cycles_)
+    # the serial model and the legacy time roll-up are ONE model
+    assert cost.serial_cycles_ / cm.FREQ_CIRCUIT_CR_MHZ == \
+        pytest.approx(cost.time_us, rel=1e-9)
+    assert cost.time_us_overlapped <= cost.time_us + 1e-9
+    assert cost.overlap_speedup >= 1.0
+
+
+def test_overlap_reported_and_combined():
+    sched = fabric.schedule_gemm(5, 23, 17, 4, cfg=_grid(4), signed=True)
+    cost = fabric.schedule_cost(sched)
+    rep = cost.report()
+    for key in ("serial_cycles", "overlapped_cycles", "time_us_overlapped",
+                "overlap_speedup"):
+        assert key in rep
+    total = fabric.combine_costs("two", [cost, cost])
+    assert total.serial_cycles == pytest.approx(2 * cost.serial_cycles_)
+    assert total.overlapped_cycles == pytest.approx(
+        2 * cost.overlapped_cycles_)
+
+
+# ---------------------------------------------------------------------------
+# Schedule autotuner
+# ---------------------------------------------------------------------------
+def test_search_schedule_returns_argmin():
+    sr = fabric.search_schedule(8, 64, 32, 4, base=_grid(8),
+                                geometries=((128, 8), (256, 16), (512, 40)))
+    assert sr.candidates, "search must price at least one candidate"
+    best = min(c["objective"] for c in sr.candidates)
+    got = sr.cost.overlapped_cycles_
+    assert got == pytest.approx(best, rel=1e-6)
+    # the returned schedule really is a plan for the requested GEMM
+    s = sr.schedule
+    assert (s.M, s.K, s.N) == (8, 64, 32)
+    assert s.cfg.n_blocks == 8
+
+
+def test_search_schedule_memoized_and_validated():
+    a = fabric.search_schedule(4, 20, 8, 4, base=_grid(4),
+                               geometries=((128, 8),))
+    b = fabric.search_schedule(4, 20, 8, 4, base=_grid(4),
+                               geometries=((128, 8),))
+    assert a is b                                  # LRU memo hit
+    with pytest.raises(ValueError, match="objective"):
+        fabric.search_schedule(4, 20, 8, 4, base=_grid(4),
+                               objective="nope")
+
+
+def test_search_skips_impossible_geometries():
+    """A geometry too small to host the idot program is skipped, not
+    fatal -- as long as one candidate remains."""
+    sr = fabric.search_schedule(2, 8, 4, 8, base=_grid(2),
+                                geometries=((40, 8), (128, 8)))
+    assert all(c["rows"] == 128 for c in sr.candidates)
+    with pytest.raises(ValueError, match="no candidate"):
+        fabric.search_schedule(2, 8, 4, 8, base=_grid(2),
+                               geometries=((40, 8),))
+
+
+def test_linear_fabric_autotune_equals_ref():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.pim import PimConfig, linear_apply, linear_init, pack_linear
+
+    cfga = PimConfig(mode="fabric", weight_bits=4, fabric=_grid(6),
+                     fabric_autotune=True)
+    cfgr = PimConfig(mode="ref", weight_bits=4)
+    dense = linear_init(jax.random.PRNGKey(0), 32, 8, cfgr)
+    packed = pack_linear(dense, cfgr)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32), jnp.bfloat16)
+    yr = linear_apply(packed, x, cfgr)
+    ya = linear_apply(packed, x, cfga)
+    np.testing.assert_array_equal(np.asarray(yr, np.float32),
+                                  np.asarray(ya, np.float32))
+
+
+def test_probe_autotune_reports_grid(rng):
+    from repro.pim.fabric import FabricLinearProbe
+
+    w = rng.normal(size=(16, 6)).astype(np.float32)
+    probe = FabricLinearProbe(w, cfg=_grid(4), bits=8, max_steps=1,
+                              autotune=True)
+    x = rng.normal(size=(2, 16)).astype(np.float32)
+    y_tuned = probe.observe(x)
+    assert probe.search is not None
+    rep = probe.report()
+    assert rep["autotuned"] and rep["geometry"] == f"{ROWS}x{COLS}"
+    # tuned output == untuned output (same arithmetic, different split)
+    ref = FabricLinearProbe(w, cfg=_grid(4), bits=8, max_steps=1)
+    y_ref = ref.observe(x)
+    np.testing.assert_array_equal(y_tuned, y_ref)
+    assert ref.report()["autotuned"] is False
