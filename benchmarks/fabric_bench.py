@@ -1,6 +1,7 @@
-"""Fabric scheduler benchmarks: overlap model, batched replay, autotuner.
+"""Fabric scheduler benchmarks: overlap model, batched replay, autotuner,
+and cross-round operand residency.
 
-Three numbers the PR 3 fabric work is accountable for, written to
+Four numbers the fabric work is accountable for, written to
 ``BENCH_fabric.json`` (ROADMAP "benchmark hygiene" -- JSON artifact +
 CI floor, mirroring ``engine_bench.py``):
 
@@ -13,11 +14,17 @@ CI floor, mirroring ``engine_bench.py``):
   (rounds ride the compiled wide-block path as extra block-columns).
   This is the real CPU-time speedup; ``--min-batch-speedup X`` exits
   non-zero when it regresses below the floor (the CI gate).
+* **residency** -- total ``TileLoad`` fetch count with the resident-tile
+  map vs the reload-every-round baseline (the PR 4 data-movement win),
+  on a weight-stationary schedule with >= 8 rounds and on a fused-QKV
+  program; ``--min-residency-fetch-reduction X`` exits non-zero when
+  the weight-stationary reduction drops below the floor (the CI gate).
 * **autotuner** -- ``search_schedule`` argmin vs the default geometry,
-  priced by the costmodel (no execution), plus the chosen config.
+  priced by the costmodel (no execution), plus the chosen config and
+  placement.
 
 CLI: ``python benchmarks/fabric_bench.py [--quick] [--json PATH]
-[--min-batch-speedup X]``.
+[--min-batch-speedup X] [--min-residency-fetch-reduction X]``.
 """
 
 import argparse
@@ -109,6 +116,45 @@ def bench_replay(print_fn=print, quick=False):
     }
 
 
+def bench_residency(print_fn=print, quick=False):
+    """TileLoad fetch counts: resident-tile map vs reload-every-round.
+
+    The gated case is activation-stationary at M == n_compute (every
+    activation slice returns to the block that already holds it) with
+    the weight tiles broadcast once -- the schedule shape the residency
+    refactor is accountable for.  A fused-QKV program is reported
+    alongside (shared activation residency across three GEMMs).
+    """
+    cfg = FabricConfig(n_blocks=8, rows=128, cols=8, min_compute_blocks=8)
+    M, K, N, nbits = 8, 10, 64, 4
+    sched = fabric.schedule_gemm(M, K, N, nbits, cfg=cfg, signed=True)
+    st = fabric.residency_stats(sched)
+    assert len(sched.rounds) >= 8, "gate needs a many-round schedule"
+    print_fn(f"fabric/residency/fetch_reduction,"
+             f"{st['fetch_reduction']:.2f},"
+             f"fetches={st['fetches']};reload={st['reload_fetches']};"
+             f"hit_rate={st['hit_rate']:.2f};rounds={len(sched.rounds)}")
+
+    # fused QKV: three GEMMs sharing activations in ONE grid allocation
+    specs = tuple(fabric.GemmSpec(n_, M, K, N // 2) for n_ in "qkv")
+    fused = fabric.schedule_program(specs, nbits, cfg=cfg, signed=True)
+    stf = fabric.residency_stats(fused)
+    print_fn(f"fabric/residency_qkv/fetch_reduction,"
+             f"{stf['fetch_reduction']:.2f},"
+             f"hit_rate={stf['hit_rate']:.2f};"
+             f"rounds={len(fused.rounds)};gemms={len(fused.gemms)}")
+    return {
+        "shape": f"{M}x{K}x{N}", "nbits": nbits, "blocks": cfg.n_blocks,
+        "rounds": len(sched.rounds),
+        "fetches": st["fetches"],
+        "reload_fetches": st["reload_fetches"],
+        "fetch_reduction": round(st["fetch_reduction"], 3),
+        "hit_rate": round(st["hit_rate"], 3),
+        "qkv_fetch_reduction": round(stf["fetch_reduction"], 3),
+        "qkv_hit_rate": round(stf["hit_rate"], 3),
+    }
+
+
 def bench_autotune(print_fn=print, quick=False):
     """search_schedule argmin vs the default geometry (costmodel only)."""
     M, K, N, nbits = 8, 128, 64, 8
@@ -120,8 +166,8 @@ def bench_autotune(print_fn=print, quick=False):
     gain = default_cost.overlapped_cycles_ / tuned.overlapped_cycles_
     cfg = sr.schedule.cfg
     print_fn(f"fabric/autotune/gain,{gain:.2f},"
-             f"pick={cfg.rows}x{cfg.cols}mc{cfg.min_compute_blocks};"
-             f"candidates={len(sr.candidates)}")
+             f"pick={cfg.rows}x{cfg.cols}mc{cfg.min_compute_blocks}"
+             f"-{cfg.placement};candidates={len(sr.candidates)}")
     return {
         "shape": f"{M}x{K}x{N}", "nbits": nbits, "blocks": base.n_blocks,
         "candidates": len(sr.candidates),
@@ -130,6 +176,7 @@ def bench_autotune(print_fn=print, quick=False):
         "tuned_overlapped_cycles": round(tuned.overlapped_cycles_, 1),
         "tuned_geometry": f"{cfg.rows}x{cfg.cols}",
         "tuned_min_compute": cfg.min_compute_blocks,
+        "tuned_placement": cfg.placement,
         "gain": round(gain, 3),
     }
 
@@ -139,6 +186,7 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "quick": quick,
         "modeled": bench_modeled(print_fn, quick=quick),
         "replay": bench_replay(print_fn, quick=quick),
+        "residency": bench_residency(print_fn, quick=quick),
         "autotune": bench_autotune(print_fn, quick=quick),
     }
     pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
@@ -152,6 +200,13 @@ def check_batch_speedup(payload: dict, floor: float):
     return [] if s >= floor else [f"batched replay: {s:.2f}x < {floor}x"]
 
 
+def check_residency_reduction(payload: dict, floor: float):
+    """Return failure strings when the residency fetch win regresses."""
+    r = payload["residency"]["fetch_reduction"]
+    return [] if r >= floor else \
+        [f"residency fetch reduction: {r:.2f}x < {floor}x"]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -162,14 +217,26 @@ def main(argv=None) -> int:
                     metavar="X",
                     help="fail (exit 1) if batched-vs-per-round replay "
                     "speedup drops below X")
+    ap.add_argument("--min-residency-fetch-reduction", type=float,
+                    default=None, metavar="X",
+                    help="fail (exit 1) if the residency fetch-count "
+                    "reduction drops below X")
     args = ap.parse_args(argv)
     payload = run(json_path=args.json, quick=args.quick)
+    bad = []
     if args.min_batch_speedup is not None:
-        bad = check_batch_speedup(payload, args.min_batch_speedup)
-        if bad:
-            print("SPEEDUP REGRESSION: " + "; ".join(bad))
-            return 1
+        bad += check_batch_speedup(payload, args.min_batch_speedup)
+    if args.min_residency_fetch_reduction is not None:
+        bad += check_residency_reduction(
+            payload, args.min_residency_fetch_reduction)
+    if bad:
+        print("SPEEDUP REGRESSION: " + "; ".join(bad))
+        return 1
+    if args.min_batch_speedup is not None:
         print(f"batched replay speedup >= {args.min_batch_speedup}x: OK")
+    if args.min_residency_fetch_reduction is not None:
+        print(f"residency fetch reduction >= "
+              f"{args.min_residency_fetch_reduction}x: OK")
     return 0
 
 

@@ -1,6 +1,22 @@
 """Serving-engine throughput (smoke-scale model on CPU; the derived
-column carries the architectural quantity: decode step tokens/s scale)."""
+column carries the architectural quantity: decode step tokens/s scale).
 
+Writes ``BENCH_serve.json`` (ROADMAP "benchmark hygiene" -- JSON
+artifact + CI floor, mirroring the engine/fabric benches): tokens
+served, per-token latency, and the continuous-batching accounting.
+Wall-clock on shared CI is noisy, so the hard gate is an *integrity*
+floor -- ``--min-tokens N`` fails when the engine stops producing the
+expected token count (a scheduling/slot-refill regression), while the
+latency number rides along as a tracked artifact.
+
+CLI: ``python benchmarks/serve_bench.py [--quick] [--json PATH]
+[--min-tokens N]``.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
 import time
 
 import numpy as np
@@ -11,20 +27,69 @@ from repro import configs
 from repro.models.model import LM
 from repro.serve.engine import Request, ServeEngine
 
+BENCH_JSON = "BENCH_serve.json"
 
-def run(print_fn=print):
+
+def run(print_fn=print, json_path=BENCH_JSON, quick=False):
     cfg = configs.get_config("qwen2-0.5b", smoke=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=4, capacity=64)
+    slots = 2 if quick else 4
+    n_req, max_new = (4, 4) if quick else (8, 8)
+    eng = ServeEngine(model, params, batch_slots=slots, capacity=64)
     rng = np.random.default_rng(0)
-    for rid in range(8):
+    for rid in range(n_req):
         eng.add(Request(rid=rid,
                         prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
-                        max_new=8))
+                        max_new=max_new))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
-    print_fn(f"serve/continuous_batching,{dt*1e6/max(toks,1):.0f},"
-             f"us_per_token;requests={len(done)};slots=4;tokens={toks}")
+    us_per_token = dt * 1e6 / max(toks, 1)
+    print_fn(f"serve/continuous_batching,{us_per_token:.0f},"
+             f"us_per_token;requests={len(done)};slots={slots};"
+             f"tokens={toks}")
+    payload = {
+        "quick": quick,
+        "model": "qwen2-0.5b-smoke",
+        "slots": slots,
+        "requests": len(done),
+        "tokens": toks,
+        "expected_tokens": n_req * max_new,
+        "us_per_token": round(us_per_token),
+        "wall_s": round(dt, 3),
+    }
+    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
+    print_fn(f"serve/bench_json,{json_path},written")
+    return payload
+
+
+def check_tokens(payload: dict, floor: int):
+    """Failure strings when the engine under-produces tokens."""
+    t = payload["tokens"]
+    return [] if t >= floor else [f"tokens served: {t} < {floor}"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller batch + fewer requests (CI tier-1)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help=f"output path (default {BENCH_JSON})")
+    ap.add_argument("--min-tokens", type=int, default=None, metavar="N",
+                    help="fail (exit 1) if fewer than N tokens are served "
+                    "(continuous-batching integrity gate)")
+    args = ap.parse_args(argv)
+    payload = run(json_path=args.json, quick=args.quick)
+    if args.min_tokens is not None:
+        bad = check_tokens(payload, args.min_tokens)
+        if bad:
+            print("SERVE REGRESSION: " + "; ".join(bad))
+            return 1
+        print(f"tokens served >= {args.min_tokens}: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

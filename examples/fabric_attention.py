@@ -30,6 +30,13 @@ def main():
           f"{rep['energy_storage_pj']:.0f} storage / "
           f"{rep['energy_wire_pj']:.0f} wire), "
           f"{rep['time_us']:.1f} us, {rep['gops']:.3f} GOPS")
+    # the wire split is hop-priced: every load/broadcast/drain is billed
+    # by the Manhattan distance between its actual block sites
+    print(f"  hop-priced wires: {rep['fabric_bit_mm']:.0f} bit*mm fabric "
+          f"+ {rep['spill_bit_mm']:.0f} bit*mm spill "
+          f"(avg net {rep['avg_hop_mm']:.2f} mm on the "
+          f"{cfg.grid_rows}x{cfg.grid_cols} grid) "
+          f"-> {rep['energy_wire_pj']:.0f} pJ")
     # serial vs overlapped: round i+1's loads double-buffer against
     # round i's compute (docs/fabric.md, "Overlapped rounds")
     print(f"  latency: serial {rep['serial_cycles']:.0f} cyc "
@@ -38,16 +45,33 @@ def main():
           f"({rep['time_us_overlapped']:.1f} us), "
           f"{rep['overlap_speedup']:.2f}x\n")
 
-    # -- the schedule autotuner picks the grid split ------------------------
+    # -- the schedule autotuner picks the grid split + placement ------------
     from repro.pim import search_schedule
     sr = search_schedule(x.shape[0], x.shape[1], w.shape[1], 4,
                          base=cfg, signed=True)
     print(sr.describe())
+    print(sr.candidate_table())
     tuned = sr.cost.report()
     print(f"  autotuned: {tuned['overlapped_cycles']:.0f} overlapped cyc "
           f"vs default {rep['overlapped_cycles']:.0f} "
           f"({rep['overlapped_cycles'] / tuned['overlapped_cycles']:.2f}x)"
           "\n")
+
+    # -- fused QKV: one FabricProgram, shared activation residency ----------
+    from repro.pim import fabric_fused_matmul, residency_stats
+    wq = rng.integers(-8, 8, (96, 32)).astype(np.int64)
+    wk = rng.integers(-8, 8, (96, 32)).astype(np.int64)
+    wv = rng.integers(-8, 8, (96, 32)).astype(np.int64)
+    fused = fabric_fused_matmul(x, (wq, wk, wv), nbits=4, cfg=cfg,
+                                signed=True, names=("q", "k", "v"))
+    for out, wi in zip(fused.outs, (wq, wk, wv)):
+        assert (out == x @ wi).all()
+    print(fused.schedule.describe())
+    st = residency_stats(fused.schedule)
+    frep = fused.cost.report()
+    print(f"  fused QKV: {st['fetches']} fetches for {st['reads']} tile "
+          f"reads ({st['fetch_reduction']:.2f}x fewer than reload), "
+          f"{frep['energy_wire_pj']:.0f} pJ wire\n")
 
     # -- attention scores: q @ k^T per (batch, head) ------------------------
     B, Sq, Sk, H, hd = 1, 8, 8, 2, 32

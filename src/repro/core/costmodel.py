@@ -81,6 +81,14 @@ NET_LENGTH_CR_MM = 0.08              # only mode/start/done + host control
 # spilled to off-fabric memory ride the long I/O column nets.
 NET_LENGTH_FABRIC_MM = 0.30
 NET_LENGTH_SPILL_MM = 1.20
+# Topology-aware wire model: blocks sit at (row, col) sites on the grid
+# (FabricConfig.site) and every operand move is priced by the Manhattan
+# hop count between the actual sites -- NET_LENGTH_HOP_MM is the wire
+# length of ONE hop between adjacent sites.  Two hops equal the old
+# average fabric net (NET_LENGTH_FABRIC_MM), so flat and hop-based
+# pricing agree for a typical small grid and diverge as the grid --
+# and therefore its diameter -- grows.
+NET_LENGTH_HOP_MM = 0.15
 
 GEOMETRIES = {(512, 40): "512x40", (1024, 20): "1024x20",
               (2048, 10): "2048x10"}
@@ -101,6 +109,30 @@ def block_energy_per_cycle_fj(area_um2: float, sram_fraction: float) -> float:
 
 def wire_energy_fj(bits: float, net_length_mm: float) -> float:
     return bits * net_length_mm * WIRE_FJ_PER_BIT_MM * FPGA_SWITCH_FACTOR
+
+
+def hop_net_length_mm(hops: float) -> float:
+    """Wire length of one fabric net spanning ``hops`` Manhattan hops.
+
+    Monotone (non-decreasing) in the hop count, and never shorter than
+    one hop: even adjacent blocks pay one switch-box crossing.  The
+    schedule roll-up uses this to price each load/broadcast/drain by the
+    *actual* distance between the block sites involved, instead of one
+    average net length -- the topology-aware half of the paper's
+    data-movement claim (wires, not arithmetic, are the expensive
+    resource at the fabric level).
+    """
+    return max(1.0, float(hops)) * NET_LENGTH_HOP_MM
+
+
+def wire_energy_bit_mm_fj(bit_mm: float) -> float:
+    """Wire energy of an arbitrary bits-times-millimetres total.
+
+    Same Keckler-style constants as :func:`wire_energy_fj`; callers that
+    price every net by its own length (hop-based schedules) accumulate
+    ``bits * mm`` per move and convert once here.
+    """
+    return bit_mm * WIRE_FJ_PER_BIT_MM * FPGA_SWITCH_FACTOR
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +325,12 @@ class ScheduleCost:
     # accessors fall back to the serial number.
     serial_cycles: float = 0.0
     overlapped_cycles: float = 0.0
+    # Hop-priced wire totals (bits x mm, summed per net over the actual
+    # Manhattan distances between block sites).  0.0 means "not modeled"
+    # (roll-ups without placement information); the wire-energy term then
+    # uses bits x the flat average net lengths above.
+    fabric_bit_mm: float = 0.0
+    spill_bit_mm: float = 0.0
 
     @property
     def energy_pj(self) -> float:
@@ -354,6 +392,11 @@ class ScheduleCost:
             "overlap_speedup": round(self.overlap_speedup, 3),
             "energy_per_op_pj": round(self.energy_per_op_pj, 4),
             "gops": round(self.gops, 3),
+            "fabric_bit_mm": round(self.fabric_bit_mm, 3),
+            "spill_bit_mm": round(self.spill_bit_mm, 3),
+            "avg_hop_mm": round(
+                self.fabric_bit_mm / self.fabric_bits_moved, 4)
+            if self.fabric_bit_mm > 0 and self.fabric_bits_moved > 0 else 0.0,
         }
 
 
@@ -363,7 +406,9 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
                          storage_rows_touched: float,
                          fabric_bits_moved: float, spill_bits_moved: float,
                          ops: int, serial_cycles: float = 0.0,
-                         overlapped_cycles: float = 0.0) -> ScheduleCost:
+                         overlapped_cycles: float = 0.0,
+                         fabric_bit_mm: float = 0.0,
+                         spill_bit_mm: float = 0.0) -> ScheduleCost:
     """Price a fabric schedule's event counts (see :class:`ScheduleCost`).
 
     * compute energy: every (active compute block, cycle) pair burns the
@@ -371,8 +416,13 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
     * storage energy: each storage-mode row access costs one cycle of a
       block at storage activity (0.1) -- the BRAM-like half of the
       dual-mode claim;
-    * wire energy: operand/result bits times the fabric hop length
-      (block-to-block) or the spill length (off-fabric), Keckler-style.
+    * wire energy: operand/result bits times the wire length they cross,
+      Keckler-style.  When the caller prices every net by its actual
+      Manhattan distance (``fabric_bit_mm`` / ``spill_bit_mm`` > 0,
+      bits x mm accumulated per move -- the topology-aware wire model),
+      those totals are used directly; otherwise bits times the flat
+      average net lengths (``NET_LENGTH_FABRIC_MM`` /
+      ``NET_LENGTH_SPILL_MM``) -- the pre-placement fallback.
 
     ``serial_cycles`` / ``overlapped_cycles`` carry the per-round
     pipeline latency model when the caller walked the round structure
@@ -382,6 +432,12 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
     e_cr_compute = COMPUTE_MODE_ACTIVITY_FACTOR * \
         block_energy_per_cycle_fj(AREA_CR_UM2, 0.75)
     e_cr_storage = block_energy_per_cycle_fj(AREA_CR_UM2, 0.9)
+    e_wire_fabric = (wire_energy_bit_mm_fj(fabric_bit_mm)
+                     if fabric_bit_mm > 0 else
+                     wire_energy_fj(fabric_bits_moved, NET_LENGTH_FABRIC_MM))
+    e_wire_spill = (wire_energy_bit_mm_fj(spill_bit_mm)
+                    if spill_bit_mm > 0 else
+                    wire_energy_fj(spill_bits_moved, NET_LENGTH_SPILL_MM))
     return ScheduleCost(
         name=name, n_blocks=n_blocks, n_compute=n_compute,
         n_storage=n_storage, rounds=rounds,
@@ -392,10 +448,9 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
         spill_bits_moved=spill_bits_moved, ops=ops,
         energy_compute_pj=compute_block_cycles * e_cr_compute / 1e3,
         energy_storage_pj=storage_rows_touched * e_cr_storage / 1e3,
-        energy_wire_pj=(
-            wire_energy_fj(fabric_bits_moved, NET_LENGTH_FABRIC_MM)
-            + wire_energy_fj(spill_bits_moved, NET_LENGTH_SPILL_MM)) / 1e3,
+        energy_wire_pj=(e_wire_fabric + e_wire_spill) / 1e3,
         serial_cycles=serial_cycles, overlapped_cycles=overlapped_cycles,
+        fabric_bit_mm=fabric_bit_mm, spill_bit_mm=spill_bit_mm,
     )
 
 

@@ -1,5 +1,8 @@
-from .linear import PimConfig, linear_init, linear_apply, pack_linear  # noqa
+from .linear import (PimConfig, linear_init, linear_apply,  # noqa
+                     fused_linear_apply, pack_linear)
 from .cram import cram_dot, cram_matmul, idot_geometry  # noqa
-from .fabric import (FabricConfig, FabricLinearProbe, Schedule,  # noqa
-                     SearchResult, TileLoad, fabric_attention_scores,
-                     fabric_matmul, schedule_gemm, search_schedule)
+from .fabric import (FabricConfig, FabricLinearProbe, FabricProgram,  # noqa
+                     GemmSpec, Schedule, SearchResult, TileLoad,
+                     fabric_attention_scores, fabric_fused_matmul,
+                     fabric_matmul, residency_stats, schedule_gemm,
+                     schedule_program, search_program, search_schedule)

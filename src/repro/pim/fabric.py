@@ -1,27 +1,37 @@
-"""Fabric scheduler: tile GEMM/attention across a Compute RAM block grid.
+"""Fabric scheduler: tile GEMMs across a Compute RAM block grid.
 
 The paper's fabric-level claim (§IV, §V): an FPGA carries hundreds of
 Compute RAM sites, each *dynamically* allocated to storage mode (a plain
 BRAM holding operands) or compute mode (executing an instruction
 sequence), and a DL workload is tiled across the grid.  This module is
 that layer for the simulator: it turns "one block runs one program"
-(:mod:`repro.pim.cram`) into "a simulated FPGA runs a matmul".
+(:mod:`repro.pim.cram`) into "a simulated FPGA runs a matmul" -- and,
+since the :class:`FabricProgram` refactor, "a simulated FPGA runs a
+*decode step*": several GEMMs sharing activations fused into one grid
+allocation.
 
 Pipeline
 --------
-1. :func:`schedule_gemm` builds an explicit :class:`Schedule` IR:
+1. :func:`schedule_program` builds an explicit :class:`FabricProgram`
+   IR for one or more GEMMs that share their activation operand (the
+   fused-QKV case; :func:`schedule_gemm` is the single-GEMM wrapper):
 
-   * **mode map** -- each of the grid's ``n_blocks`` blocks is assigned
-     ``storage`` (operand residency) or ``compute`` (paper §II dual-mode
-     allocation).  Storage demand is sized from the operand footprint;
-     whatever does not fit on-fabric is marked *spilled* (off-fabric
-     memory, longer wires).
+   * **mode map + placement** -- each of the grid's ``n_blocks`` blocks
+     sits at a ``(row, col)`` site (:meth:`FabricConfig.site`) and is
+     assigned ``storage`` (operand residency) or ``compute`` mode
+     (paper §II dual-mode allocation).  ``FabricConfig.placement``
+     decides *where* the storage blocks go: ``contiguous`` packs them
+     at one grid corner, ``interleaved`` spreads them among the compute
+     blocks (shorter operand hops).  Storage demand is sized from the
+     operand footprint; whatever does not fit on-fabric is marked
+     *spilled* (off-fabric memory, longer wires).
    * **tiling** -- K is tiled to the ``idot`` tuple capacity of the
      block geometry (:func:`repro.pim.cram.idot_geometry`, clamped so
-     the int32 accumulator provably cannot overflow), N to the block's
-     columns, and each output row ``m`` is one tile task.  Ragged edge
-     tiles are zero-padded to the fixed tile geometry so **every round
-     replays one compiled program**.
+     the int32 accumulator provably cannot overflow), each GEMM's N to
+     the block's columns, and each output row ``m`` is one tile task.
+     Ragged edge tiles are zero-padded to the fixed tile geometry so
+     **every round replays one compiled program** across every fused
+     GEMM.
    * **rounds** -- tile tasks are packed ``n_compute`` at a time into
      :class:`Round`\\ s; one round is one ``engine.execute_blocks``
      launch.  Blocks without a task in a partial round are *not
@@ -29,30 +39,40 @@ Pipeline
      idle blocks burn no compute energy); the simulator still steps
      them on zeros purely as a wide-batch convenience, and their
      results are discarded.
-   * **loads** -- each round carries an explicit operand-load stage
-     (:class:`TileLoad`): the tiles its tasks read, where they live,
-     and which blocks they fan out to.  Contiguous tasks sharing a
-     weight tile coalesce into ONE broadcast load (single
-     multi-destination net).  The load/compute dependency is what the
-     cost model's double-buffered ``overlapped_cycles`` pipeline hides.
+   * **residency-aware loads** -- each round carries an explicit
+     operand-load stage (:class:`TileLoad`).  Loads are *cache fills*
+     against a per-compute-block resident-tile map: a tile fetched for
+     round *i* stays pinned in its block for later rounds that reuse
+     it, so repeated weight tiles are fetched ONCE instead of once per
+     round (LRU eviction when the block's bits run out).  Within one
+     round, every block needing a tile that is not already resident
+     joins one multi-destination broadcast fetch.  Tasks are assigned
+     to blocks residency-first (a task prefers a block that already
+     holds its weight tile, then its activation slice), which is what
+     converts cross-round reuse in the IR into actual fetch savings.
 
-2. :func:`execute_schedule` runs the rounds **exactly** on the block
-   simulator and accumulates per-tile accumulators into the output.  By
-   default all rounds are *batched* into one compiled wide-block launch
-   (rounds become extra block-columns) -- the simulator-side wall-clock
-   fast path, bit-identical to the per-round loop.
+2. :func:`execute_program` runs the rounds **exactly** on the block
+   simulator and accumulates per-tile accumulators into each GEMM's
+   output.  By default all rounds are *batched* into one compiled
+   wide-block launch (rounds become extra block-columns) -- the
+   simulator-side wall-clock fast path, bit-identical to the per-round
+   loop.
 
 3. :func:`schedule_cost` walks the same IR and prices it with
-   :mod:`repro.core.costmodel` (compute-mode cycles, storage-mode row
-   traffic, and block-to-block / spill wire energy for every operand
-   move), returning a :class:`repro.core.costmodel.ScheduleCost` whose
-   ``serial_cycles`` / ``overlapped_cycles`` pin the overlap win.
+   :mod:`repro.core.costmodel`: compute-mode cycles, storage-mode row
+   traffic, and **hop-priced** wire energy -- every load/broadcast/
+   drain is billed by the Manhattan distance between the actual block
+   sites involved (``costmodel.hop_net_length_mm``), not one average
+   fabric net length, so the cost model finally *sees* both residency
+   (fewer fetches) and placement (shorter fetches), the paper's
+   headline data-movement savings.
 
-4. :func:`search_schedule` autotunes: it enumerates ``FabricConfig``
-   geometries x storage/compute splits, prices every candidate through
-   the same roll-up (no execution), and returns the argmin schedule --
-   wired into ``PimConfig(mode="fabric", fabric_autotune=True)`` and
-   the serving fabric probe.
+4. :func:`search_program` / :func:`search_schedule` autotune: they
+   enumerate ``FabricConfig`` geometries x storage/compute splits x
+   placements, price every candidate through the same roll-up (no
+   execution), deduplicate geometry-equivalent candidates, and return
+   the argmin program -- wired into ``PimConfig(mode="fabric",
+   fabric_autotune=True)`` and the serving fabric probe.
 
 Signed operands use the same zero-point offset algebra as
 :func:`repro.pim.cram.cram_matmul` (the blocks are unsigned-only
@@ -63,14 +83,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import costmodel, engine, harness, programs
+from repro.core import costmodel, engine, programs
 from repro.pim import cram
 
 ACC_BITS = 32
+
+#: Storage-block placement strategies (the autotuner sweeps these).
+PLACEMENT_CHOICES: Tuple[str, ...] = ("contiguous", "interleaved")
 
 
 # ---------------------------------------------------------------------------
@@ -78,28 +101,83 @@ ACC_BITS = 32
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class FabricConfig:
-    """A grid of Compute RAM blocks (one simulated FPGA)."""
+    """A grid of Compute RAM blocks (one simulated FPGA).
+
+    Blocks are laid out row-major on a near-square ``grid_rows x
+    grid_cols`` grid of sites; the host/IO interface sits just off site
+    ``(0, 0)``, so :meth:`edge_hops` is the Manhattan distance a spill
+    fetch or an accumulator drain crosses.  ``placement`` picks where
+    storage-mode blocks sit (``contiguous`` corner vs ``interleaved``
+    among the compute blocks); ``residency`` enables the cross-round
+    resident-tile map (off = the PR 3 reload-every-round load stage,
+    kept for differential tests and as the pricing baseline).
+    """
     n_blocks: int = 8
     rows: int = 512
     cols: int = 40
     executor: str = "compiled"
     min_compute_blocks: int = 1    # never storage-starve the grid
+    placement: str = "contiguous"  # where storage blocks sit on the grid
+    residency: bool = True         # cross-round resident-tile map
 
     @property
     def block_bits(self) -> int:
         return self.rows * self.cols
+
+    @property
+    def grid_cols(self) -> int:
+        return int(math.ceil(math.sqrt(self.n_blocks)))
+
+    @property
+    def grid_rows(self) -> int:
+        return int(math.ceil(self.n_blocks / self.grid_cols))
+
+    @property
+    def grid_diameter(self) -> int:
+        """Manhattan distance between the two farthest sites."""
+        return (self.grid_rows - 1) + (self.grid_cols - 1)
+
+    def site(self, block: int) -> Tuple[int, int]:
+        """(row, col) site of one block on the grid."""
+        return block // self.grid_cols, block % self.grid_cols
+
+    def hops(self, a: int, b: int) -> int:
+        """Manhattan hop distance between two blocks' sites."""
+        (ra, ca), (rb, cb) = self.site(a), self.site(b)
+        return abs(ra - rb) + abs(ca - cb)
+
+    def edge_hops(self, block: int) -> int:
+        """Hops from a block to the host/IO interface (just off (0,0))."""
+        r, c = self.site(block)
+        return r + c + 1
 
     def __post_init__(self):
         if self.n_blocks < 1:
             raise ValueError("fabric needs at least one block")
         if not 1 <= self.min_compute_blocks <= self.n_blocks:
             raise ValueError("min_compute_blocks out of range")
+        if self.placement not in PLACEMENT_CHOICES:
+            raise ValueError(f"placement {self.placement!r} not in "
+                             f"{PLACEMENT_CHOICES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """One GEMM of a fabric program: ``(M, K) @ (K, N)``.
+
+    Fused GEMMs of one :class:`FabricProgram` share ``M``/``K`` (and the
+    activation operand); ``N`` is per GEMM (the QKV projections).
+    """
+    name: str
+    M: int
+    K: int
+    N: int
 
 
 @dataclasses.dataclass(frozen=True)
 class TileTask:
-    """One (output-row, K-tile, N-tile) unit of work on one compute block."""
-    block: int                 # compute-block slot executing this tile
+    """One (gemm, output-row, K-tile, N-tile) unit of work on one block."""
+    block: int                 # compute block executing this tile
     m: int                     # output row
     k0: int
     k1: int
@@ -107,21 +185,25 @@ class TileTask:
     n1: int
     x_src: int                 # storage block holding x[m, :] (-1 = spill)
     w_src: int                 # storage block holding w tile (-1 = spill)
+    gemm: int = 0              # index into FabricProgram.gemms
 
 
 @dataclasses.dataclass(frozen=True)
 class TileLoad:
-    """One operand fetch that must retire before its round's compute.
+    """One operand *cache fill* that must retire before its round's compute.
 
     The load stage is explicit in the IR so the cost model can price
     round *i+1*'s loads as double-buffered against round *i*'s compute
-    (``ScheduleCost.overlapped_cycles``), and so consecutive tasks
-    sharing a weight tile coalesce into ONE fetch broadcast to several
-    destination blocks (``len(dsts) > 1``): a single multi-destination
-    net, priced once in the wire-energy split.
+    (``ScheduleCost.overlapped_cycles``).  ``dsts`` lists only the
+    compute blocks where the tile is NOT already resident: blocks that
+    fetched it in an earlier round (and have not evicted it) are served
+    from their resident-tile map and appear in no load at all.  Several
+    missing destinations coalesce into ONE multi-destination broadcast
+    net, priced once in the wire-energy split by the Manhattan span of
+    the sites it touches.
     """
     kind: str                  # "x" (activation slice) | "w" (weight tile)
-    key: Tuple[int, ...]       # ("x": (m, k0)) | ("w": (k0, n0))
+    key: Tuple[int, ...]       # ("x": (m, k0)) | ("w": (gemm, k0, n0))
     src: int                   # storage block holding the payload (-1 = spill)
     dsts: Tuple[int, ...]      # destination compute blocks (broadcast if >1)
     bits: int                  # payload bits of ONE copy
@@ -132,30 +214,49 @@ class Round:
     """One lockstep ``execute_blocks`` launch over the compute blocks.
 
     ``loads`` is the round's operand-load stage: every tile a task reads
-    is covered by exactly one load of the same round (the dependency the
-    overlap model pipelines).  Broadcast groups are contiguous task runs
-    sharing a weight tile.
+    is either covered by a load of the same round or already resident in
+    the task's block from an earlier fetch (the cache-fill semantics the
+    overlap model pipelines and ``residency_stats`` audits).
     """
     tasks: Tuple[TileTask, ...]
     loads: Tuple[TileLoad, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
-class Schedule:
-    """Explicit fabric schedule for one quantized GEMM (the IR every
-    later scaling PR -- sharding, async rounds, multi-backend -- builds
-    on)."""
+class FabricProgram:
+    """Explicit fabric schedule for one or more fused quantized GEMMs.
+
+    The multi-GEMM, residency-aware successor of the single-GEMM
+    ``Schedule`` IR (which remains as an alias): every fused GEMM shares
+    the activation operand and the grid allocation, and all rounds
+    replay ONE compiled idot program.  Single-GEMM programs keep the
+    legacy accessors (``M``/``K``/``N``).
+    """
     cfg: FabricConfig
     nbits: int
     signed: bool
-    M: int
-    K: int
-    N: int
+    gemms: Tuple[GemmSpec, ...]
     kt: int                              # K-tile (idot tuples per launch)
     modes: Tuple[str, ...]               # per block: "compute" | "storage"
     x_home: Tuple[int, ...]              # per output row m -> block | -1
-    w_home: Dict[Tuple[int, int], int]   # (k-tile, n-tile) -> block | -1
+    w_home: Dict[Tuple[int, int, int], int]  # (gemm, k-tile, n-tile) -> block
     rounds: Tuple[Round, ...]
+
+    @property
+    def M(self) -> int:
+        return self.gemms[0].M           # shared across fused GEMMs
+
+    @property
+    def K(self) -> int:
+        return self.gemms[0].K           # shared across fused GEMMs
+
+    @property
+    def N(self) -> int:
+        if len(self.gemms) != 1:
+            raise ValueError(
+                f"N is ambiguous for a {len(self.gemms)}-GEMM program; "
+                f"use .gemms")
+        return self.gemms[0].N
 
     @property
     def n_compute(self) -> int:
@@ -166,6 +267,10 @@ class Schedule:
         return self.modes.count("storage")
 
     @property
+    def compute_blocks(self) -> Tuple[int, ...]:
+        return tuple(b for b, m in enumerate(self.modes) if m == "compute")
+
+    @property
     def program(self):
         """The single idot program every round replays."""
         prog, _ = programs.idot(self.nbits, rows=self.cfg.rows,
@@ -174,20 +279,32 @@ class Schedule:
 
     @property
     def ops(self) -> int:
-        """Useful MACs (zero-padding excluded)."""
+        """Useful MACs (zero-padding excluded), across all fused GEMMs."""
         return sum((t.k1 - t.k0) * (t.n1 - t.n0)
                    for r in self.rounds for t in r.tasks)
 
     def describe(self) -> str:
+        cfg = self.cfg
+        sig = "s" if self.signed else "u"
+        shapes = " + ".join(f"{g.name}:{g.M}x{g.K}@{g.K}x{g.N}"
+                            for g in self.gemms)
         lines = [
-            f"Schedule {self.M}x{self.K}@{self.K}x{self.N} "
-            f"int{self.nbits}{'s' if self.signed else 'u'} on "
-            f"{self.cfg.n_blocks} blocks "
-            f"({self.n_compute} compute / {self.n_storage} storage)",
-            f"  K-tile={self.kt} tuples, N-tile={self.cfg.cols} cols, "
+            f"FabricProgram [{shapes}] int{self.nbits}{sig} on "
+            f"{cfg.n_blocks} blocks "
+            f"({cfg.grid_rows}x{cfg.grid_cols} grid, "
+            f"{self.n_compute} compute / {self.n_storage} storage, "
+            f"{cfg.placement})",
+            f"  K-tile={self.kt} tuples, N-tile={cfg.cols} cols, "
             f"{len(self.rounds)} round(s), "
             f"{sum(len(r.tasks) for r in self.rounds)} tile task(s)",
         ]
+        if cfg.residency:
+            st = residency_stats(self)
+            lines.append(
+                f"  residency: {st['fetches']} fetch(es) for "
+                f"{st['reads']} tile read(s) "
+                f"(hit rate {st['hit_rate']:.0%}, "
+                f"{st['fetch_reduction']:.2f}x fewer than reload)")
         spills = sum(1 for t_ in self.w_home.values() if t_ < 0) \
             + sum(1 for t_ in self.x_home if t_ < 0)
         if spills:
@@ -195,15 +312,95 @@ class Schedule:
         return "\n".join(lines)
 
 
+#: Migration alias: PR 2/3 named the single-GEMM IR ``Schedule``.
+Schedule = FabricProgram
+
+
 # ---------------------------------------------------------------------------
 # Scheduling
 # ---------------------------------------------------------------------------
-def schedule_gemm(M: int, K: int, N: int, nbits: int,
-                  cfg: FabricConfig = FabricConfig(),
-                  signed: bool = False) -> Schedule:
-    """Plan ``(M, K) @ (K, N)`` onto the block grid (no execution)."""
-    if min(M, K, N) < 1:
-        raise ValueError(f"degenerate GEMM {M}x{K}x{N}")
+def _task_operands(t: TileTask, nbits: int):
+    """The (kind, key, src, bits) operand reads of one tile task.
+
+    Activation slices are keyed ``(m, k0)`` -- shared across fused GEMMs
+    (all of them read the same activations); weight tiles are keyed
+    ``(gemm, k0, n0)``.  The K-slice matters: two tasks reading
+    different K-ranges of one row fetch different payloads.
+    """
+    kw = t.k1 - t.k0
+    yield "x", (t.m, t.k0), t.x_src, kw * nbits
+    yield "w", (t.gemm, t.k0, t.n0), t.w_src, kw * (t.n1 - t.n0) * nbits
+
+
+def _storage_block_ids(n_blocks: int, n_storage: int,
+                       placement: str) -> Tuple[int, ...]:
+    """Which grid sites hold operands (the placement dimension)."""
+    if placement == "interleaved" and n_storage > 0:
+        return tuple(int(i * n_blocks / n_storage) for i in range(n_storage))
+    return tuple(range(n_storage))
+
+
+def _assign_slots(chunk, compute_blocks, resident, x_keys, w_keys):
+    """Residency-affinity task placement within one round.
+
+    Each unit prefers a free compute block that already holds its weight
+    tile (the big payload), then one holding its activation slice;
+    leftovers fill the remaining blocks in grid order.  Deterministic:
+    units are visited in schedule order.
+    """
+    free = list(compute_blocks)
+    assign = {}
+    deferred = []
+    for u in chunk:
+        b = next((b for b in free if w_keys[u] in resident[b]), None)
+        if b is None:
+            b = next((b for b in free if x_keys[u] in resident[b]), None)
+        if b is None:
+            deferred.append(u)
+        else:
+            assign[u] = b
+            free.remove(b)
+    for u in deferred:
+        assign[u] = free.pop(0)
+    return assign
+
+
+def _evict_lru(res: dict, capacity: int, pinned: set):
+    """Evict least-recently-used resident tiles until under capacity.
+
+    Tiles read by the current round (``pinned``) are never evicted; the
+    idot layout guarantees one x slice + one w tile always fit a block.
+    """
+    while sum(bits for bits, _ in res.values()) > capacity:
+        victims = [(last, kk) for kk, (_, last) in res.items()
+                   if kk not in pinned]
+        if not victims:
+            break
+        res.pop(min(victims)[1])
+
+
+def schedule_program(specs: Sequence[GemmSpec], nbits: int,
+                     cfg: FabricConfig = FabricConfig(),
+                     signed: bool = False) -> FabricProgram:
+    """Plan one or more activation-sharing GEMMs onto the block grid.
+
+    All specs must share ``M`` and ``K`` (they read the same activation
+    operand -- the fused-QKV contract); each spec brings its own ``N``
+    and weight matrix.  No execution happens here; the returned
+    :class:`FabricProgram` feeds :func:`execute_program`,
+    :func:`schedule_cost`, and the search.
+    """
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("fabric program needs at least one GEMM")
+    M, K = specs[0].M, specs[0].K
+    for g in specs:
+        if min(g.M, g.K, g.N) < 1:
+            raise ValueError(f"degenerate GEMM {g.name}: {g.M}x{g.K}x{g.N}")
+        if (g.M, g.K) != (M, K):
+            raise ValueError(
+                f"fused GEMMs must share activations: {g.name} is "
+                f"{g.M}x{g.K}, expected {M}x{K}")
     if cram.idot_geometry(nbits, cfg.rows, ACC_BITS) < 1:
         # idot_tile clamps to >= 1, which would silently plan a program
         # that does not fit the array (accumulator + scratch + 1 tuple
@@ -213,28 +410,32 @@ def schedule_gemm(M: int, K: int, N: int, nbits: int,
             f"program (too few rows)")
     kt = cram.idot_tile(nbits, cfg.rows, ACC_BITS)
     k_tiles = math.ceil(K / kt)
-    n_tiles = math.ceil(N / cfg.cols)
+    n_tiles = [math.ceil(g.N / cfg.cols) for g in specs]
 
-    # --- mode map: size storage demand, keep >= min_compute_blocks ----------
+    # --- mode map + placement: size storage demand, place the blocks -------
     w_tile_bits = {}
-    for ki in range(k_tiles):
-        for ni in range(n_tiles):
-            kw = min(K, (ki + 1) * kt) - ki * kt
-            nw = min(N, (ni + 1) * cfg.cols) - ni * cfg.cols
-            w_tile_bits[(ki, ni)] = kw * nw * nbits
+    for g, spec in enumerate(specs):
+        for ki in range(k_tiles):
+            for ni in range(n_tiles[g]):
+                kw = min(K, (ki + 1) * kt) - ki * kt
+                nw = min(spec.N, (ni + 1) * cfg.cols) - ni * cfg.cols
+                w_tile_bits[(g, ki, ni)] = kw * nw * nbits
     x_row_bits = K * nbits
     total_bits = sum(w_tile_bits.values()) + M * x_row_bits
     n_storage = min(math.ceil(total_bits / cfg.block_bits),
                     cfg.n_blocks - cfg.min_compute_blocks)
     n_storage = max(n_storage, 0)
-    n_compute = cfg.n_blocks - n_storage
-    modes = tuple(["storage"] * n_storage + ["compute"] * n_compute)
+    storage_ids = _storage_block_ids(cfg.n_blocks, n_storage, cfg.placement)
+    modes = tuple("storage" if b in set(storage_ids) else "compute"
+                  for b in range(cfg.n_blocks))
+    compute_blocks = tuple(b for b, m in enumerate(modes) if m == "compute")
+    n_compute = len(compute_blocks)
 
     # --- operand residency: first-fit into the storage blocks ---------------
-    free = [cfg.block_bits] * n_storage
+    free = {b: cfg.block_bits for b in storage_ids}
 
     def place(bits: int) -> int:
-        for b in range(n_storage):
+        for b in storage_ids:
             if free[b] >= bits:
                 free[b] -= bits
                 return b
@@ -243,57 +444,129 @@ def schedule_gemm(M: int, K: int, N: int, nbits: int,
     w_home = {key: place(bits) for key, bits in sorted(w_tile_bits.items())}
     x_home = tuple(place(x_row_bits) for _ in range(M))
 
-    # --- tile tasks -> lockstep rounds of n_compute ------------------------
-    # (ki, ni, m) order: consecutive tasks share a weight tile, so the
-    # load builder below coalesces their fetches into one broadcast.
-    units = [(m, ki, ni) for ki in range(k_tiles) for ni in range(n_tiles)
+    # --- tile units -> lockstep rounds of n_compute ------------------------
+    # (ki, g, ni, m) order: consecutive units share a weight tile (so a
+    # round's sharers join one broadcast), and for fused GEMMs every
+    # activation slice (m, k-slice) recurs across g/ni -- the reuse the
+    # resident-tile map converts into skipped fetches.  Single-GEMM
+    # programs reduce to the PR 3 (ki, ni, m) order exactly.
+    units = [(g, m, ki, ni)
+             for ki in range(k_tiles)
+             for g in range(len(specs))
+             for ni in range(n_tiles[g])
              for m in range(M)]
-    rounds = []
+
+    def unit_task(u, block: int) -> TileTask:
+        g, m, ki, ni = u
+        return TileTask(
+            block=block, m=m, gemm=g,
+            k0=ki * kt, k1=min(K, (ki + 1) * kt),
+            n0=ni * cfg.cols, n1=min(specs[g].N, (ni + 1) * cfg.cols),
+            x_src=x_home[m], w_src=w_home[(g, ki, ni)])
+
+    x_keys = {u: ("x", (u[1], u[2] * kt)) for u in units}
+    w_keys = {u: ("w", (u[0], u[2] * kt, u[3] * cfg.cols)) for u in units}
+
+    resident: Dict[int, dict] = {b: {} for b in compute_blocks}
+    rounds: List[Round] = []
     for r0 in range(0, len(units), n_compute):
-        tasks = []
-        for slot, (m, ki, ni) in enumerate(units[r0:r0 + n_compute]):
-            tasks.append(TileTask(
-                block=n_storage + slot, m=m,
-                k0=ki * kt, k1=min(K, (ki + 1) * kt),
-                n0=ni * cfg.cols, n1=min(N, (ni + 1) * cfg.cols),
-                x_src=x_home[m], w_src=w_home[(ki, ni)]))
-        rounds.append(Round(tasks=tuple(tasks),
-                            loads=_round_loads(tasks, nbits)))
+        chunk = units[r0:r0 + n_compute]
+        if cfg.residency:
+            assign = _assign_slots(chunk, compute_blocks, resident,
+                                   x_keys, w_keys)
+        else:
+            assign = {u: compute_blocks[i] for i, u in enumerate(chunk)}
+        tasks = tuple(unit_task(u, assign[u]) for u in chunk)
 
-    return Schedule(cfg=cfg, nbits=nbits, signed=signed, M=M, K=K, N=N,
-                    kt=kt, modes=modes, x_home=x_home, w_home=w_home,
-                    rounds=tuple(rounds))
+        # load stage: group this round's tile reads by (kind, key); each
+        # group is ONE fetch broadcast to the blocks that miss
+        order: List[Tuple[str, tuple]] = []
+        needs: Dict[Tuple[str, tuple], list] = {}
+        pinned: Dict[int, set] = {b: set() for b in compute_blocks}
+        for t in tasks:
+            for kind, key, src, bits in _task_operands(t, nbits):
+                kk = (kind, key)
+                if kk not in needs:
+                    needs[kk] = [src, bits, []]
+                    order.append(kk)
+                if t.block not in needs[kk][2]:
+                    needs[kk][2].append(t.block)
+                pinned[t.block].add(kk)
 
-
-def _round_loads(tasks, nbits: int) -> Tuple[TileLoad, ...]:
-    """Build one round's load stage, coalescing broadcastable fetches.
-
-    A *contiguous* run of tasks reading the same weight tile (the
-    (ki, ni, m) unit order makes sharers adjacent) becomes one
-    :class:`TileLoad` with several destinations -- the payload crosses
-    the fabric once on a multi-destination net.  Activation slices get
-    the same treatment, keyed ``(m, k0)`` -- the K-slice matters: two
-    tasks reading different K-ranges of one row fetch different
-    payloads.  Runs coalesce mainly at ``M == 1`` (one slice feeding
-    several n-tiles); elsewhere ``m`` varies fastest, so runs are
-    singletons.
-    """
-    loads: list = []
-    last = {}                      # kind -> index of most recent load
-    for t in tasks:
-        kw = t.k1 - t.k0
-        for kind, key, src, bits in (
-                ("x", (t.m, t.k0), t.x_src, kw * nbits),
-                ("w", (t.k0, t.n0), t.w_src, kw * (t.n1 - t.n0) * nbits)):
-            i = last.get(kind)
-            if i is not None and loads[i].key == key:
-                loads[i] = dataclasses.replace(
-                    loads[i], dsts=loads[i].dsts + (t.block,))
+        rindex = len(rounds)
+        loads = []
+        for kk in order:
+            src, bits, dsts = needs[kk]
+            if cfg.residency:
+                missing = [d for d in dsts if kk not in resident[d]]
+                for d in dsts:
+                    if kk in resident[d]:
+                        resident[d][kk][1] = rindex        # LRU touch
             else:
-                last[kind] = len(loads)
-                loads.append(TileLoad(kind=kind, key=key, src=src,
-                                      dsts=(t.block,), bits=bits))
-    return tuple(loads)
+                missing = dsts
+            if not missing:
+                continue                                   # all-hit: no net
+            loads.append(TileLoad(kind=kk[0], key=kk[1], src=src,
+                                  dsts=tuple(missing), bits=bits))
+            if cfg.residency:
+                for d in missing:
+                    resident[d][kk] = [bits, rindex]
+                    _evict_lru(resident[d], cfg.block_bits, pinned[d])
+        rounds.append(Round(tasks=tasks, loads=tuple(loads)))
+
+    return FabricProgram(cfg=cfg, nbits=nbits, signed=signed, gemms=specs,
+                         kt=kt, modes=modes, x_home=x_home, w_home=w_home,
+                         rounds=tuple(rounds))
+
+
+def schedule_gemm(M: int, K: int, N: int, nbits: int,
+                  cfg: FabricConfig = FabricConfig(),
+                  signed: bool = False) -> FabricProgram:
+    """Plan ``(M, K) @ (K, N)`` onto the block grid (no execution)."""
+    return schedule_program((GemmSpec("gemm", M, K, N),), nbits,
+                            cfg=cfg, signed=signed)
+
+
+def residency_stats(sched: FabricProgram) -> dict:
+    """Audit the load stage: fetches vs resident hits, from the IR alone.
+
+    ``reads`` counts every (task, operand) pair; ``fetches`` counts
+    :class:`TileLoad` nets (a broadcast is ONE fetch); a pair not
+    covered by a same-round load destination was served by the block's
+    resident-tile map (``hits``).  ``reload_fetches`` is what the PR 3
+    reload-every-round load stage would have issued (one net per
+    distinct tile per round) -- ``fetch_reduction`` is the headline
+    residency win the fabric benchmark gates on.
+    """
+    reads = fetch_pairs = fetches = reload_fetches = 0
+    fetch_bits = reload_bits = 0.0
+    for rnd in sched.rounds:
+        loaded = {}
+        for ld in rnd.loads:
+            fetches += 1
+            fetch_bits += ld.bits
+            loaded[(ld.kind, tuple(ld.key))] = set(ld.dsts)
+        round_keys = {}
+        for t in rnd.tasks:
+            for kind, key, _src, bits in _task_operands(t, sched.nbits):
+                kk = (kind, key)
+                reads += 1
+                round_keys[kk] = bits
+                if t.block in loaded.get(kk, ()):
+                    fetch_pairs += 1
+        reload_fetches += len(round_keys)
+        reload_bits += sum(round_keys.values())
+    hits = reads - fetch_pairs
+    return {
+        "reads": reads,
+        "fetches": fetches,
+        "fetch_bits": fetch_bits,
+        "hits": hits,
+        "hit_rate": hits / max(reads, 1),
+        "reload_fetches": reload_fetches,
+        "reload_fetch_bits": reload_bits,
+        "fetch_reduction": reload_fetches / max(fetches, 1),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -305,15 +578,18 @@ def _round_loads(tasks, nbits: int) -> Tuple[TileLoad, ...]:
 MAX_BATCH_BLOCKS = 512
 
 
-def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
-                     executor: Optional[str] = None,
-                     batch_rounds: Optional[bool] = None,
-                     max_batch_blocks: int = MAX_BATCH_BLOCKS) -> np.ndarray:
-    """Run the schedule's rounds exactly; operands already unsigned.
+def execute_program(sched: FabricProgram, x_u: np.ndarray,
+                    w_us: Sequence[np.ndarray],
+                    executor: Optional[str] = None,
+                    batch_rounds: Optional[bool] = None,
+                    max_batch_blocks: int = MAX_BATCH_BLOCKS
+                    ) -> List[np.ndarray]:
+    """Run the program's rounds exactly; operands already unsigned.
 
-    x_u ``(M, K)``, w_u ``(K, N)`` unsigned ``< 2^nbits``.  Returns the
-    raw uint64 accumulator image ``(M, N)`` (callers apply the signed
-    zero-point correction; see :func:`fabric_matmul`).
+    x_u ``(M, K)`` is the shared activation; ``w_us[g]`` is GEMM *g*'s
+    ``(K, N_g)`` weight, all unsigned ``< 2^nbits``.  Returns one raw
+    uint64 accumulator image ``(M, N_g)`` per fused GEMM (callers apply
+    the signed zero-point correction; see :func:`fabric_matmul`).
 
     ``batch_rounds`` (default: on for the compiled executor) replays ALL
     rounds as one ``engine.execute_blocks`` launch: every round replays
@@ -332,16 +608,26 @@ def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
     if batch_rounds is None:
         batch_rounds = executor == "compiled" and len(sched.rounds) > 1
     x_u = np.asarray(x_u, np.uint64)
-    w_u = np.asarray(w_u, np.uint64)
-    if x_u.shape != (sched.M, sched.K) or w_u.shape != (sched.K, sched.N):
-        raise ValueError(f"operands {x_u.shape} @ {w_u.shape} do not match "
-                         f"schedule {sched.M}x{sched.K}x{sched.N}")
-    if np.any(x_u >= (1 << sched.nbits)) or np.any(w_u >= (1 << sched.nbits)):
+    w_us = [np.asarray(w, np.uint64) for w in w_us]
+    if len(w_us) != len(sched.gemms):
+        raise ValueError(f"{len(w_us)} weight operand(s) for a "
+                         f"{len(sched.gemms)}-GEMM program")
+    M, K = sched.M, sched.K
+    for g, (spec, w_u) in enumerate(zip(sched.gemms, w_us)):
+        if x_u.shape != (M, K) or w_u.shape != (K, spec.N):
+            raise ValueError(
+                f"operands {x_u.shape} @ {w_u.shape} do not match "
+                f"schedule {M}x{K}x{spec.N} (gemm {spec.name})")
+        if np.any(w_u >= (1 << sched.nbits)):
+            raise ValueError(f"operands must be < 2^{sched.nbits}")
+    if np.any(x_u >= (1 << sched.nbits)):
         raise ValueError(f"operands must be < 2^{sched.nbits}")
 
     prog, lay = programs.idot(sched.nbits, rows=cfg.rows, tuples=sched.kt)
-    n_compute = sched.n_compute
-    out = np.zeros((sched.M, sched.N), np.uint64)
+    compute_blocks = sched.compute_blocks
+    slot_of = {b: i for i, b in enumerate(compute_blocks)}
+    n_compute = len(compute_blocks)
+    outs = [np.zeros((M, spec.N), np.uint64) for spec in sched.gemms]
 
     def pack_blocks(tasks_slots, n_slots: int) -> np.ndarray:
         """Vectorized pack: all (task, block-slot) pairs of one launch.
@@ -356,7 +642,7 @@ def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
         for t, slot in tasks_slots:
             kw, nw = t.k1 - t.k0, t.n1 - t.n0
             a_vals[slot, :kw, :] = x_u[t.m, t.k0:t.k1][:, None]  # -> cols
-            b_vals[slot, :kw, :nw] = w_u[t.k0:t.k1, t.n0:t.n1]
+            b_vals[slot, :kw, :nw] = w_us[t.gemm][t.k0:t.k1, t.n0:t.n1]
         arrs = np.zeros((n_slots, cfg.rows, cfg.cols), bool)
         bases = np.array([lay.base(i) for i in range(sched.kt)])
         for name, vals in (("a", a_vals), ("b", b_vals)):
@@ -385,11 +671,11 @@ def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
 
     if not batch_rounds:
         for rnd in sched.rounds:
-            slots = [(t, t.block - sched.n_storage) for t in rnd.tasks]
+            slots = [(t, slot_of[t.block]) for t in rnd.tasks]
             acc = launch(pack_blocks(slots, n_compute))
             for t, slot in slots:
-                out[t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
-        return out
+                outs[t.gemm][t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
+        return outs
 
     # batched replay: rounds become extra block-columns of one launch;
     # the last chunk stays zero-padded to the chunk shape so ONE
@@ -398,25 +684,46 @@ def execute_schedule(sched: Schedule, x_u: np.ndarray, w_u: np.ndarray,
     chunk_r = max(1, min(R, max(max_batch_blocks, n_compute) // n_compute))
     for c0 in range(0, R, chunk_r):
         chunk = sched.rounds[c0:c0 + chunk_r]
-        slots = [(t, ri * n_compute + t.block - sched.n_storage)
+        slots = [(t, ri * n_compute + slot_of[t.block])
                  for ri, rnd in enumerate(chunk) for t in rnd.tasks]
         acc = launch(pack_blocks(slots, chunk_r * n_compute))
         for t, slot in slots:
-            out[t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
-    return out
+            outs[t.gemm][t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
+    return outs
+
+
+def execute_schedule(sched: FabricProgram, x_u: np.ndarray, w_u: np.ndarray,
+                     executor: Optional[str] = None,
+                     batch_rounds: Optional[bool] = None,
+                     max_batch_blocks: int = MAX_BATCH_BLOCKS) -> np.ndarray:
+    """Single-GEMM wrapper of :func:`execute_program` (legacy surface)."""
+    if len(sched.gemms) != 1:
+        raise ValueError("execute_schedule is single-GEMM; use "
+                         "execute_program for fused programs")
+    return execute_program(sched, x_u, (w_u,), executor=executor,
+                           batch_rounds=batch_rounds,
+                           max_batch_blocks=max_batch_blocks)[0]
 
 
 @dataclasses.dataclass(frozen=True)
 class FabricResult:
     out: np.ndarray
-    schedule: Schedule
+    schedule: FabricProgram
+    cost: costmodel.ScheduleCost
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedResult:
+    """Outputs of one fused multi-GEMM fabric program (one per GEMM)."""
+    outs: Tuple[np.ndarray, ...]
+    schedule: FabricProgram
     cost: costmodel.ScheduleCost
 
 
 def fabric_matmul(x, w, nbits: int = 4,
                   cfg: FabricConfig = FabricConfig(),
                   signed: bool = False, *,
-                  schedule: Optional[Schedule] = None,
+                  schedule: Optional[FabricProgram] = None,
                   batch_rounds: Optional[bool] = None) -> FabricResult:
     """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
 
@@ -429,52 +736,105 @@ def fabric_matmul(x, w, nbits: int = 4,
     precision must match the operands.  ``batch_rounds`` is forwarded to
     :func:`execute_schedule`.
     """
+    res = fabric_fused_matmul(x, (w,), nbits=nbits, cfg=cfg, signed=signed,
+                              program=schedule, batch_rounds=batch_rounds)
+    return FabricResult(out=res.outs[0], schedule=res.schedule,
+                        cost=res.cost)
+
+
+def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
+                        cfg: FabricConfig = FabricConfig(),
+                        signed: bool = False, *,
+                        names: Optional[Sequence[str]] = None,
+                        program: Optional[FabricProgram] = None,
+                        batch_rounds: Optional[bool] = None) -> FusedResult:
+    """Run several GEMMs sharing activations as ONE fabric program.
+
+    ``x (M, K) @ ws[g] (K, N_g)`` for every g -- the fused-QKV case: one
+    grid allocation, shared activation residency, one batched wide-block
+    launch.  Bit-exact per GEMM vs ``x @ ws[g]`` in int64.
+
+    ``program`` reuses a pre-built plan (e.g. the :func:`search_program`
+    argmin); its shapes / precision must match the operands.
+    """
     x = np.asarray(x)
-    w = np.asarray(w)
-    if schedule is None:
-        sched = schedule_gemm(x.shape[0], x.shape[1], w.shape[1], nbits,
-                              cfg=cfg, signed=signed)
+    ws = [np.asarray(w) for w in ws]
+    if names is None:
+        names = [f"gemm{g}" for g in range(len(ws))]
+    if program is None:
+        specs = tuple(GemmSpec(str(names[g]), x.shape[0], x.shape[1],
+                               ws[g].shape[1]) for g in range(len(ws)))
+        sched = schedule_program(specs, nbits, cfg=cfg, signed=signed)
     else:
-        sched = schedule
-        if (sched.M, sched.K, sched.N) != (x.shape[0], x.shape[1],
-                                           w.shape[1]) \
-                or sched.nbits != nbits or sched.signed != signed:
+        sched = program
+        shapes = tuple((g.M, g.K, g.N) for g in sched.gemms)
+        want = tuple((x.shape[0], x.shape[1], w.shape[1]) for w in ws)
+        if shapes != want or sched.nbits != nbits or sched.signed != signed:
             raise ValueError(
-                f"schedule {sched.M}x{sched.K}x{sched.N}/int{sched.nbits}"
+                f"program {shapes}/int{sched.nbits}"
                 f"{'s' if sched.signed else 'u'} does not match operands "
-                f"{x.shape} @ {w.shape} int{nbits}{'s' if signed else 'u'}")
+                f"{want} int{nbits}{'s' if signed else 'u'}")
     if signed:
-        cram._check_range((x, w), nbits, signed=True)
+        cram._check_range([x] + ws, nbits, signed=True)
         xu, off = cram._bias_signed(x, nbits)
-        wu, _ = cram._bias_signed(w, nbits)
-        raw = execute_schedule(sched, xu, wu, batch_rounds=batch_rounds)
-        out = cram._unbias(raw, off,
-                           xu.sum(axis=1, dtype=np.int64)[:, None],
-                           wu.sum(axis=0, dtype=np.int64)[None, :],
-                           x.shape[1])
+        wus = [cram._bias_signed(w, nbits)[0] for w in ws]
+        raws = execute_program(sched, xu, wus, batch_rounds=batch_rounds)
+        a_sums = xu.sum(axis=1, dtype=np.int64)[:, None]
+        outs = tuple(
+            cram._unbias(raw, off, a_sums,
+                         wu.sum(axis=0, dtype=np.int64)[None, :], x.shape[1])
+            for raw, wu in zip(raws, wus))
     else:
-        out = execute_schedule(sched, x, w, batch_rounds=batch_rounds)
-    return FabricResult(out=out, schedule=sched, cost=schedule_cost(sched))
+        outs = tuple(execute_program(sched, x, ws,
+                                     batch_rounds=batch_rounds))
+    return FusedResult(outs=outs, schedule=sched, cost=schedule_cost(sched))
 
 
 # ---------------------------------------------------------------------------
 # Cost accounting (walks the IR, prices with core.costmodel)
 # ---------------------------------------------------------------------------
-def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
-    """Roll one schedule up into energy (pJ) / time (us).
+def _broadcast_net_mm(cfg: FabricConfig, src: int,
+                      dsts: Tuple[int, ...]) -> float:
+    """Wire length of one multi-destination fabric net, by placement.
+
+    The net spans the bounding box of the source and destination sites
+    (a Steiner-tree approximation): its length is the Manhattan span in
+    hops times the per-hop wire length -- so a broadcast to neighbours
+    is short and one across the grid diameter is long.
+    """
+    sites = [cfg.site(src)] + [cfg.site(d) for d in dsts]
+    rows_ = [s[0] for s in sites]
+    cols_ = [s[1] for s in sites]
+    span = (max(rows_) - min(rows_)) + (max(cols_) - min(cols_))
+    return costmodel.hop_net_length_mm(span)
+
+
+def _spill_net_mm(cfg: FabricConfig, dsts: Tuple[int, ...]) -> float:
+    """Off-fabric fetch: the long I/O column plus the on-fabric hops
+    from the host edge to the farthest destination block."""
+    edge = max(cfg.edge_hops(d) for d in dsts)
+    return costmodel.NET_LENGTH_SPILL_MM + costmodel.hop_net_length_mm(edge)
+
+
+def schedule_cost(sched: FabricProgram) -> costmodel.ScheduleCost:
+    """Roll one fabric program up into energy (pJ) / time (us).
 
     Event counts per round (transposed bit-serial layout):
 
     * operand load: each :class:`TileLoad` moves its payload bits ONCE,
       regardless of how many destinations the broadcast fans out to --
-      the fetch is a single multi-destination net (fabric hop when the
-      home is a storage-mode block, the spill path when off-fabric) and
-      one read stream at the source.
+      the fetch is a single multi-destination net priced by the
+      Manhattan span of the sites it touches (:func:`_broadcast_net_mm`;
+      the spill path adds the off-fabric I/O column), and one read
+      stream at the source.  Tiles served from a block's resident-tile
+      map appear in NO load: residency savings are wire and storage
+      savings the cost model sees directly.
     * storage-mode traffic: source rows read (``ceil(bits / row width)``
       at the home block, once per load) plus destination rows written
-      per task (the tile spans ``kt * 2n`` rows of the compute block
-      while it is still in storage mode), plus ``ACC_BITS`` accumulator
-      rows read back per task (the drain stage).
+      per *fetched* copy (the tile spans ``kt * nbits`` rows of the
+      compute block while it is still in storage mode; resident hits
+      write nothing), plus ``ACC_BITS`` accumulator rows read back per
+      task (the drain stage).
     * compute: every *started* block burns ``program.cycles()``
       compute-mode cycles; idle blocks in a partial round are never
       started (per-block start lines) and burn nothing.  Rounds
@@ -488,6 +848,8 @@ def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
     compute, so each pipeline stage costs ``max(compute, next_load +
     drain)`` -- strictly less than serial for any schedule with >= 2
     rounds (the hidden work is positive), identical for 1 round.
+    Residency shrinks the load stage of later rounds, so the pipeline
+    model credits reuse with real cycles, not just energy.
     """
     cfg = sched.cfg
     cycles = sched.program.cycles()
@@ -496,6 +858,8 @@ def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
     n_active = sum(len(r.tasks) for r in sched.rounds)
     fabric_bits = 0.0
     spill_bits = 0.0
+    fabric_bit_mm = 0.0
+    spill_bit_mm = 0.0
     load_rows = []                 # per round: src reads + dst writes
     drain_rows = []                # per round: accumulator readback
     for rnd in sched.rounds:
@@ -503,14 +867,22 @@ def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
         for ld in rnd.loads:
             if ld.src >= 0:
                 fabric_bits += ld.bits
+                fabric_bit_mm += ld.bits * _broadcast_net_mm(cfg, ld.src,
+                                                             ld.dsts)
                 lr += math.ceil(ld.bits / row_bits)        # src reads, once
             else:
                 spill_bits += ld.bits
+                spill_bit_mm += ld.bits * _spill_net_mm(cfg, ld.dsts)
+            # dst writes while the compute block is still in storage
+            # mode -- one copy per destination that actually fetched
+            lr += len(ld.dsts) * sched.kt * sched.nbits
         for t in rnd.tasks:
-            # result readback always crosses the fabric to the host edge
-            fabric_bits += ACC_BITS * (t.n1 - t.n0)
-            # dst writes while the compute block is still in storage mode
-            lr += sched.kt * 2 * sched.nbits
+            # result readback crosses the fabric to the host edge: hops
+            # from the task's site to the I/O interface
+            bits = ACC_BITS * (t.n1 - t.n0)
+            fabric_bits += bits
+            fabric_bit_mm += bits * costmodel.hop_net_length_mm(
+                cfg.edge_hops(t.block))
         load_rows.append(lr)
         drain_rows.append(float(len(rnd.tasks) * ACC_BITS))
     rows_touched = sum(load_rows) + sum(drain_rows)
@@ -525,21 +897,23 @@ def schedule_cost(sched: Schedule) -> costmodel.ScheduleCost:
                           (load_rows[r + 1] + drain_rows[r]) * ratio)
     overlapped += cycles + drain_rows[R - 1] * ratio
 
+    shapes = "+".join(f"{g.M}x{g.K}x{g.N}" for g in sched.gemms)
     return costmodel.schedule_cost_rollup(
-        f"fabric/gemm{sched.M}x{sched.K}x{sched.N}/int{sched.nbits}",
+        f"fabric/gemm{shapes}/int{sched.nbits}",
         n_blocks=cfg.n_blocks, n_compute=sched.n_compute,
         n_storage=sched.n_storage, rounds=R,
         compute_block_cycles=float(n_active * cycles),
         round_cycles=float(R * cycles),
         storage_rows_touched=rows_touched,
         fabric_bits_moved=fabric_bits, spill_bits_moved=spill_bits,
-        ops=sched.ops, serial_cycles=serial, overlapped_cycles=overlapped)
+        ops=sched.ops, serial_cycles=serial, overlapped_cycles=overlapped,
+        fabric_bit_mm=fabric_bit_mm, spill_bit_mm=spill_bit_mm)
 
 
 # ---------------------------------------------------------------------------
 # Schedule autotuner: enumerate FabricConfig geometries x storage/compute
-# splits, price each candidate with the (cheap, pure-Python) costmodel
-# roll-up -- NO execution -- and return the argmin schedule.
+# splits x placements, price each candidate with the (cheap, pure-Python)
+# costmodel roll-up -- NO execution -- and return the argmin program.
 # ---------------------------------------------------------------------------
 #: Paper §V-D block geometries (same 20 Kb capacity, different aspect).
 GEOMETRY_CHOICES: Tuple[Tuple[int, int], ...] = tuple(
@@ -560,8 +934,15 @@ _SEARCH_MEMO = engine._LRUCache(128)
 
 @dataclasses.dataclass(frozen=True)
 class SearchResult:
-    """Argmin of a schedule search plus the full priced candidate table."""
-    schedule: Schedule
+    """Argmin of a schedule search plus the full priced candidate table.
+
+    ``candidates`` holds one row per *distinct* schedule: geometry-
+    equivalent configs (e.g. two ``min_compute_blocks`` values clamping
+    to the same storage/compute split) are deduplicated before pricing,
+    and every row carries the residency hit-rate/fetch columns so an
+    autotune pick is explainable from the table alone.
+    """
+    schedule: FabricProgram
     cost: costmodel.ScheduleCost
     objective: str
     candidates: Tuple[dict, ...]     # one row per priced candidate
@@ -574,8 +955,18 @@ class SearchResult:
         c = self.schedule.cfg
         return (f"search[{self.objective}]: {len(self.candidates)} "
                 f"candidate(s) -> {c.rows}x{c.cols} "
-                f"min_compute={c.min_compute_blocks} "
+                f"min_compute={c.min_compute_blocks} {c.placement} "
                 f"({getattr(self.cost, OBJECTIVES[self.objective]):.0f})")
+
+    def candidate_table(self) -> str:
+        """The priced candidate table, one aligned text row each."""
+        cols = ("rows", "cols", "placement", "n_compute", "n_storage",
+                "rounds", "hit_rate", "fetches", "objective",
+                "energy_pj")
+        head = " ".join(f"{c:>10}" for c in cols)
+        body = [" ".join(f"{r[c]:>10}" for c in cols)
+                for r in self.candidates]
+        return "\n".join([head] + body)
 
 
 def _split_choices(n_blocks: int) -> Tuple[int, ...]:
@@ -584,41 +975,50 @@ def _split_choices(n_blocks: int) -> Tuple[int, ...]:
     return tuple(sorted(x for x in raw if 1 <= x <= n_blocks))
 
 
-def search_schedule(M: int, K: int, N: int, nbits: int, *,
-                    base: FabricConfig = FabricConfig(),
-                    signed: bool = False,
-                    geometries: Optional[Tuple[Tuple[int, int], ...]] = None,
-                    splits: Optional[Tuple[int, ...]] = None,
-                    objective: str = "overlapped_cycles") -> SearchResult:
-    """Search ``FabricConfig`` geometries x tiling splits for one GEMM.
+def search_program(specs: Sequence[GemmSpec], nbits: int, *,
+                   base: FabricConfig = FabricConfig(),
+                   signed: bool = False,
+                   geometries: Optional[Tuple[Tuple[int, int], ...]] = None,
+                   splits: Optional[Tuple[int, ...]] = None,
+                   placements: Optional[Tuple[str, ...]] = None,
+                   objective: str = "overlapped_cycles") -> SearchResult:
+    """Search geometries x splits x placements for one fabric program.
 
-    Every candidate is planned with :func:`schedule_gemm` and priced
+    Every candidate is planned with :func:`schedule_program` and priced
     with :func:`schedule_cost` -- pure Python on the IR, no simulator
     execution -- so the search is cheap enough to run per serving shape.
-    The argmin schedule is returned ready for :func:`fabric_matmul`
-    (``schedule=``).
+    The argmin program is returned ready for :func:`fabric_fused_matmul`
+    (``program=``) / :func:`fabric_matmul` (``schedule=``).
 
     ``geometries`` defaults to the base grid's geometry plus the paper
     §V-D choices (:data:`GEOMETRY_CHOICES`).  Callers that will
     *execute* the winner on the simulator may want to pin ``geometries``
     to the base geometry only: each new (nbits, rows, kt) shape compiles
-    a fresh program (seconds), whereas split-only tuning reuses compiled
-    programs.  ``splits`` defaults to a sweep of
-    ``min_compute_blocks`` over the grid (:func:`_split_choices`).
+    a fresh program (seconds), whereas split/placement tuning reuses
+    compiled programs.  ``splits`` defaults to a sweep of
+    ``min_compute_blocks`` over the grid (:func:`_split_choices`);
+    ``placements`` to :data:`PLACEMENT_CHOICES` (where the storage
+    blocks sit -- the dimension the hop-priced wire model makes
+    meaningful).
 
+    Candidates that plan to an identical schedule (same geometry,
+    placement, and resulting storage/compute split) are priced once.
     Results are memoized (bounded LRU) -- serving calls the search once
     per (shape, grid), not once per token.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"expected one of {sorted(OBJECTIVES)}")
+    specs = tuple(specs)
     geometries = tuple(geometries) if geometries is not None else \
         tuple(dict.fromkeys(((base.rows, base.cols),) + GEOMETRY_CHOICES))
     splits = tuple(splits) if splits is not None else \
         _split_choices(base.n_blocks)
+    placements = tuple(placements) if placements is not None else \
+        PLACEMENT_CHOICES
 
-    key = (M, K, N, nbits, signed, base.n_blocks, base.executor,
-           geometries, splits, objective)
+    key = (specs, nbits, signed, base.n_blocks, base.executor,
+           base.residency, geometries, splits, placements, objective)
     hit = _SEARCH_MEMO.get(key)
     if hit is not None:
         return hit
@@ -627,36 +1027,67 @@ def search_schedule(M: int, K: int, N: int, nbits: int, *,
     best = None
     best_val = None
     rows_out = []
+    seen = set()
     for rows, cols in geometries:
-        for mcb in splits:
-            if mcb > base.n_blocks:
-                continue
-            cfg = FabricConfig(n_blocks=base.n_blocks, rows=rows, cols=cols,
-                               executor=base.executor,
-                               min_compute_blocks=mcb)
-            try:
-                sched = schedule_gemm(M, K, N, nbits, cfg=cfg, signed=signed)
-            except ValueError:
-                continue               # geometry can't host the program
-            cost = schedule_cost(sched)
-            val = float(getattr(cost, attr))
-            rows_out.append({
-                "rows": rows, "cols": cols, "min_compute": mcb,
-                "n_compute": sched.n_compute, "n_storage": sched.n_storage,
-                "rounds": len(sched.rounds), "kt": sched.kt,
-                "objective": round(val, 3),
-                "serial_cycles": round(cost.serial_cycles_, 1),
-                "overlapped_cycles": round(cost.overlapped_cycles_, 1),
-                "energy_pj": round(cost.energy_pj, 3),
-            })
-            if best_val is None or val < best_val:
-                best, best_val = (sched, cost), val
+        for placement in placements:
+            for mcb in splits:
+                if mcb > base.n_blocks:
+                    continue
+                cfg = FabricConfig(n_blocks=base.n_blocks, rows=rows,
+                                   cols=cols, executor=base.executor,
+                                   min_compute_blocks=mcb,
+                                   placement=placement,
+                                   residency=base.residency)
+                try:
+                    sched = schedule_program(specs, nbits, cfg=cfg,
+                                             signed=signed)
+                except ValueError:
+                    continue           # geometry can't host the program
+                sig = (rows, cols, placement, sched.n_compute)
+                if sig in seen:        # geometry-equivalent: price once
+                    continue
+                seen.add(sig)
+                cost = schedule_cost(sched)
+                stats = residency_stats(sched)
+                val = float(getattr(cost, attr))
+                rows_out.append({
+                    "rows": rows, "cols": cols, "min_compute": mcb,
+                    "placement": placement,
+                    "n_compute": sched.n_compute,
+                    "n_storage": sched.n_storage,
+                    "rounds": len(sched.rounds), "kt": sched.kt,
+                    "objective": round(val, 3),
+                    "serial_cycles": round(cost.serial_cycles_, 1),
+                    "overlapped_cycles": round(cost.overlapped_cycles_, 1),
+                    "energy_pj": round(cost.energy_pj, 3),
+                    "fetches": stats["fetches"],
+                    "hits": stats["hits"],
+                    "hit_rate": round(stats["hit_rate"], 3),
+                    "fetch_reduction": round(stats["fetch_reduction"], 3),
+                })
+                if best_val is None or val < best_val:
+                    best, best_val = (sched, cost), val
     if best is None:
+        shapes = "+".join(f"{g.M}x{g.K}x{g.N}" for g in specs)
         raise ValueError(
-            f"no candidate geometry can schedule {M}x{K}x{N} int{nbits}")
+            f"no candidate geometry can schedule {shapes} int{nbits}")
     return _SEARCH_MEMO.put(key, SearchResult(
         schedule=best[0], cost=best[1], objective=objective,
         candidates=tuple(rows_out)))
+
+
+def search_schedule(M: int, K: int, N: int, nbits: int, *,
+                    base: FabricConfig = FabricConfig(),
+                    signed: bool = False,
+                    geometries: Optional[Tuple[Tuple[int, int], ...]] = None,
+                    splits: Optional[Tuple[int, ...]] = None,
+                    placements: Optional[Tuple[str, ...]] = None,
+                    objective: str = "overlapped_cycles") -> SearchResult:
+    """Single-GEMM wrapper of :func:`search_program` (legacy surface)."""
+    return search_program((GemmSpec("gemm", M, K, N),), nbits, base=base,
+                          signed=signed, geometries=geometries,
+                          splits=splits, placements=placements,
+                          objective=objective)
 
 
 # ---------------------------------------------------------------------------
@@ -709,33 +1140,46 @@ def fabric_attention_scores(q: np.ndarray, k: np.ndarray,
 
 
 class FabricLinearProbe:
-    """Run one decode step's linear projection on the simulated fabric.
+    """Run one decode step's linear projection(s) on the simulated fabric.
 
     Attached to :class:`repro.serve.engine.ServeEngine`, the probe takes
     the engine's *live* per-step activations (the token embeddings of
-    the batch being decoded), quantizes activation and weight to
+    the batch being decoded), quantizes activations and weights to
     ``bits``, and runs the projection as a fabric-scheduled GEMM --
     i.e. a small slice of a real decode step executes on the
     cycle-accurate block grid, with a cost report per step.
 
+    ``w`` may be a single ``(d_in, d_out)`` weight or a *sequence* of
+    them sharing ``d_in`` (the Q/K/V/... projections of one layer): a
+    multi-weight probe runs the whole decode step's projections as ONE
+    fused :class:`FabricProgram` -- shared activation residency, one
+    grid allocation, one batched launch -- and ``observe`` returns a
+    tuple of outputs.
+
     The fabric simulator is an oracle, not a serving fast path, so the
     probe only samples the first ``max_steps`` decode steps.
 
-    ``autotune=True`` runs :func:`search_schedule` on the first observed
+    ``autotune=True`` runs :func:`search_program` on the first observed
     activation shape and serves every sampled step from the argmin
-    schedule -- serving picks its grid split automatically.  The search
-    is restricted to the probe's own block geometry by default (split
-    sweep only: executing a new geometry would compile a new program
-    mid-serve); pass ``search_geometries`` to widen it.
+    program -- serving picks its grid split and placement
+    automatically.  The search is restricted to the probe's own block
+    geometry by default (split/placement sweep only: executing a new
+    geometry would compile a new program mid-serve); pass
+    ``search_geometries`` to widen it.
     """
 
     def __init__(self, w, cfg: FabricConfig = FabricConfig(),
                  bits: int = 8, max_steps: int = 1,
                  autotune: bool = False,
                  search_geometries: Optional[tuple] = None):
-        self.w = np.asarray(w, np.float32)       # (d_in, d_out)
-        if self.w.ndim != 2:
-            raise ValueError(f"probe weight must be 2-D, got {self.w.shape}")
+        ws = list(w) if isinstance(w, (list, tuple)) else [w]
+        self.ws = tuple(np.asarray(wi, np.float32) for wi in ws)
+        self.fused = isinstance(w, (list, tuple))
+        for wi in self.ws:
+            if wi.ndim != 2 or wi.shape[0] != self.ws[0].shape[0]:
+                raise ValueError(
+                    f"probe weights must be 2-D and share d_in, got "
+                    f"{[tuple(x.shape) for x in self.ws]}")
         self.cfg = cfg
         self.bits = bits
         self.max_steps = max_steps
@@ -746,32 +1190,44 @@ class FabricLinearProbe:
         self.outputs: list = []
 
     @property
+    def w(self) -> np.ndarray:
+        """Legacy single-weight accessor."""
+        return self.ws[0]
+
+    @property
     def done(self) -> bool:
         return len(self.costs) >= self.max_steps
 
-    def _schedule_for(self, M: int, K: int, N: int) -> Optional[Schedule]:
+    def _program_for(self, M: int, K: int) -> Optional[FabricProgram]:
         if not self.autotune:
             return None
-        if self.search is None or \
-                (self.search.schedule.M, self.search.schedule.K,
-                 self.search.schedule.N) != (M, K, N):
+        specs = tuple(GemmSpec(f"proj{g}", M, K, wi.shape[1])
+                      for g, wi in enumerate(self.ws))
+        if self.search is None or self.search.schedule.gemms != specs:
             geoms = self.search_geometries if self.search_geometries \
                 is not None else ((self.cfg.rows, self.cfg.cols),)
-            self.search = search_schedule(M, K, N, self.bits, base=self.cfg,
-                                          signed=True, geometries=geoms)
+            self.search = search_program(specs, self.bits, base=self.cfg,
+                                         signed=True, geometries=geoms)
         return self.search.schedule
 
-    def observe(self, x) -> Optional[np.ndarray]:
-        """x: (B, d_in) float activation of the current decode step."""
+    def observe(self, x):
+        """x: (B, d_in) float activation of the current decode step.
+
+        Returns the probe's dequantized projection output: one array for
+        a single-weight probe, a tuple (one per projection) for a fused
+        probe; ``None`` once ``max_steps`` steps have been sampled.
+        """
         if self.done:
             return None
         x = np.asarray(x, np.float32)
         qx, sx = _quantize_sym(x, self.bits)
-        qw, sw = _quantize_sym(self.w, self.bits)
-        sched = self._schedule_for(qx.shape[0], qx.shape[1], qw.shape[1])
-        res = fabric_matmul(qx, qw, nbits=self.bits, cfg=self.cfg,
-                            signed=True, schedule=sched)
-        y = res.out.astype(np.float32) * (sx * sw)
+        qws, sws = zip(*(_quantize_sym(wi, self.bits) for wi in self.ws))
+        prog = self._program_for(qx.shape[0], qx.shape[1])
+        res = fabric_fused_matmul(qx, qws, nbits=self.bits, cfg=self.cfg,
+                                  signed=True, program=prog)
+        ys = tuple(out.astype(np.float32) * (sx * sw)
+                   for out, sw in zip(res.outs, sws))
+        y = ys if self.fused else ys[0]
         self.costs.append(res.cost)
         self.outputs.append(y)
         return y
@@ -783,13 +1239,15 @@ class FabricLinearProbe:
             "geometry": f"{cfg.rows}x{cfg.cols}",
             "n_blocks": cfg.n_blocks,
             "min_compute": cfg.min_compute_blocks,
+            "placement": cfg.placement,
+            "projections": len(self.ws),
             "autotuned": self.search is not None,
         }
 
     def report(self) -> Optional[dict]:
         if not self.costs:
             return None
-        rep = combine_costs("fabric/decode_linear", self.costs).report()
+        rep = combine_costs("fabric/decode_step", self.costs).report()
         rep.update(self.config_summary())
         return rep
 
@@ -816,4 +1274,6 @@ def combine_costs(name: str, costs) -> costmodel.ScheduleCost:
         # sequential launches: serial latencies add; overlap only exists
         # within each schedule, so the pipelined latencies add too
         serial_cycles=sum(c.serial_cycles_ for c in costs),
-        overlapped_cycles=sum(c.overlapped_cycles_ for c in costs))
+        overlapped_cycles=sum(c.overlapped_cycles_ for c in costs),
+        fabric_bit_mm=sum(c.fabric_bit_mm for c in costs),
+        spill_bit_mm=sum(c.spill_bit_mm for c in costs))

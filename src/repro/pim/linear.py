@@ -23,6 +23,10 @@ Backends (``PimConfig.mode``):
 Activations are dynamically quantized to int8 per call in packed modes
 (standard W4A8/W8A8 serving).  ``linear_apply`` is differentiable only
 in ``off`` mode; packed modes are inference paths.
+
+``fused_linear_apply`` applies several linears sharing one input (the
+QKV projections); in ``fabric`` mode they run as ONE multi-GEMM
+``FabricProgram`` with shared activation residency.
 """
 
 from __future__ import annotations
@@ -76,6 +80,10 @@ def linear_apply(params: dict, x: jnp.ndarray, cfg: PimConfig) -> jnp.ndarray:
     """y = x @ W with the configured backend.  x: (..., d_in)."""
     if not cfg.packed:
         return x @ params["w"]
+    if cfg.mode == "fabric":
+        # one pipeline for single and fused fabric GEMMs: the fused path
+        # with a single weight IS the single-GEMM schedule
+        return fused_linear_apply((params,), x, cfg)[0]
 
     orig_shape = x.shape
     d_in = orig_shape[-1]
@@ -91,29 +99,59 @@ def linear_apply(params: dict, x: jnp.ndarray, cfg: PimConfig) -> jnp.ndarray:
         ap = kops.pack_bitplanes(qx, cfg.act_bits, axis=1)
         raw = kops.popcount_matmul(ap, wp)
         acc = raw.astype(jnp.float32) * ws[None, :]
-    elif cfg.mode == "fabric":
-        import numpy as np
-
-        from repro.pim import fabric as fabric_mod
-
-        qw = kref.unpack_bitplanes(wp, axis=0, signed=True)   # (K, N) int32
-        fcfg = cfg.fabric if cfg.fabric is not None \
-            else fabric_mod.FabricConfig()
-        # both operands ride the wider precision's idot geometry; int4
-        # weights are in-range int8 values, so the arithmetic is exact
-        nbits = max(cfg.act_bits, cfg.weight_bits)
-        sched = None
-        if cfg.fabric_autotune:
-            sched = fabric_mod.search_schedule(
-                qx.shape[0], qx.shape[1], qw.shape[1], nbits, base=fcfg,
-                signed=True,
-                geometries=((fcfg.rows, fcfg.cols),)).schedule
-        res = fabric_mod.fabric_matmul(
-            np.asarray(qx, np.int64), np.asarray(qw, np.int64),
-            nbits=nbits, cfg=fcfg, signed=True, schedule=sched)
-        acc = jnp.asarray(res.out.astype(np.float32)) * ws[None, :]
     else:
         raise ValueError(cfg.mode)
 
     y = acc.astype(jnp.float32) * sx[:, None]
     return y.reshape(orig_shape[:-1] + (y.shape[-1],)).astype(x.dtype)
+
+
+def fused_linear_apply(params_list, x: jnp.ndarray, cfg: PimConfig):
+    """Apply several linears sharing the input (the QKV projections).
+
+    Returns a tuple ``(x @ W_0, x @ W_1, ...)``, one per entry of
+    ``params_list``.  In ``fabric`` mode the projections are fused into
+    ONE :class:`repro.pim.fabric.FabricProgram`: one grid allocation,
+    shared activation residency (the activation tiles are fetched once
+    and reused by every projection), one batched wide-block launch.
+    Bit-identical to calling :func:`linear_apply` per layer -- the
+    activation quantization is per call and deterministic, so the fused
+    path shares it exactly.  Other modes simply loop
+    :func:`linear_apply` (the MXU paths have no cross-GEMM state to
+    share).
+    """
+    params_list = list(params_list)
+    if cfg.mode != "fabric":
+        return tuple(linear_apply(p, x, cfg) for p in params_list)
+
+    import numpy as np
+
+    from repro.pim import fabric as fabric_mod
+
+    orig_shape = x.shape
+    d_in = orig_shape[-1]
+    xf = x.reshape(-1, d_in)
+    qx, sx = kops.quantize(xf.astype(jnp.float32), bits=cfg.act_bits, axis=0)
+    qws = [kref.unpack_bitplanes(p["w_packed"], axis=0, signed=True)
+           for p in params_list]
+    fcfg = cfg.fabric if cfg.fabric is not None \
+        else fabric_mod.FabricConfig()
+    nbits = max(cfg.act_bits, cfg.weight_bits)
+    prog = None
+    if cfg.fabric_autotune:
+        specs = tuple(fabric_mod.GemmSpec(f"proj{g}", qx.shape[0],
+                                          qx.shape[1], qw.shape[1])
+                      for g, qw in enumerate(qws))
+        prog = fabric_mod.search_program(
+            specs, nbits, base=fcfg, signed=True,
+            geometries=((fcfg.rows, fcfg.cols),)).schedule
+    res = fabric_mod.fabric_fused_matmul(
+        np.asarray(qx, np.int64), [np.asarray(qw, np.int64) for qw in qws],
+        nbits=nbits, cfg=fcfg, signed=True, program=prog)
+    outs = []
+    for raw, p in zip(res.outs, params_list):
+        acc = jnp.asarray(raw.astype(np.float32)) * p["w_scale"][None, :]
+        y = acc.astype(jnp.float32) * sx[:, None]
+        outs.append(
+            y.reshape(orig_shape[:-1] + (y.shape[-1],)).astype(x.dtype))
+    return tuple(outs)

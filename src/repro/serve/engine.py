@@ -2,11 +2,15 @@
 batching (vLLM-style lite) and greedy/temperature sampling.
 
 An optional ``fabric_probe`` (:class:`repro.pim.fabric.FabricLinearProbe`)
-routes one linear projection of the live decode step through the
-simulated Compute RAM block grid -- the paper's fabric executing a slice
-of real serving traffic, with per-step energy/time accounting.  A probe
-constructed with ``autotune=True`` picks its grid split via the fabric
-schedule search on the first observed shape, so serving selects the best
+routes linear projections of the live decode step through the simulated
+Compute RAM block grid -- the paper's fabric executing a slice of real
+serving traffic, with per-step energy/time accounting.  A probe built
+with several weights (the Q/K/V/... projections of one layer) runs the
+whole decode step's projections as ONE fused
+:class:`repro.pim.fabric.FabricProgram`: one grid allocation, shared
+activation residency, one batched launch.  A probe constructed with
+``autotune=True`` picks its grid split and placement via the fabric
+program search on the first observed shape, so serving selects the best
 geometry automatically; ``fabric_report()`` names the grid served
 from."""
 

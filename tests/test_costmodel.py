@@ -84,6 +84,48 @@ def test_wire_energy_pinned():
         cm.wire_energy_fj(1, cm.NET_LENGTH_SPILL_MM)
 
 
+def test_hop_net_length_pinned():
+    """Topology-aware wire model: one Manhattan hop = 0.15 mm, nets are
+    monotone (non-decreasing) in hop count and never shorter than one
+    hop; two hops equal the legacy flat fabric net, so the hop model and
+    the flat model agree on a typical short hop and diverge with grid
+    diameter."""
+    assert cm.NET_LENGTH_HOP_MM == pytest.approx(0.15)
+    assert cm.hop_net_length_mm(0) == pytest.approx(cm.NET_LENGTH_HOP_MM)
+    assert cm.hop_net_length_mm(1) == pytest.approx(cm.NET_LENGTH_HOP_MM)
+    assert cm.hop_net_length_mm(2) == pytest.approx(cm.NET_LENGTH_FABRIC_MM)
+    lengths = [cm.hop_net_length_mm(h) for h in range(10)]
+    assert lengths == sorted(lengths)
+    # wire energy over the hop-priced length is monotone in the hop
+    # count for a fixed payload (grid-diameter monotonicity)
+    energies = [cm.wire_energy_fj(40, cm.hop_net_length_mm(h))
+                for h in (1, 2, 6, 14)]
+    assert all(a < b for a, b in zip(energies, energies[1:]))
+
+
+def test_wire_energy_bit_mm_matches_flat_pricing():
+    """bits x mm pricing is the same Keckler constants as the flat
+    model: pricing N bits over one flat net length must agree."""
+    assert cm.wire_energy_bit_mm_fj(100 * cm.NET_LENGTH_FABRIC_MM) == \
+        pytest.approx(cm.wire_energy_fj(100, cm.NET_LENGTH_FABRIC_MM))
+    assert cm.wire_energy_bit_mm_fj(0.0) == 0.0
+
+
+def test_schedule_rollup_hop_priced_wire():
+    """When the schedule walk supplies hop-priced bit*mm totals, the
+    wire split is derived from them (not the flat net lengths), and the
+    totals round-trip through the report."""
+    c = _rollup(fabric_bits_moved=100.0, spill_bits_moved=50.0,
+                fabric_bit_mm=45.0, spill_bit_mm=90.0)
+    want = (cm.wire_energy_bit_mm_fj(45.0)
+            + cm.wire_energy_bit_mm_fj(90.0)) / 1e3
+    assert c.energy_wire_pj == pytest.approx(want)
+    rep = c.report()
+    assert rep["fabric_bit_mm"] == pytest.approx(45.0)
+    assert rep["spill_bit_mm"] == pytest.approx(90.0)
+    assert rep["avg_hop_mm"] == pytest.approx(0.45)
+
+
 def test_cr_throughput_gops_dot_pinned():
     """Dot-product throughput from *executed* instruction sequences at
     the compute-mode frequency (paper §V-D operating point)."""

@@ -110,17 +110,19 @@ def test_schedule_structure_and_residency():
     assert sched.n_compute >= cfg.min_compute_blocks
     assert sched.n_compute + sched.n_storage == cfg.n_blocks
 
-    # storage capacity is never oversubscribed
-    used = [0] * sched.n_storage
-    for (ki, ni), home in sched.w_home.items():
+    # storage capacity is never oversubscribed; homes are storage blocks
+    used = {b: 0 for b, mode in enumerate(sched.modes) if mode == "storage"}
+    for (g, ki, ni), home in sched.w_home.items():
         kw = min(23, (ki + 1) * sched.kt) - ki * sched.kt
         nw = min(17, (ni + 1) * cfg.cols) - ni * cfg.cols
         if home >= 0:
+            assert sched.modes[home] == "storage"
             used[home] += kw * nw * sched.nbits
     for m, home in enumerate(sched.x_home):
         if home >= 0:
+            assert sched.modes[home] == "storage"
             used[home] += 23 * sched.nbits
-    assert all(u <= cfg.block_bits for u in used)
+    assert all(u <= cfg.block_bits for u in used.values())
 
     # every (m, k-tile, n-tile) unit appears exactly once, on a compute slot
     seen = set()

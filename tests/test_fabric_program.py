@@ -1,0 +1,375 @@
+"""FabricProgram (PR 4): cross-round residency, multi-GEMM fusion, and
+topology-aware placement.
+
+Differential lines held here:
+
+* residency-enabled replay is **bit-identical** to the PR 3
+  reload-every-round path (``FabricConfig(residency=False)``) across
+  int4/int8 x ragged shapes x 1/4/64-block grids -- residency changes
+  the load stage and the cost model, never the arithmetic;
+* a fused QKV :class:`FabricProgram` is **bit-identical** to three
+  independent ``schedule_gemm`` runs (the acceptance criterion);
+* a weight tile reused across R rounds is fetched exactly once, and the
+  activation-sharing schedule cuts total fetches by >= 2x (the bench
+  gate, pinned here at test scale).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.pim import fabric
+from repro.pim.fabric import FabricConfig, GemmSpec
+
+ROWS, COLS = 128, 8
+
+
+def _grid(n_blocks, **kw):
+    return FabricConfig(n_blocks=n_blocks, rows=ROWS, cols=COLS, **kw)
+
+
+def _signed_operands(rng, nbits, m, k, n):
+    lo, hi = -(1 << (nbits - 1)), 1 << (nbits - 1)
+    x = rng.integers(lo, hi, (m, k)).astype(np.int64)
+    w = rng.integers(lo, hi, (k, n)).astype(np.int64)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Residency differential matrix: residency on == residency off == numpy
+# ---------------------------------------------------------------------------
+_MATRIX = [
+    (4, 1, (3, 10, 11)),
+    (4, 4, (3, 10, 11)),
+    (4, 4, (2, 20, 16)),
+    (4, 64, (5, 23, 17)),
+    (8, 1, (2, 7, 5)),
+    (8, 4, (2, 23, 5)),
+    (8, 64, (3, 9, 10)),
+]
+_IDS = [f"int{n}-{b}blk-{'x'.join(map(str, s))}" for n, b, s in _MATRIX]
+
+
+@pytest.mark.parametrize("nbits,blocks,shape", _MATRIX, ids=_IDS)
+def test_residency_replay_bit_identical(rng, nbits, blocks, shape):
+    m, k, n = shape
+    x, w = _signed_operands(rng, nbits, m, k, n)
+    res_on = fabric.fabric_matmul(x, w, nbits=nbits, cfg=_grid(blocks),
+                                  signed=True)
+    res_off = fabric.fabric_matmul(
+        x, w, nbits=nbits, cfg=_grid(blocks, residency=False), signed=True)
+    np.testing.assert_array_equal(res_on.out, x @ w)
+    np.testing.assert_array_equal(res_off.out, res_on.out)
+    # residency never *adds* fetches, and off means reload-every-round
+    st_on = fabric.residency_stats(res_on.schedule)
+    st_off = fabric.residency_stats(res_off.schedule)
+    assert st_on["fetches"] <= st_off["fetches"]
+    assert st_off["fetch_reduction"] == 1.0
+    assert st_on["reads"] == st_off["reads"]
+    # residency only shrinks the modeled load stage, never grows it
+    assert res_on.cost.energy_wire_pj <= res_off.cost.energy_wire_pj + 1e-9
+    assert res_on.cost.overlapped_cycles_ <= \
+        res_off.cost.overlapped_cycles_ + 1e-9
+
+
+def test_weight_tile_fetched_exactly_once_across_rounds():
+    """Weight-stationary GEMM: one weight tile, >= 8 rounds -- the tile
+    crosses the fabric ONCE (the paper's data-movement headline)."""
+    sched = fabric.schedule_gemm(32, 10, 8, 4, cfg=_grid(4), signed=True)
+    assert len(sched.rounds) >= 8
+    assert len(sched.w_home) == 1                    # single weight tile
+    w_loads = [ld for rnd in sched.rounds for ld in rnd.loads
+               if ld.kind == "w"]
+    assert len(w_loads) == 1, "resident weight tile must be fetched once"
+    # the reload-every-round baseline fetches it every round
+    off = fabric.schedule_gemm(32, 10, 8, 4,
+                               cfg=_grid(4, residency=False), signed=True)
+    w_reloads = [ld for rnd in off.rounds for ld in rnd.loads
+                 if ld.kind == "w"]
+    assert len(w_reloads) == len(off.rounds)
+
+
+def test_residency_fetch_reduction_two_x():
+    """The bench-gated claim at test scale: activation slices reused
+    across n-tiles + broadcast weight tiles cut total fetch count 2x+.
+    M aligned to the compute-block count keeps every activation slice
+    returning to the block that already holds it."""
+    sched = fabric.schedule_gemm(8, 10, 64, 4,
+                                 cfg=_grid(8, min_compute_blocks=8),
+                                 signed=True)
+    assert len(sched.rounds) >= 8
+    st = fabric.residency_stats(sched)
+    assert st["fetch_reduction"] >= 2.0, st
+
+
+def test_residency_eviction_refetches():
+    """A compute block's resident set is bounded by its bit capacity:
+    thrashing working sets evict (LRU) and later reuses re-fetch --
+    fetch count sits strictly between all-hit and reload-every-round."""
+    # one compute block, 8 weight tiles + 12 activation slices streaming
+    # through a 1024-bit block (w tile = 320 bits, x slice = 40): the
+    # working set 12*40 + 2*320 > 1024 forces LRU eviction
+    sched = fabric.schedule_gemm(12, 10, 64, 4, cfg=_grid(2), signed=True)
+    st = fabric.residency_stats(sched)
+    distinct = len({(ld.kind, tuple(ld.key))
+                    for rnd in sched.rounds for ld in rnd.loads})
+    assert st["fetches"] > distinct, "capacity pressure must re-fetch"
+    assert st["fetches"] < st["reload_fetches"]
+    # still exact, of course
+    rng = np.random.default_rng(0)
+    x, w = _signed_operands(rng, 4, 12, 10, 64)
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, schedule=sched)
+    np.testing.assert_array_equal(res.out, x @ w)
+
+
+# ---------------------------------------------------------------------------
+# Multi-GEMM fusion (the QKV case)
+# ---------------------------------------------------------------------------
+def test_fused_qkv_bit_identical_to_three_runs(rng):
+    """Acceptance: one fused QKV FabricProgram == three independent
+    schedule_gemm executions == numpy, and the fused program shares
+    activation fetches across the GEMMs."""
+    M, K = 5, 23
+    x = rng.integers(-8, 8, (M, K)).astype(np.int64)
+    ws = [rng.integers(-8, 8, (K, n)).astype(np.int64) for n in (11, 9, 17)]
+    cfg = _grid(8)
+    fused = fabric.fabric_fused_matmul(x, ws, nbits=4, cfg=cfg, signed=True,
+                                       names=("q", "k", "v"))
+    assert len(fused.outs) == 3
+    for out, w in zip(fused.outs, ws):
+        np.testing.assert_array_equal(out, x @ w)       # ground truth
+        single = fabric.fabric_matmul(x, w, nbits=4, cfg=cfg, signed=True)
+        np.testing.assert_array_equal(out, single.out)  # three runs
+    # shared activation residency: the fused program fetches x fewer
+    # times than the three independent programs combined
+    fused_x = sum(1 for rnd in fused.schedule.rounds for ld in rnd.loads
+                  if ld.kind == "x")
+    separate_x = sum(
+        1 for w in ws
+        for rnd in fabric.schedule_gemm(M, K, w.shape[1], 4, cfg=cfg,
+                                        signed=True).rounds
+        for ld in rnd.loads if ld.kind == "x")
+    assert fused_x < separate_x
+    # one grid allocation, one cost roll-up covering all three GEMMs
+    assert fused.cost.ops == sum(M * K * w.shape[1] for w in ws)
+    assert fused.schedule.gemms[0].name == "q"
+
+
+def test_fused_unsigned_and_program_reuse(rng):
+    x = rng.integers(0, 16, (3, 13)).astype(np.uint64)
+    ws = [rng.integers(0, 16, (13, n)).astype(np.uint64) for n in (5, 8)]
+    res = fabric.fabric_fused_matmul(x, ws, nbits=4, cfg=_grid(4))
+    for out, w in zip(res.outs, ws):
+        np.testing.assert_array_equal(
+            out, x.astype(np.int64) @ w.astype(np.int64))
+    # reuse the plan; mismatched operands are rejected
+    again = fabric.fabric_fused_matmul(x, ws, nbits=4, cfg=_grid(4),
+                                       program=res.schedule)
+    for a, b in zip(again.outs, res.outs):
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError, match="does not match"):
+        fabric.fabric_fused_matmul(x, ws[:1], nbits=4, cfg=_grid(4),
+                                   program=res.schedule)
+
+
+def test_schedule_program_rejects_mismatched_activations():
+    with pytest.raises(ValueError, match="share activations"):
+        fabric.schedule_program(
+            (GemmSpec("a", 2, 8, 4), GemmSpec("b", 3, 8, 4)), 4,
+            cfg=_grid(2))
+    with pytest.raises(ValueError, match="at least one"):
+        fabric.schedule_program((), 4, cfg=_grid(2))
+
+
+def test_single_gemm_program_keeps_legacy_surface():
+    sched = fabric.schedule_gemm(2, 7, 5, 8, cfg=_grid(2))
+    assert (sched.M, sched.K, sched.N) == (2, 7, 5)
+    assert isinstance(sched, fabric.Schedule)        # migration alias
+    fused = fabric.schedule_program(
+        (GemmSpec("q", 2, 7, 5), GemmSpec("k", 2, 7, 5)), 8, cfg=_grid(2))
+    with pytest.raises(ValueError, match="ambiguous"):
+        _ = fused.N
+    with pytest.raises(ValueError, match="single-GEMM"):
+        fabric.execute_schedule(fused, np.zeros((2, 7), np.uint64),
+                                np.zeros((7, 5), np.uint64))
+
+
+def test_fused_linear_apply_matches_per_layer():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.pim import (PimConfig, fused_linear_apply, linear_apply,
+                           linear_init, pack_linear)
+
+    cfgr = PimConfig(mode="ref", weight_bits=4)
+    cfgf = PimConfig(mode="fabric", weight_bits=4, fabric=_grid(6))
+    packed = [pack_linear(linear_init(jax.random.PRNGKey(i), 32, 8, cfgr),
+                          cfgr) for i in range(3)]
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 32), jnp.bfloat16)
+    want = [linear_apply(p, x, cfgr) for p in packed]
+    got_ref = fused_linear_apply(packed, x, cfgr)
+    got_fab = fused_linear_apply(packed, x, cfgf)
+    for w_, r_, f_ in zip(want, got_ref, got_fab):
+        np.testing.assert_array_equal(np.asarray(w_, np.float32),
+                                      np.asarray(r_, np.float32))
+        np.testing.assert_array_equal(np.asarray(w_, np.float32),
+                                      np.asarray(f_, np.float32))
+
+
+def test_fused_linear_apply_autotuned_matches():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.pim import PimConfig, fused_linear_apply, linear_init, \
+        pack_linear
+
+    cfgr = PimConfig(mode="ref", weight_bits=4)
+    cfga = PimConfig(mode="fabric", weight_bits=4, fabric=_grid(6),
+                     fabric_autotune=True)
+    packed = [pack_linear(linear_init(jax.random.PRNGKey(i), 32, 8, cfgr),
+                          cfgr) for i in range(2)]
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32), jnp.bfloat16)
+    want = fused_linear_apply(packed, x, cfgr)
+    got = fused_linear_apply(packed, x, cfga)
+    for w_, g_ in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w_, np.float32),
+                                      np.asarray(g_, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Topology: sites, placement, hop-priced wires
+# ---------------------------------------------------------------------------
+def test_grid_sites_and_hops():
+    cfg = _grid(6)                                   # 3x2... near-square
+    assert cfg.grid_rows * cfg.grid_cols >= cfg.n_blocks
+    assert cfg.site(0) == (0, 0)
+    assert cfg.hops(0, 0) == 0
+    assert cfg.hops(0, cfg.n_blocks - 1) == cfg.grid_diameter
+    assert cfg.edge_hops(0) == 1
+    # hops are symmetric and obey the triangle inequality vs the edge
+    for b in range(cfg.n_blocks):
+        assert cfg.hops(0, b) == cfg.hops(b, 0)
+        assert cfg.edge_hops(b) <= cfg.edge_hops(0) + cfg.hops(0, b)
+
+
+def test_wire_energy_monotone_in_grid_diameter():
+    """The same payload priced across the grid diameter costs strictly
+    more wire energy as the grid grows (acceptance criterion)."""
+    energies = []
+    for n_blocks in (4, 16, 64):
+        cfg = _grid(n_blocks)
+        mm = fabric._broadcast_net_mm(cfg, 0, (cfg.n_blocks - 1,))
+        energies.append(cm.wire_energy_fj(1024, mm))
+    assert energies[0] < energies[1] < energies[2]
+    # spill fetches also grow with distance from the host edge
+    spills = [fabric._spill_net_mm(_grid(n), (n - 1,)) for n in (4, 16, 64)]
+    assert spills[0] < spills[1] < spills[2]
+
+
+def test_placement_affects_wire_energy_not_results(rng):
+    """Interleaving storage among compute blocks changes hop distances
+    (and therefore wire energy) but never the integers."""
+    x, w = _signed_operands(rng, 4, 5, 23, 17)
+    costs = {}
+    for placement in fabric.PLACEMENT_CHOICES:
+        cfg = _grid(16, placement=placement)
+        res = fabric.fabric_matmul(x, w, nbits=4, cfg=cfg, signed=True)
+        np.testing.assert_array_equal(res.out, x @ w)
+        sched = res.schedule
+        assert sched.n_compute + sched.n_storage == 16
+        costs[placement] = res.cost
+    assert costs["interleaved"].energy_wire_pj != \
+        costs["contiguous"].energy_wire_pj
+    # identical event counts: placement only moves bits, never adds them
+    assert costs["interleaved"].fabric_bits_moved == \
+        costs["contiguous"].fabric_bits_moved
+
+
+def test_schedule_cost_uses_hop_pricing():
+    sched = fabric.schedule_gemm(5, 23, 17, 4, cfg=_grid(8), signed=True)
+    cost = fabric.schedule_cost(sched)
+    assert cost.fabric_bit_mm > 0
+    rep = cost.report()
+    assert rep["fabric_bit_mm"] > 0 and rep["avg_hop_mm"] > 0
+    # the wire split is exactly the hop-priced totals
+    want = (cm.wire_energy_bit_mm_fj(cost.fabric_bit_mm)
+            + cm.wire_energy_bit_mm_fj(cost.spill_bit_mm)) / 1e3
+    assert cost.energy_wire_pj == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# Search: placement dimension, dedup, explainable candidates
+# ---------------------------------------------------------------------------
+def test_search_candidates_deduped_and_explainable():
+    sr = fabric.search_schedule(8, 64, 32, 4, base=_grid(8),
+                                geometries=((128, 8), (256, 16)))
+    sigs = [(c["rows"], c["cols"], c["placement"], c["n_compute"])
+            for c in sr.candidates]
+    assert len(sigs) == len(set(sigs)), "geometry-equivalent dupes"
+    for c in sr.candidates:
+        assert c["placement"] in fabric.PLACEMENT_CHOICES
+        assert 0.0 <= c["hit_rate"] <= 1.0
+        assert c["fetches"] > 0 and c["fetch_reduction"] >= 1.0
+    assert {c["placement"] for c in sr.candidates} == \
+        set(fabric.PLACEMENT_CHOICES)
+    # the argmin row is in the table
+    best = min(c["objective"] for c in sr.candidates)
+    assert sr.cost.overlapped_cycles_ == pytest.approx(best, rel=1e-6)
+    assert "placement" in sr.describe() or sr.config.placement in \
+        sr.describe()
+    table = sr.candidate_table()
+    assert "hit_rate" in table and "placement" in table
+
+
+def test_search_program_fused_argmin_executes(rng):
+    M, K = 4, 20
+    x = rng.integers(-8, 8, (M, K)).astype(np.int64)
+    ws = [rng.integers(-8, 8, (K, n)).astype(np.int64) for n in (8, 6)]
+    specs = tuple(GemmSpec(f"p{i}", M, K, w.shape[1])
+                  for i, w in enumerate(ws))
+    sr = fabric.search_program(specs, 4, base=_grid(8), signed=True,
+                               geometries=((ROWS, COLS),))
+    res = fabric.fabric_fused_matmul(x, ws, nbits=4, signed=True,
+                                     program=sr.schedule)
+    for out, w in zip(res.outs, ws):
+        np.testing.assert_array_equal(out, x @ w)
+
+
+# ---------------------------------------------------------------------------
+# Fused serving probe
+# ---------------------------------------------------------------------------
+def test_probe_fused_projections(rng):
+    from repro.pim.fabric import FabricLinearProbe
+
+    ws = [rng.normal(size=(16, n)).astype(np.float32) for n in (6, 4, 5)]
+    probe = FabricLinearProbe(ws, cfg=_grid(4), bits=8, max_steps=1)
+    x = rng.normal(size=(2, 16)).astype(np.float32)
+    ys = probe.observe(x)
+    assert isinstance(ys, tuple) and len(ys) == 3
+    assert [y.shape for y in ys] == [(2, 6), (2, 4), (2, 5)]
+    rep = probe.report()
+    assert rep["projections"] == 3 and rep["energy_pj"] > 0
+    # fused probe output == three single-weight probes, bit for bit
+    for wi, yi in zip(ws, ys):
+        single = FabricLinearProbe(wi, cfg=_grid(4), bits=8, max_steps=1)
+        np.testing.assert_array_equal(single.observe(x), yi)
+
+
+def test_probe_fused_autotune_and_engine(rng):
+    from repro.pim.fabric import FabricLinearProbe
+    from repro.serve.engine import Request, ServeEngine
+    from tests.test_fabric import _StubModel
+
+    ws = [rng.normal(size=(16, n)).astype(np.float32) for n in (6, 4)]
+    probe = FabricLinearProbe(ws, cfg=_grid(4), bits=8, max_steps=2,
+                              autotune=True)
+    eng = ServeEngine(_StubModel(), params={}, batch_slots=2, capacity=8,
+                      fabric_probe=probe)
+    eng.add(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new=4))
+    done = eng.run()
+    assert len(done) == 1
+    rep = eng.fabric_report()
+    assert rep is not None and rep["autotuned"] and rep["projections"] == 2
+    assert probe.search is not None
+    assert len(probe.search.schedule.gemms) == 2
