@@ -158,6 +158,63 @@ def bench_float_compile(print_fn=print, quick=False):
     }
 
 
+def bench_float_dot(print_fn=print, quick=False):
+    """Scan-vs-compiled replay + compile time for the bf16 fused MAC.
+
+    The float tuple loops now get a lane plan (complementary-predication
+    coverage) and the copy/fill-run batcher, so the compiled path must
+    beat the scan controller -- ``--min-fdot-speedup`` gates the ratio
+    and ``--max-compile-s`` covers this compile alongside the bf16-add
+    one.  ``lane_plan``/``serial_start`` are recorded so a silent fall
+    back to flat lowering shows up in the artifact.
+    """
+    from repro.core import compiler, floatprog
+
+    rows, cols = 512, 40
+    tuples = 2 if quick else None
+    prog, lay = floatprog.float_dot(floatprog.BF16, rows=rows,
+                                    tuples=tuples)
+    plan = compiler.analyze(prog)
+    rng = np.random.default_rng(0)
+
+    def bits(shape):
+        s = rng.integers(0, 2, shape).astype(np.uint64)
+        e = rng.integers(100, 150, shape).astype(np.uint64)
+        m = rng.integers(0, 128, shape).astype(np.uint64)
+        return (s << 15) | (e << 7) | m
+
+    state = harness.make_jax_state(harness.pack_state(
+        lay, {"a": bits((lay.tuples, cols)), "b": bits((lay.tuples, cols))},
+        cols))
+    engine.clear_compile_cache()              # force a cold compile
+    t0 = time.perf_counter()
+    fn = engine.compile_program(prog, rows, cols)
+    jax.block_until_ready(fn(state).array)
+    t_compile = time.perf_counter() - t0
+    scan_fn = jax.jit(lambda s, p=prog: engine.execute_scan(p, s))
+    jax.block_until_ready(scan_fn(state).array)
+    t_scan, t_comp = _replay_pair(
+        lambda: jax.block_until_ready(scan_fn(state).array),
+        lambda: jax.block_until_ready(fn(state).array),
+        n=5 if quick else 15)
+    speedup = t_scan / t_comp
+    print_fn(f"engine/float_dot_bf16/speedup,{speedup:.2f},"
+             f"tuples={lay.tuples};scan_ms={t_scan*1e3:.2f};"
+             f"compiled_ms={t_comp*1e3:.2f};compile_s={t_compile:.1f};"
+             f"serial_start={plan.serial_start if plan else -1}")
+    return {
+        "program": f"bf16_dot@{rows}x{lay.tuples}",
+        "cycles": prog.cycles(),
+        "compile_s": round(t_compile, 2),
+        "scan_replay_ms": round(t_scan * 1e3, 4),
+        "compiled_replay_ms": round(t_comp * 1e3, 4),
+        "speedup": round(speedup, 2),
+        "lane_plan": plan is not None,
+        "serial_start": plan.serial_start if plan else -1,
+        "body_len": len(plan.body) if plan else 0,
+    }
+
+
 def run(print_fn=print, json_path=BENCH_JSON, quick=False):
     if not quick:
         for (op, prec), gen in programs.GENERATORS.items():
@@ -175,6 +232,7 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "executors": bench_executors(print_fn, quick=quick),
         "blocks": bench_blocks(print_fn, quick=quick),
         "float_compile": bench_float_compile(print_fn, quick=quick),
+        "float_dot": bench_float_dot(print_fn, quick=quick),
     }
     pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
     print_fn(f"engine/bench_json,{json_path},written")
@@ -189,18 +247,39 @@ def check_idot_speedup(payload: dict, floor: float) -> list:
 
 
 def check_compile_time(payload: dict, ceiling: float) -> list:
-    """Return a failure string when the float compile exceeds the cap.
+    """Return failure strings when a float compile exceeds the cap.
 
-    A payload with no measurement is a FAILURE, not a pass -- the gate
-    must not silently disarm if the bench stops measuring."""
-    fc = payload.get("float_compile", {})
-    s = fc.get("compile_s")
+    Covers both the bf16 adder (``float_compile``) and the fused MAC
+    (``float_dot``).  A payload with no measurement is a FAILURE, not a
+    pass -- the gate must not silently disarm if the bench stops
+    measuring."""
+    bad = []
+    for section in ("float_compile", "float_dot"):
+        fc = payload.get(section, {})
+        s = fc.get("compile_s")
+        if s is None:
+            bad.append(f"{section}/compile_s missing from payload "
+                       "(gate has nothing to check)")
+        elif s > ceiling:
+            bad.append(f"{fc.get('program', section)}: "
+                       f"compile {s:.1f}s > {ceiling}s")
+    return bad
+
+
+def check_fdot_speedup(payload: dict, floor: float) -> list:
+    """Fail when the compiled fused-MAC replay drops below the floor or
+    the lane plan silently fell back to flat lowering."""
+    fd = payload.get("float_dot", {})
+    s = fd.get("speedup")
     if s is None:
-        return ["float_compile/compile_s missing from payload "
+        return ["float_dot/speedup missing from payload "
                 "(gate has nothing to check)"]
-    if s <= ceiling:
-        return []
-    return [f"{fc.get('program', 'float')}: compile {s:.1f}s > {ceiling}s"]
+    bad = []
+    if s < floor:
+        bad.append(f"float_dot: {s:.2f}x < {floor}x")
+    if not fd.get("lane_plan", False):
+        bad.append("float_dot: lane analysis fell back to flat lowering")
+    return bad
 
 
 def main(argv=None) -> int:
@@ -213,15 +292,22 @@ def main(argv=None) -> int:
                     metavar="X",
                     help="fail (exit 1) if any idot compiled-vs-scan "
                     "speedup drops below X")
+    ap.add_argument("--min-fdot-speedup", type=float, default=None,
+                    metavar="X",
+                    help="fail (exit 1) if the bf16 float_dot compiled-"
+                    "vs-scan speedup drops below X (or the lane plan "
+                    "falls back to flat lowering)")
     ap.add_argument("--max-compile-s", type=float, default=None,
                     metavar="S",
-                    help="fail (exit 1) if the float-program compile "
-                    "takes longer than S seconds")
+                    help="fail (exit 1) if a float-program compile "
+                    "(bf16 add or bf16 dot) takes longer than S seconds")
     args = ap.parse_args(argv)
     payload = run(json_path=args.json, quick=args.quick)
     bad = []
     if args.min_idot_speedup is not None:
         bad += check_idot_speedup(payload, args.min_idot_speedup)
+    if args.min_fdot_speedup is not None:
+        bad += check_fdot_speedup(payload, args.min_fdot_speedup)
     if args.max_compile_s is not None:
         bad += check_compile_time(payload, args.max_compile_s)
     if bad:
@@ -229,8 +315,10 @@ def main(argv=None) -> int:
         return 1
     if args.min_idot_speedup is not None:
         print(f"idot speedups >= {args.min_idot_speedup}x: OK")
+    if args.min_fdot_speedup is not None:
+        print(f"float_dot speedup >= {args.min_fdot_speedup}x: OK")
     if args.max_compile_s is not None:
-        print(f"float compile <= {args.max_compile_s}s: OK")
+        print(f"float compiles <= {args.max_compile_s}s: OK")
     return 0
 
 

@@ -111,6 +111,13 @@ def _flat_refs(stream: Sequence[Instr]) -> List[Instr]:
                     lambda p, slot: ("k", getattr(stream[p], slot)))
 
 
+def _ref_delta(a, b):
+    """Row distance between two refs of the same kind (None: unrelated)."""
+    if isinstance(a, tuple) and isinstance(b, tuple) and a[0] == b[0]:
+        return b[1] - a[1]
+    return None
+
+
 def _segment(stream: Sequence[Instr]):
     """Split a ref-stream into ('op', ins) and ('chain', [ins...]) items.
 
@@ -121,6 +128,13 @@ def _segment(stream: Sequence[Instr]):
     ripple-carry add/sub over bit-planes and folds into ONE per-column
     integer op; any run violating the conditions simply splits, so
     correctness never depends on the matcher being clever.
+
+    Runs of OP_COPY with a uniform +/-1 row stride on dst and src
+    ("copyrun"), and of predicated OP_W0/OP_W1 ("fillrun"), fold the
+    same way: the whole run is one integer-domain move/mux instead of a
+    per-row select -- the float programs' big/small builds, align
+    shifts, flushes, and accumulator writebacks are made of exactly
+    these.
     """
     items = []
     i, n = 0, len(stream)
@@ -162,6 +176,35 @@ def _segment(stream: Sequence[Instr]):
                 j += 1
             if len(run) >= MIN_CHAIN:
                 items.append(("andrun", run))
+            else:
+                items.extend(("op", r) for r in run)
+            i = j
+        elif (ins.op == OP_COPY
+              or (ins.pred and ins.op in (OP_W0, OP_W1))):
+            run = [ins]
+            written = {ins.dst}
+            d = None
+            j = i + 1
+            while (j < n and len(run) < MAX_CHAIN
+                   and stream[j].op == ins.op
+                   and stream[j].pred == ins.pred):
+                prev, nxt = run[-1], stream[j]
+                dd = _ref_delta(prev.dst, nxt.dst)
+                if dd not in (1, -1) or (d is not None and dd != d):
+                    break
+                if ins.op == OP_COPY and (
+                        _ref_delta(prev.a, nxt.a) != dd
+                        or nxt.a in written):
+                    break
+                if nxt.dst in written:
+                    break
+                d = dd
+                run.append(nxt)
+                written.add(nxt.dst)
+                j += 1
+            if len(run) >= MIN_CHAIN:
+                items.append(("copyrun" if ins.op == OP_COPY
+                              else "fillrun", run))
             else:
                 items.extend(("op", r) for r in run)
             i = j
@@ -405,6 +448,30 @@ class _Machine:
             self.write(c.dst, _Lazy(s, i))
             self.prov[c.dst] = (s, i)
 
+    def _copy_run(self, run):
+        """Uniform-stride COPY run == one integer-domain move (mux)."""
+        m = len(run)
+        s = self._int_of([c.a for c in run], m)
+        if run[0].pred:
+            old = self._int_of([c.dst for c in run], m)
+            s = old + (s - old) * self._tag_bits()
+        for i, c in enumerate(run):
+            self.write(c.dst, _Lazy(s, i))
+            self.prov[c.dst] = (s, i)
+
+    def _fill_run(self, run):
+        """Predicated W0/W1 run == one integer-domain mask merge."""
+        m = len(run)
+        old = self._int_of([c.dst for c in run], m)
+        tb = self._tag_bits()
+        if run[0].op == OP_W0:
+            s = old - old * tb
+        else:
+            s = old + (((1 << m) - 1) - old) * tb
+        for i, c in enumerate(run):
+            self.write(c.dst, _Lazy(s, i))
+            self.prov[c.dst] = (s, i)
+
     # -- main loop ----------------------------------------------------------
     def run(self, items):
         ctx = self.ctx
@@ -415,6 +482,12 @@ class _Machine:
                 continue
             if kind == "andrun":
                 self._and_run(ins)
+                continue
+            if kind == "copyrun":
+                self._copy_run(ins)
+                continue
+            if kind == "fillrun":
+                self._fill_run(ins)
                 continue
             op = ins.op
             if op == OP_NOP:
@@ -529,6 +602,82 @@ def _used_slots(ins: Instr):
     return reads, writes
 
 
+def _coverage_kills(stream: Sequence[Instr]) -> set:
+    """Rows fully written before any exposed read, counting predicated
+    complementary pairs as one full write.
+
+    The float programs build scratch values with two predicated passes:
+
+        trow g ; ?t copy r, ...     # columns where g
+        tnrow g ; ?t copy r, ...    # columns where ~g
+
+    Together the pair overwrites every column of ``r``, so ``r`` is
+    lane-private scratch exactly like an unpredicated ("kill") write --
+    but the per-position classification in :func:`analyze` only sees a
+    predicated first write and pins it "red", forcing the serial suffix
+    to start there.  This pass walks one iteration tracking the tag
+    latch as an abstract value and returns the rows proven *covered*:
+
+    * an unpredicated write (or one under ``t1``) covers immediately;
+    * a predicated write under ``tag <- row[g]`` (or its negation)
+      records a *half*; the complementary half -- same guard row ``g``,
+      opposite polarity, ``g`` unwritten between the two tag latches --
+      completes the cover;
+    * any exposed read before the cover completes (operand reads and
+      guard reads; a predicated write's read-back of its own dst is the
+      mux being modeled, not an exposed read) disqualifies the row.
+
+    Rows never pair-written are simply absent -- the default
+    classification applies, so this only ever *upgrades* red to kill.
+    """
+    ver: Dict[int, int] = {}
+    tag = None                    # ("row", g, neg, ver) | ("one",) | None
+    halves: Dict[int, tuple] = {}
+    covered: set = set()
+    dead: set = set()
+
+    def spoil(r):
+        dead.add(r)
+        halves.pop(r, None)
+
+    for ins in stream:
+        reads, writes = _used_slots(ins)
+        for slot in reads:
+            if slot == "dst":
+                continue          # predicated write read-back: the mux
+            r = getattr(ins, slot)
+            if r not in covered:
+                spoil(r)
+        if ins.op in (OP_TROW, OP_TNROW):
+            tag = ("row", ins.a, ins.op == OP_TNROW, ver.get(ins.a, 0))
+        elif ins.op == OP_T1:
+            tag = ("one",)
+        elif ins.op in _TAG_WRITE:
+            tag = None            # TC/TNC/TAND/TOR/TNOT: unknown mask
+        if not writes:
+            continue
+        r = ins.dst
+        ver[r] = ver.get(r, 0) + 1
+        if r in covered or r in dead:
+            continue
+        if not ins.pred or tag == ("one",):
+            covered.add(r)
+            halves.pop(r, None)
+        elif tag is None:
+            spoil(r)
+        else:
+            _, g, neg, gv = tag
+            prev = halves.get(r)
+            if prev is None:
+                halves[r] = (g, neg, gv)
+            elif prev == (g, not neg, gv):
+                covered.add(r)
+                halves.pop(r, None)
+            elif prev != (g, neg, gv):
+                spoil(r)
+    return covered
+
+
 def analyze(program: isa.Program) -> Optional[LanePlan]:
     """Try to build a lane-vectorization plan; None means fall back."""
     grouped = program.expand_grouped()
@@ -577,26 +726,35 @@ def analyze(program: isa.Program) -> Optional[LanePlan]:
     if affine_rows & const_rows:
         return None
 
-    # classify const rows by their first access within an iteration
+    # classify const rows by their first access within an iteration.
+    # Rows whose first access is a predicated write may still be lane-
+    # private scratch when complementary predicated passes are proven to
+    # fully overwrite them (the float-program idiom) -- _coverage_kills
+    # upgrades exactly those from "red" to "kill".
     const_written = set()
     for p in range(L):
         _, writes = _used_slots(iters[0][p])
         for slot in writes:
             if refs[p].get(slot, (None,))[0] == "k":
                 const_written.add(refs[p][slot][1])
+    covered = _coverage_kills(iters[0])
     const_kind: Dict[int, str] = {}
     for p in range(L):
         ins = iters[0][p]
         reads, writes = _used_slots(ins)
         for slot in reads:
             r = refs[p].get(slot)
-            if r and r[0] == "k" and r[1] not in const_kind:
-                const_kind[r[1]] = ("ro" if r[1] not in const_written
-                                    else "red")
+            if not (r and r[0] == "k") or r[1] in const_kind:
+                continue
+            if slot == "dst" and r[1] in covered:
+                continue      # covered row's own predicated-write mux
+            const_kind[r[1]] = ("ro" if r[1] not in const_written
+                                else "red")
         for slot in writes:
             r = refs[p].get(slot)
             if r and r[0] == "k" and r[1] not in const_kind:
-                const_kind[r[1]] = "kill" if not ins.pred else "red"
+                const_kind[r[1]] = ("kill" if not ins.pred
+                                    or r[1] in covered else "red")
 
     # find where the serial suffix must begin: the first position that
     # touches a reduction row, or reads a carry/tag value inherited from
@@ -806,7 +964,7 @@ def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
                               if ins.op in _WRITES_ROW}
             shared_ints: Dict[tuple, jax.Array] = {}
             for kind, run in suffix_items:
-                if kind not in ("chain", "andrun"):
+                if kind not in ("chain", "andrun", "copyrun"):
                     continue
                 ref_lists = [[c.a for c in run]]
                 if kind == "chain":
@@ -825,6 +983,19 @@ def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
                 # them must not leak into the next lane (which still
                 # sees its own prefix value)
                 kill_scoped = {}
+                if t:
+                    # provenance written by the previous lane's suffix
+                    # (1-D sources) is stale for this lane on exactly
+                    # the lane-private refs: kill consts and affine
+                    # rows.  Prefix provenance (lane-shaped 2-D
+                    # sources, mapped by lane_view) and shared
+                    # reduction rows stay valid.
+                    for ref, (src, _b) in list(pm.prov.items()):
+                        if getattr(src, "ndim", 1) == 2:
+                            continue
+                        if (ref[0] == "l"
+                                or plan.const_kind.get(ref[1]) == "kill"):
+                            del pm.prov[ref]
 
                 def ser_read(ref, t=t, ks=kill_scoped):
                     if ref[0] == "k":

@@ -264,6 +264,9 @@ BASELINES = {
     # dot: 5 int4 multipliers + 4-deep int32 adder tree (paper §V-D)
     ("dot", "int4"): BaselineDesign("dot", "int4", n_dsp=5, n_lb_compute=8),
     ("dot", "int8"): BaselineDesign("dot", "int8", n_dsp=2, n_lb_compute=8),
+    # bf16 dot: 2 float DSP slices (mul + acc) + adder-tree glue -- the
+    # paper's float column; the CR side runs floatprog.float_dot
+    ("dot", "bf16"): BaselineDesign("dot", "bf16", n_dsp=2, n_lb_compute=8),
 }
 
 

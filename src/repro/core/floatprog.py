@@ -103,15 +103,21 @@ def _layout(fmt: FloatFormat, rows: int, tuples):
     return layout, scratch
 
 
-def _load_and_ftz(e, s, fmt):
-    w, m, eb = fmt.width, fmt.mbits, fmt.ebits
-    e.vec_rel(OP_COPY, s.WA, 0, w, a_rel=True)
-    e.vec_rel(OP_COPY, s.WB, w, w, a_rel=True)
+def _ftz_hidden(e, s, fmt):
+    """Extract hidden bits + flush subnormal inputs in WA/WB."""
+    m, eb = fmt.mbits, fmt.ebits
     for W, H in ((s.WA, s.HA), (s.WB, s.HB)):
         e.tag_or(W + m, eb)
         e.op(OP_TSTORE, H)                  # hidden bit = (exp != 0)
         e.op(OP_TNOT)
         e.vec(OP_W0, W, count=m, pred=True)   # FTZ inputs
+
+
+def _load_and_ftz(e, s, fmt):
+    w = fmt.width
+    e.vec_rel(OP_COPY, s.WA, 0, w, a_rel=True)
+    e.vec_rel(OP_COPY, s.WB, w, w, a_rel=True)
+    _ftz_hidden(e, s, fmt)
 
 
 def float_add(fmt: FloatFormat, rows: int = 512,
@@ -120,7 +126,6 @@ def float_add(fmt: FloatFormat, rows: int = 512,
     from .programs import _Emit
     layout, s = _layout(fmt, rows, tuples)
     m, eb, w = fmt.mbits, fmt.ebits, fmt.width
-    mm, L = fmt.mm, fmt.align_levels
 
     e = _Emit()
     e.op(OP_W0, s.Z)
@@ -130,6 +135,30 @@ def float_add(fmt: FloatFormat, rows: int = 512,
     body = _Emit()
     body.op(OP_T1)
     _load_and_ftz(body, s, fmt)
+    _add_core(body, s, fmt)
+
+    # pack
+    body.vec_rel(OP_COPY, 2 * w, s.RR, m, dst_rel=True)
+    body.vec_rel(OP_COPY, 2 * w + m, s.EE, eb, dst_rel=True)
+    body.nodes.append(Instr(OP_COPY, R(4, 2 * w + m + eb), s.SGN))
+    body.nodes.append(AddReg(4, 3 * w))
+
+    e.nodes.append(Loop(layout.tuples, body.nodes))
+    return Program(f"{fmt.name or 'float'}_add x{layout.tuples}",
+                   e.nodes), layout
+
+
+def _add_core(body, s, fmt):
+    """WA + WB -> (s.SGN, s.EE[:eb], s.RR[:m]), FTZ+RTZ.
+
+    Everything of the float adder between operand load and result pack;
+    shared verbatim by :func:`float_add` (operands = the tuple's a/b)
+    and :func:`float_dot` (operands = running accumulator + product, in
+    the widened accumulator format).  Expects WA/WB loaded and HA/HB
+    set (:func:`_ftz_hidden`).
+    """
+    m, eb = fmt.mbits, fmt.ebits
+    mm, L = fmt.mm, fmt.align_levels
 
     # swap flag + |ediff| + big/small register build (two predicated passes)
     body.op(OP_C0)
@@ -232,15 +261,14 @@ def float_add(fmt: FloatFormat, rows: int = 512,
     body.op(OP_W0, s.SGN, pred=True)
     body.op(OP_T1)
 
-    # pack
-    body.vec_rel(OP_COPY, 2 * w, s.RR, m, dst_rel=True)
-    body.vec_rel(OP_COPY, 2 * w + m, s.EE, eb, dst_rel=True)
-    body.nodes.append(Instr(OP_COPY, R(4, 2 * w + m + eb), s.SGN))
-    body.nodes.append(AddReg(4, 3 * w))
 
-    e.nodes.append(Loop(layout.tuples, body.nodes))
-    return Program(f"{fmt.name or 'float'}_add x{layout.tuples}",
-                   e.nodes), layout
+def _mul_bias(e, s, fmt):
+    """Write the exponent bias constant 2^(e-1) - 1 into s.CB."""
+    eb = fmt.ebits
+    for i in range(eb - 1):
+        e.op(OP_W1, s.CB + i)
+    e.op(OP_W0, s.CB + eb - 1)
+    e.op(OP_W0, s.CB + eb)
 
 
 def float_mul(fmt: FloatFormat, rows: int = 512,
@@ -253,16 +281,34 @@ def float_mul(fmt: FloatFormat, rows: int = 512,
     e = _Emit()
     e.op(OP_W0, s.Z)
     e.op(OP_T1)
-    # exponent bias constant: 2^(e-1) - 1
-    for i in range(eb - 1):
-        e.op(OP_W1, s.CB + i)
-    e.op(OP_W0, s.CB + eb - 1)
-    e.op(OP_W0, s.CB + eb)
+    _mul_bias(e, s, fmt)
     e.ctrl(SetReg(4, 0))
 
     body = _Emit()
     body.op(OP_T1)
     _load_and_ftz(body, s, fmt)
+    _mul_core(body, s, fmt)
+
+    # pack
+    body.vec_rel(OP_COPY, 2 * w, s.MM, m, dst_rel=True)
+    body.vec_rel(OP_COPY, 2 * w + m, s.EE, eb, dst_rel=True)
+    body.nodes.append(Instr(OP_COPY, R(4, 2 * w + m + eb), s.SGN))
+    body.nodes.append(AddReg(4, 3 * w))
+
+    e.nodes.append(Loop(layout.tuples, body.nodes))
+    return Program(f"{fmt.name or 'float'}_mul x{layout.tuples}",
+                   e.nodes), layout
+
+
+def _mul_core(body, s, fmt):
+    """WA * WB -> (s.SGN, s.EE[:eb] flushed, s.MM[:m]), FTZ+RTZ.
+
+    The float multiplier between operand load and result pack, shared
+    by :func:`float_mul` and the fused-MAC :func:`float_dot`.  Expects
+    WA/WB loaded, HA/HB set, and the bias constant in s.CB
+    (:func:`_mul_bias`, emitted once in the prelude).
+    """
+    m, eb = fmt.mbits, fmt.ebits
 
     body.op(OP_XOR, s.SGN, s.WA + m + eb, s.WB + m + eb)
 
@@ -312,12 +358,130 @@ def float_mul(fmt: FloatFormat, rows: int = 512,
     body.op(OP_W0, s.SGN, pred=True)
     body.op(OP_T1)
 
-    # pack
-    body.vec_rel(OP_COPY, 2 * w, s.MM, m, dst_rel=True)
-    body.vec_rel(OP_COPY, 2 * w + m, s.EE, eb, dst_rel=True)
-    body.nodes.append(Instr(OP_COPY, R(4, 2 * w + m + eb), s.SGN))
-    body.nodes.append(AddReg(4, 3 * w))
 
-    e.nodes.append(Loop(layout.tuples, body.nodes))
-    return Program(f"{fmt.name or 'float'}_mul x{layout.tuples}",
-                   e.nodes), layout
+# ---------------------------------------------------------------------------
+# Fused multiply-accumulate: the paper's dot-product column at float
+# precision.  acc rows hold a running accumulator in a *widened* format
+# (same exponent field, mantissa + ACC_GUARD extra RTZ guard bits); each
+# tuple multiplies exactly as float_mul, widens the product, and runs
+# the float_add pipeline against the accumulator -- align, add/sub,
+# normalize -- all in the wide format.  The final normalize/round (RTZ
+# truncation of the guard bits + exp==0 flush) packs the result rows.
+# ---------------------------------------------------------------------------
+#: Extra low-order accumulator mantissa bits (the widened-accumulator
+#: guard).  Matches repro.core.ref.ACC_GUARD -- the numpy oracle.
+ACC_GUARD = 8
+
+
+def wide_format(fmt: FloatFormat, guard: int = ACC_GUARD) -> FloatFormat:
+    """The widened accumulator format of :func:`float_dot`."""
+    return FloatFormat(fmt.ebits, fmt.mbits + guard,
+                       f"{fmt.name}w" if fmt.name else "")
+
+
+def float_dot(fmt: FloatFormat, rows: int = 512, tuples=None,
+              guard: int = ACC_GUARD) -> Tuple[Program, "TupleLayout"]:
+    """acc += sum_t a_t * b_t, FTZ + RTZ, widened accumulator.
+
+    Layout: result rows ``[0, w)`` (fmt bit pattern, valid after every
+    pass), accumulator rows ``[w, w + wide.width)`` (wide-format bit
+    pattern: mantissa, exponent, sign -- host-initialized, so a fresh
+    run starts from +0 and a K-tiled reduction *chains* by carrying the
+    acc image between launches), tuples of ``{a, b}`` above.  Semantics
+    (bit-exact oracle: :func:`repro.core.ref.float_dot`): per tuple the
+    product is rounded to fmt exactly as :func:`float_mul`, widened by
+    ``guard`` zero guard bits, and added to the accumulator with the
+    :func:`float_add` pipeline at the wide format; the final
+    normalize/round truncates the guard bits (RTZ) and flushes a zero
+    exponent.
+    """
+    from .programs import TupleLayout, _Emit
+    m, eb, w = fmt.mbits, fmt.ebits, fmt.width
+    wide = wide_format(fmt, guard)
+    mw = wide.mbits
+    acc_w = wide.width                       # mantissa + exponent + sign
+    ACC = w                                  # result at [0, w), acc above
+
+    sw_base = rows - FloatScratch(0, wide).size()
+    s_base = sw_base - FloatScratch(0, fmt).size()
+    s = FloatScratch(s_base, fmt)
+    sw = FloatScratch(sw_base, wide)
+    stride = 2 * w
+    tuple_base = w + acc_w
+    cap = (s_base - tuple_base) // stride
+    T = tuples if tuples is not None else cap
+    if T < 1 or T > cap:
+        raise ValueError(
+            f"geometry {rows} rows cannot host float_dot[{fmt.name}] "
+            f"with {T if tuples is not None else 1} tuple(s) "
+            f"(capacity {max(cap, 0)})")
+    layout = TupleLayout(w, rows, stride, T, {"a": (0, w), "b": (w, w)},
+                         acc_bits=tuple_base, scratch_base=s_base,
+                         tuple_base=tuple_base)
+
+    e = _Emit()
+    e.op(OP_W0, s.Z)
+    e.op(OP_W0, sw.Z)
+    e.op(OP_T1)
+    _mul_bias(e, s, fmt)
+    e.ctrl(SetReg(4, tuple_base))
+
+    body = _Emit()
+    body.op(OP_T1)
+    _load_and_ftz(body, s, fmt)
+    _mul_core(body, s, fmt)
+    # widen the product into a wide-format operand (guard zeros low)
+    body.vec(OP_W0, sw.WA, count=guard)
+    body.vec(OP_COPY, sw.WA + guard, s.MM, count=m)
+    body.vec(OP_COPY, sw.WA + mw, s.EE, count=eb)
+    body.op(OP_COPY, sw.WA + mw + eb, s.SGN)
+    # fetch the running accumulator (the loop-carried rows: everything
+    # from here on is the serial suffix of the lane plan)
+    body.vec(OP_COPY, sw.WB, ACC, count=acc_w)
+    _ftz_hidden(body, sw, wide)
+    _add_core(body, sw, wide)
+    # write the accumulator back
+    body.vec(OP_COPY, ACC, sw.RR, count=mw)
+    body.vec(OP_COPY, ACC + mw, sw.EE, count=eb)
+    body.op(OP_COPY, ACC + mw + eb, sw.SGN)
+    body.ctrl(AddReg(4, stride))
+    e.nodes.append(Loop(T, body.nodes))
+
+    # final normalize/round: RTZ-drop the guard bits into the result
+    e.vec(OP_COPY, 0, ACC + guard, count=m)
+    e.vec(OP_COPY, m, ACC + mw, count=eb)
+    e.op(OP_COPY, m + eb, ACC + mw + eb)
+    e.tag_or(ACC + mw, eb, invert=True)
+    e.vec(OP_W0, 0, count=w, pred=True)      # exp == 0 -> flush to +0
+    e.op(OP_T1)
+    return Program(f"{fmt.name or 'float'}_dot x{T}", e.nodes), layout
+
+
+def _read_rows(arr, base: int, width: int):
+    import numpy as np
+    out = np.zeros((arr.shape[1],), np.uint64)
+    for i in range(width):
+        out |= arr[base + i, :].astype(np.uint64) << np.uint64(i)
+    return out
+
+
+def fdot_result(arr, fmt: FloatFormat):
+    """Read the packed fmt result of a float_dot pass: (cols,) bits."""
+    return _read_rows(arr, 0, fmt.width)
+
+
+def fdot_acc(arr, fmt: FloatFormat, guard: int = ACC_GUARD):
+    """Read the wide-format accumulator image: (cols,) bits."""
+    return _read_rows(arr, fmt.width, wide_format(fmt, guard).width)
+
+
+def fdot_set_acc(arr, fmt: FloatFormat, acc_bits,
+                 guard: int = ACC_GUARD) -> None:
+    """Write a wide-format accumulator image into a packed state array
+    (in place) -- how a K-tiled reduction chains across launches."""
+    import numpy as np
+    acc_bits = np.asarray(acc_bits, np.uint64)
+    w = fmt.width
+    for i in range(wide_format(fmt, guard).width):
+        arr[w + i, :] = ((acc_bits >> np.uint64(i)) & np.uint64(1)) \
+            .astype(arr.dtype)

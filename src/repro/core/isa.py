@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 from typing import List, Sequence, Union
 
 # ---------------------------------------------------------------------------
@@ -220,6 +221,17 @@ class Program:
 
     def fits_imem(self) -> bool:
         return self.footprint() <= IMEM_SLOTS
+
+    def imem_images(self) -> int:
+        """Instruction-memory images needed to stream this program.
+
+        Every integer program (and the float add/mul sequences) fits the
+        paper's single 4 Kb image; the fused float MAC is the first
+        library program that does not -- the host FSM would reload the
+        imem between segments (a storage-mode row-write burst, amortized
+        over every column x tuple of the pass).
+        """
+        return max(1, math.ceil(self.footprint() / IMEM_SLOTS))
 
     # -- expansion to the executed micro-op stream --------------------------
     def expand(self) -> List[Instr]:

@@ -307,6 +307,22 @@ def fp8_mul(rows: int = DEFAULT_ROWS, tuples: int | None = None):
     return float_mul(FP8_E4M3, rows=rows, tuples=tuples)
 
 
+def bf16_dot(rows: int = DEFAULT_ROWS, tuples: int | None = None):
+    """Fused MAC: acc += sum_t a_t * b_t in bfloat16 (see floatprog)."""
+    from .floatprog import BF16, float_dot
+    return float_dot(BF16, rows=rows, tuples=tuples)
+
+
+def fp16_dot(rows: int = DEFAULT_ROWS, tuples: int | None = None):
+    from .floatprog import FP16, float_dot
+    return float_dot(FP16, rows=rows, tuples=tuples)
+
+
+def fp8_dot(rows: int = DEFAULT_ROWS, tuples: int | None = None):
+    from .floatprog import FP8_E4M3, float_dot
+    return float_dot(FP8_E4M3, rows=rows, tuples=tuples)
+
+
 # ---------------------------------------------------------------------------
 # Registry used by benchmarks / the pim layer
 # ---------------------------------------------------------------------------
@@ -326,6 +342,9 @@ GENERATORS = {
     ("add", "int16"): lambda **kw: iadd(16, **kw),
     ("mul", "int16"): lambda **kw: imul(16, **kw),
     ("dot", "int16"): lambda **kw: idot(16, **kw),
+    ("dot", "bf16"): lambda **kw: bf16_dot(**kw),
+    ("dot", "fp16"): lambda **kw: fp16_dot(**kw),
+    ("dot", "fp8"): lambda **kw: fp8_dot(**kw),
 }
 
 

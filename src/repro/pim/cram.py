@@ -29,9 +29,69 @@ storage mode anyway -- no extra block cycles.
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import numpy as np
 
-from repro.core import engine, harness, programs
+from repro.core import engine, floatprog, harness, programs
+
+
+# ---------------------------------------------------------------------------
+# Element dtypes the PIM stack schedules (per-GEMM asymmetric precision)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DType:
+    """One schedulable element type: integer or FTZ+RTZ float."""
+    name: str
+    kind: str                    # "int" | "float"
+    bits: int                    # storage bits per element
+    fmt: Optional[floatprog.FloatFormat] = None   # floats only
+
+    @property
+    def is_float(self) -> bool:
+        return self.kind == "float"
+
+
+DTYPES = {
+    "int4": DType("int4", "int", 4),
+    "int8": DType("int8", "int", 8),
+    "int16": DType("int16", "int", 16),
+    "bf16": DType("bf16", "float", 16, floatprog.BF16),
+    "fp16": DType("fp16", "float", 16, floatprog.FP16),
+    "fp8": DType("fp8", "float", 8, floatprog.FP8_E4M3),
+}
+
+#: numpy/jax dtype names -> DTYPES keys (``np.dtype(jnp.bfloat16).name``
+#: is "bfloat16" via ml_dtypes).
+_DTYPE_ALIASES = {
+    "bfloat16": "bf16", "float16": "fp16", "float8_e4m3fn": "fp8",
+    "float8_e4m3": "fp8", "uint8": "int8", "uint16": "int16",
+}
+
+
+def resolve_dtype(dtype) -> Optional[DType]:
+    """Map a dtype spec (DType | str | numpy/jax dtype) to a DType.
+
+    ``None`` passes through (callers substitute their int default).
+    Accepts ``jnp.bfloat16`` / ``np.float16`` style dtype objects, the
+    DTYPES keys, and numpy dtype names.
+    """
+    if dtype is None or isinstance(dtype, DType):
+        return dtype
+    if isinstance(dtype, str):
+        key = dtype
+    else:
+        try:
+            key = np.dtype(dtype).name
+        except TypeError:
+            key = getattr(dtype, "__name__", str(dtype))
+    key = _DTYPE_ALIASES.get(key, key)
+    if key not in DTYPES:
+        raise ValueError(
+            f"unsupported dtype {dtype!r}; expected one of "
+            f"{sorted(DTYPES)} (or a numpy/jax dtype mapping to one)")
+    return DTYPES[key]
 
 
 def idot_geometry(n: int, rows: int = 512, acc_bits: int = 32):
@@ -113,6 +173,134 @@ def cram_dot(a, b, n: int, rows: int = 512,
         arr = harness.run_program(prog, lay, {"a": a[ksl], "b": b[ksl]},
                                   a.shape[1], executor=executor)
         out += harness.unpack_acc(arr, lay)
+    return out
+
+
+def fdot_geometry(fmt, rows: int = 512,
+                  guard: int = floatprog.ACC_GUARD) -> int:
+    """Max dot length (tuples) a ``float_dot`` program supports; 0 when
+    the geometry cannot host the format's scratch + accumulator."""
+    if isinstance(fmt, DType):
+        fmt = fmt.fmt
+    try:
+        _, lay = floatprog.float_dot(fmt, rows=rows, guard=guard)
+    except ValueError:
+        return 0
+    return lay.tuples
+
+
+def _resolve_fmt(fmt) -> floatprog.FloatFormat:
+    if isinstance(fmt, floatprog.FloatFormat):
+        return fmt
+    info = resolve_dtype(fmt)
+    if info is None or info.fmt is None:
+        raise ValueError(f"{fmt!r} is not a float dtype")
+    return info.fmt
+
+
+def cram_fdot(a_bits, b_bits, fmt, rows: int = 512,
+              executor: str = "compiled",
+              guard: int = floatprog.ACC_GUARD) -> np.ndarray:
+    """Per-column float fused-MAC dot products on one Compute RAM block.
+
+    a_bits, b_bits: ``(T, cols)`` fmt bit patterns (``ref.to_bits``).
+    Returns ``(cols,)`` fmt bit patterns with the documented FTZ+RTZ
+    fused-MAC semantics (:func:`repro.core.ref.float_dot`).  ``T`` may
+    exceed one program's tuple capacity: the reduction is K-tiled over
+    multiple launches with the *wide accumulator image carried between
+    them*, so the result is bit-identical to a single sequential pass
+    regardless of tiling.
+    """
+    fmt = _resolve_fmt(fmt)
+    a = np.asarray(a_bits, np.uint64)
+    b = np.asarray(b_bits, np.uint64)
+    if np.any(a >= (1 << fmt.width)) or np.any(b >= (1 << fmt.width)):
+        raise ValueError(f"operands must be {fmt.width}-bit patterns")
+    kt = fdot_geometry(fmt, rows, guard)
+    if kt < 1:
+        raise ValueError(
+            f"geometry {rows} rows cannot host a float_dot[{fmt.name}] "
+            f"program (too few rows)")
+    K = a.shape[0]
+    res = np.zeros((a.shape[1],), np.uint64)     # empty reduction: +0
+    acc = None
+    cache = {}                                   # tuples -> (prog, lay)
+    for k0 in range(0, K, kt):
+        t = min(K, k0 + kt) - k0
+        if t not in cache:
+            cache[t] = floatprog.float_dot(fmt, rows=rows, tuples=t,
+                                           guard=guard)
+        prog, lay = cache[t]
+        img = harness.pack_state(lay, {"a": a[k0:k0 + t], "b": b[k0:k0 + t]},
+                                 a.shape[1])
+        if acc is not None:
+            floatprog.fdot_set_acc(img, fmt, acc, guard)
+        arr = np.asarray(engine.run(prog, harness.make_jax_state(img),
+                                    executor=executor).array)
+        acc = floatprog.fdot_acc(arr, fmt, guard)
+        res = floatprog.fdot_result(arr, fmt)
+    return res
+
+
+def cram_fmatmul(x_bits, w_bits, fmt, rows: int = 512, cols: int = 40,
+                 executor: str = "compiled",
+                 guard: int = floatprog.ACC_GUARD) -> np.ndarray:
+    """``(M, K) @ (K, N)`` float matmul on CR blocks (bit patterns).
+
+    The float face of :func:`cram_matmul`: N tiles over block columns,
+    K tiles over ``float_dot`` capacity with the accumulator image
+    chained across launches, M runs as parallel blocks.  Bit-exact vs
+    :func:`repro.core.ref.float_matmul` for any operands -- the result
+    does not depend on the tiling.
+    """
+    import jax.numpy as jnp
+
+    fmt = _resolve_fmt(fmt)
+    x = np.asarray(x_bits, np.uint64)
+    w = np.asarray(w_bits, np.uint64)
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"shape mismatch {x.shape} @ {w.shape}")
+    kt = fdot_geometry(fmt, rows, guard)
+    if kt < 1:
+        raise ValueError(
+            f"geometry {rows} rows cannot host a float_dot[{fmt.name}] "
+            f"program (too few rows)")
+    out = np.zeros((M, N), np.uint64)
+    # only two distinct programs exist: the full K-tile and the final
+    # ragged one -- build each once, not per (N-tile, K-tile) pair
+    cache = {}
+    for n0 in range(0, N, cols):
+        nsl = slice(n0, min(N, n0 + cols))
+        c = nsl.stop - n0
+        accs = None                       # (M, c) wide images, chained
+        for k0 in range(0, K, kt):
+            ksl = slice(k0, min(K, k0 + kt))
+            t = ksl.stop - k0
+            if t not in cache:
+                cache[t] = floatprog.float_dot(fmt, rows=rows, tuples=t,
+                                               guard=guard)
+            prog, lay = cache[t]
+            imgs = []
+            for m in range(M):
+                img = harness.pack_state(lay, {
+                    "a": np.repeat(x[m, ksl][:, None], c, axis=1),
+                    "b": w[ksl, nsl],
+                }, c)
+                if accs is not None:
+                    floatprog.fdot_set_acc(img, fmt, accs[m], guard)
+                imgs.append(img)
+            states = engine.CRState(
+                array=jnp.asarray(np.stack(imgs)),
+                carry=jnp.zeros((M, c), bool),
+                tag=jnp.ones((M, c), bool))
+            res = np.asarray(engine.execute_blocks(
+                prog, states, executor=executor).array)
+            accs = [floatprog.fdot_acc(res[m], fmt, guard)
+                    for m in range(M)]
+            out[:, nsl] = np.stack([floatprog.fdot_result(res[m], fmt)
+                                    for m in range(M)])
     return out
 
 

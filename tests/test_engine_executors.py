@@ -116,6 +116,8 @@ _GEN_CASES = [
     ("mul_fp16", lambda: programs.fp16_mul(rows=512, tuples=2)),
     ("add_fp8", lambda: programs.fp8_add(rows=512, tuples=2)),
     ("mul_fp8", lambda: programs.fp8_mul(rows=512, tuples=2)),
+    ("dot_bf16", lambda: programs.bf16_dot(rows=512, tuples=2)),
+    ("dot_fp8", lambda: programs.fp8_dot(rows=512, tuples=3)),
     ("vsearch8", lambda: programs.vsearch(8, rows=128)),
     ("vcmp_gt4", lambda: programs.vcmp_gt(4, rows=128)),
 ]

@@ -17,11 +17,15 @@ Differential lines held here:
 import numpy as np
 import pytest
 
-from repro.core import costmodel as cm
+from repro.core import costmodel as cm, ref
 from repro.pim import fabric
 from repro.pim.fabric import FabricConfig, GemmSpec
 
 ROWS, COLS = 128, 8
+# float programs need the full-depth geometry (wide-accumulator scratch
+# alone exceeds 128 rows) and use the scan executor: fabric-shaped
+# wide-block float compiles are a bench concern, not a tier-1 one
+FROWS = 512
 
 
 def _grid(n_blocks, **kw):
@@ -120,6 +124,134 @@ def test_residency_eviction_refetches():
     x, w = _signed_operands(rng, 4, 12, 10, 64)
     res = fabric.fabric_matmul(x, w, nbits=4, signed=True, schedule=sched)
     np.testing.assert_array_equal(res.out, x @ w)
+
+
+# ---------------------------------------------------------------------------
+# bf16 rows of the residency matrix + mixed-precision fusion
+# ---------------------------------------------------------------------------
+def _fgrid(n_blocks, **kw):
+    return FabricConfig(n_blocks=n_blocks, rows=FROWS, cols=COLS,
+                        executor="scan", **kw)
+
+
+_BF16_MATRIX = [
+    (1, (2, 7, 5)),
+    (4, (3, 11, 10)),          # ragged everything, K > one fdot tile
+    (4, (2, 4, 9)),            # N > block columns
+]
+_BF16_IDS = [f"bf16-{b}blk-{'x'.join(map(str, s))}"
+             for b, s in _BF16_MATRIX]
+
+
+@pytest.mark.parametrize("blocks,shape", _BF16_MATRIX, ids=_BF16_IDS)
+def test_bf16_residency_replay_bit_identical(rng, blocks, shape):
+    """The bf16 row of the residency on/off matrix: float GEMMs are
+    bit-exact vs the FTZ+RTZ fused-MAC reference (ref.float_matmul),
+    independent of grid size, residency, and K-tiling (the wide
+    accumulator image chains across k-stages)."""
+    import jax.numpy as jnp
+
+    m, k, n = shape
+    x = rng.normal(scale=3.0, size=(m, k)).astype(np.float32)
+    w = rng.normal(scale=2.0, size=(k, n)).astype(np.float32)
+    want = ref.float_matmul(ref.to_bits(x, 8, 7), ref.to_bits(w, 8, 7))
+    res_on = fabric.fabric_matmul(x, w, cfg=_fgrid(blocks),
+                                  dtype=jnp.bfloat16)
+    res_off = fabric.fabric_matmul(
+        x, w, cfg=_fgrid(blocks, residency=False), dtype="bf16")
+    np.testing.assert_array_equal(res_on.out_bits, want)
+    np.testing.assert_array_equal(res_off.out_bits, want)
+    np.testing.assert_array_equal(res_on.out,
+                                  ref.from_bits(want, 8, 7))
+    # residency discipline holds for float rounds too: never more
+    # fetches or fetched bits (drain *positions* may shift -- the
+    # residency-first assignment moves tasks between sites)
+    st_on = fabric.residency_stats(res_on.schedule)
+    st_off = fabric.residency_stats(res_off.schedule)
+    assert st_on["fetches"] <= st_off["fetches"]
+    assert st_on["fetch_bits"] <= st_off["fetch_bits"]
+    assert st_on["reads"] == st_off["reads"]
+
+
+def test_mixed_precision_fused_program_bit_identical(rng):
+    """int8 QKV + a bf16 output projection in ONE FabricProgram
+    (asymmetric per-GEMM precision): every output bit-identical to the
+    independent single-GEMM runs, in one grid allocation."""
+    import jax.numpy as jnp
+
+    M, K = 3, 9
+    x = rng.integers(-8, 8, (M, K)).astype(np.int64)
+    wq, wk, wv = (rng.integers(-100, 100, (K, n)).astype(np.int64)
+                  for n in (6, 6, 5))
+    wo = rng.normal(scale=1.5, size=(K, 7)).astype(np.float32)
+    cfg = _fgrid(6)
+    fused = fabric.fabric_fused_matmul(
+        x, (wq, wk, wv, wo), nbits=8, cfg=cfg, signed=True,
+        dtypes=(None, None, "int8", jnp.bfloat16),
+        names=("q", "k", "v", "o"))
+    # int projections: exact int64 ground truth
+    for out, w in zip(fused.outs[:3], (wq, wk, wv)):
+        np.testing.assert_array_equal(out, x @ w)
+    # bf16 projection: the float reference over the bf16-encoded x
+    xb = ref.to_bits(x.astype(np.float32), 8, 7)
+    want_o = ref.float_matmul(xb, ref.to_bits(wo, 8, 7))
+    np.testing.assert_array_equal(fused.bits[3], want_o)
+    # ... and bit-identical to the independent single-GEMM runs
+    solo_int = fabric.fabric_matmul(x, wq, nbits=8, cfg=cfg, signed=True)
+    np.testing.assert_array_equal(fused.outs[0], solo_int.out)
+    solo_f = fabric.fabric_matmul(x.astype(np.float32), wo, cfg=cfg,
+                                  dtype="bf16")
+    np.testing.assert_array_equal(fused.bits[3], solo_f.out_bits)
+    # one program: both dtype classes present, rounds never mix them
+    sched = fused.schedule
+    assert sched.classes == ("int8", "bf16") and sched.multi
+    infos = sched.infos()
+    for rnd in sched.rounds:
+        kinds = {infos[t.gemm].name for t in rnd.tasks}
+        assert len(kinds) == 1 and rnd.dtype in kinds
+    # mixed programs key activations per dtype class (distinct payloads)
+    xkeys = {ld.key[0] for rnd in sched.rounds for ld in rnd.loads
+             if ld.kind == "x"}
+    assert xkeys == {"int8", "bf16"}
+    # the cost walk prices each class at its own program's cycles
+    assert "int8+bf16" in fused.cost.name
+
+
+def test_mixed_program_reuse_and_dtype_mismatch(rng):
+    x = rng.integers(-8, 8, (2, 6)).astype(np.int64)
+    w = rng.integers(-8, 8, (6, 4)).astype(np.int64)
+    wf = rng.normal(size=(6, 4)).astype(np.float32)
+    cfg = _fgrid(4)
+    res = fabric.fabric_fused_matmul(x, (w, wf), nbits=4, cfg=cfg,
+                                     signed=True, dtypes=(None, "bf16"))
+    again = fabric.fabric_fused_matmul(x, (w, wf), nbits=4, cfg=cfg,
+                                       signed=True, dtypes=(None, "bf16"),
+                                       program=res.schedule)
+    np.testing.assert_array_equal(res.outs[0], again.outs[0])
+    np.testing.assert_array_equal(res.bits[1], again.bits[1])
+    with pytest.raises(ValueError, match="does not match"):
+        fabric.fabric_fused_matmul(x, (w, wf), nbits=4, cfg=cfg,
+                                   signed=True, dtypes=(None, "fp16"),
+                                   program=res.schedule)
+
+
+def test_bf16_schedule_guard_on_small_geometry():
+    """The dtype-aware infeasible-geometry guard (the bugfix): a bf16
+    GEMM on a too-shallow grid fails at schedule time with the same
+    clear error shape as the int guard, not a downstream layout error."""
+    small = FabricConfig(n_blocks=2, rows=ROWS, cols=COLS)
+    with pytest.raises(ValueError, match="cannot host a float_dot"):
+        fabric.schedule_program((GemmSpec("g", 2, 4, 4, dtype="bf16"),),
+                                8, cfg=small)
+    # the int guard still reads the same way
+    tiny = FabricConfig(n_blocks=2, rows=16, cols=COLS)
+    with pytest.raises(ValueError, match="cannot host an idot"):
+        fabric.schedule_gemm(2, 4, 4, 8, cfg=tiny)
+    # and the search simply skips infeasible float candidates
+    sr = fabric.search_program(
+        (GemmSpec("g", 2, 6, 4, dtype="bf16"),), 8, base=_fgrid(4),
+        geometries=((ROWS, COLS), (FROWS, COLS)))
+    assert sr.config.rows == FROWS
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,14 @@
-"""Hypothesis property tests: cram_matmul / cram_dot boundary behaviour.
+"""Hypothesis property tests: cram_matmul / cram_dot boundary behaviour
+and the float fused-MAC rounding edges.
 
 Fuzzes the edges the fabric scheduler leans on: operands at ``2^n - 1``,
 K at exact ``idot_geometry`` capacity +/- 1, N at the paper's 40 block
 columns, and the full signed range (asymmetric two's-complement minimum
-included).  Example-based pins of the same edges live in
-``test_fabric.py`` so they run even without hypothesis installed.
+included).  The float properties pin the *documented FTZ+RTZ fused-MAC
+semantics* -- exponent-field extremes, FTZ inputs, catastrophic
+cancellation -- against the oracle, not exact IEEE.  Example-based pins
+of the same edges live in ``test_fabric.py`` / ``test_float_dot.py`` so
+they run even without hypothesis installed.
 """
 
 import numpy as np
@@ -15,10 +19,13 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import ref  # noqa: E402
+from repro.core.floatprog import BF16, FP16, FP8_E4M3  # noqa: E402
 from repro.pim import cram, fabric  # noqa: E402
 from repro.pim.fabric import FabricConfig  # noqa: E402
 
 ROWS, COLS = 128, 8
+_FMTS = [BF16, FP16, FP8_E4M3]
 
 
 @settings(max_examples=12, deadline=None)
@@ -86,3 +93,95 @@ def test_prop_fabric_gemm_exact_any_shape(seed, m, k, n):
     cfg = FabricConfig(n_blocks=4, rows=ROWS, cols=COLS)
     res = fabric.fabric_matmul(x, w, nbits=4, cfg=cfg, signed=True)
     np.testing.assert_array_equal(res.out, x @ w)
+
+
+# ---------------------------------------------------------------------------
+# Float fused-MAC rounding edges (documented FTZ+RTZ semantics, not
+# IEEE).  The engine program is pinned bit-exact against ref.float_dot
+# in test_float_dot.py, so these fuzz the *semantics* on the oracle and
+# spot-check the engine through cram_fdot on the bf16 examples.
+# ---------------------------------------------------------------------------
+def _fmt_bits(rng, fmt, shape, elo, ehi, zero_p=0.0):
+    eb, m = fmt.ebits, fmt.mbits
+    s = rng.integers(0, 2, shape).astype(np.uint32)
+    e = rng.integers(elo, max(elo + 1, ehi), shape).astype(np.uint32)
+    mm = rng.integers(0, 1 << m, shape).astype(np.uint32)
+    bits = (s << (eb + m)) | (e << m) | mm
+    return np.where(rng.random(shape) < zero_p, 0, bits).astype(np.uint64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0, 1, 2]),
+       st.booleans())
+def test_prop_float_dot_exponent_extremes(seed, fi, low):
+    """Operands at the exponent-field extremes: smallest normals
+    underflow to +0 (FTZ, never a subnormal residual); largest wrap
+    finite-only -- in both cases program == oracle bit-exactly."""
+    fmt = _FMTS[fi]
+    rng = np.random.default_rng(seed)
+    emax = (1 << fmt.ebits) - 1
+    elo, ehi = (1, 2) if low else (emax - 1, emax)
+    a = _fmt_bits(rng, fmt, (2, 3), elo, ehi)
+    b = _fmt_bits(rng, fmt, (2, 3), elo, ehi)
+    want = ref.float_dot(a, b, fmt.ebits, fmt.mbits)
+    if low:
+        # product exponents underflow below the smallest normal: FTZ
+        assert (want == 0).all()
+    got = cram.cram_fdot(a, b, fmt, executor="scan")
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0, 1, 2]))
+def test_prop_float_dot_ftz_inputs(seed, fi):
+    """Denormal input patterns (exp == 0, mantissa != 0) behave exactly
+    like +0: flushing them by hand never changes the result."""
+    fmt = _FMTS[fi]
+    rng = np.random.default_rng(seed)
+    emax = (1 << fmt.ebits) - 1
+    a = _fmt_bits(rng, fmt, (3, 3), 1, emax - 1)
+    b = _fmt_bits(rng, fmt, (3, 3), 1, emax - 1)
+    mmask = np.uint64((1 << fmt.mbits) - 1)
+    a[0] &= mmask                       # denormal patterns in row 0
+    flushed = a.copy()
+    flushed[0] = 0
+    np.testing.assert_array_equal(
+        ref.float_dot(a, b, fmt.ebits, fmt.mbits),
+        ref.float_dot(flushed, b, fmt.ebits, fmt.mbits))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0, 1, 2]))
+def test_prop_float_dot_catastrophic_cancellation(seed, fi):
+    """x*y + x*(-y) == +0 exactly: negation is a sign-bit XOR, equal
+    magnitudes cancel to a zero mantissa, and the flush produces +0 --
+    the documented behavior (no sticky/guard residual to round)."""
+    fmt = _FMTS[fi]
+    rng = np.random.default_rng(seed)
+    emax = (1 << fmt.ebits) - 1
+    x = _fmt_bits(rng, fmt, (3,), 1, emax - 1)
+    y = _fmt_bits(rng, fmt, (3,), 1, emax - 1)
+    sbit = np.uint64(1 << (fmt.width - 1))
+    a = np.stack([x, x])
+    b = np.stack([y, y ^ sbit])
+    assert (ref.float_dot(a, b, fmt.ebits, fmt.mbits) == 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_prop_float_dot_tiling_invariance(seed):
+    """The wide-accumulator chain makes the K-tiling invisible: any
+    split point gives the same bits as one sequential pass."""
+    fmt = FP8_E4M3
+    rng = np.random.default_rng(seed)
+    emax = (1 << fmt.ebits) - 1
+    K = int(rng.integers(2, 8))
+    cut = int(rng.integers(1, K))
+    a = _fmt_bits(rng, fmt, (K, 3), 1, emax - 1, zero_p=0.2)
+    b = _fmt_bits(rng, fmt, (K, 3), 1, emax - 1, zero_p=0.2)
+    one, acc_one = ref.float_dot_acc(a, b, fmt.ebits, fmt.mbits)
+    mid = ref.float_dot_acc(a[:cut], b[:cut], fmt.ebits, fmt.mbits)[1]
+    two, acc_two = ref.float_dot_acc(a[cut:], b[cut:], fmt.ebits,
+                                     fmt.mbits, acc=mid)
+    np.testing.assert_array_equal(one, two)
+    np.testing.assert_array_equal(acc_one, acc_two)

@@ -1,0 +1,422 @@
+"""Float fused-MAC (float_dot) golden tier.
+
+The bf16 column of the paper's dot-product evaluation: a differential
+matrix of the ``float_dot`` engine program against the numpy FTZ+RTZ
+fused-MAC reference (``repro.core.ref.float_dot``) across bf16 / fp16 /
+fp8, K at capacity boundaries, adversarial operand classes, and
+executor bit-identity -- plus golden cycle/footprint pins, lane-plan
+assertions for the compiler extension (complementary-predication
+coverage + copy/fill-run batching), and example-based bodies of the
+rounding-edge properties fuzzed in ``test_fabric_property.py`` (they
+run here even without hypothesis).
+
+Semantics under test (docs/engine.md "float MAC microcode"): per tuple
+the product is rounded to fmt exactly as ``float_mul``, widened by
+``ACC_GUARD`` zero guard bits, and added to a running accumulator with
+the ``float_add`` pipeline at the widened format; the final
+normalize/round RTZ-truncates the guard bits and flushes a zero
+exponent.  NOT IEEE-754: no round-to-nearest, no subnormals, no
+inf/nan, and accumulation order matters.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compiler, engine, floatprog, harness, isa, ref
+from repro.core.floatprog import ACC_GUARD, BF16, FP16, FP8_E4M3
+from repro.pim import cram
+
+FMTS = {"bf16": BF16, "fp16": FP16, "fp8": FP8_E4M3}
+COLS = 8
+
+
+def _bits(rng, fmt, shape, elo=None, ehi=None, zero_p=0.15):
+    """Random fmt bit patterns in a (default mid-range) exponent band."""
+    eb, m = fmt.ebits, fmt.mbits
+    emax = (1 << eb) - 1
+    elo = max(1, emax // 3) if elo is None else elo
+    ehi = (2 * emax // 3) if ehi is None else ehi
+    s = rng.integers(0, 2, shape).astype(np.uint32)
+    e = rng.integers(elo, max(elo + 1, ehi), shape).astype(np.uint32)
+    mm = rng.integers(0, 1 << m, shape).astype(np.uint32)
+    bits = (s << (eb + m)) | (e << m) | mm
+    return np.where(rng.random(shape) < zero_p, 0, bits).astype(np.uint64)
+
+
+def _run_fdot(fmt, a, b, executor="scan", rows=512):
+    prog, lay = floatprog.float_dot(fmt, rows=rows, tuples=a.shape[0])
+    arr = harness.run_program(prog, lay, {"a": a, "b": b}, a.shape[1],
+                              executor=executor)
+    return floatprog.fdot_result(arr, fmt), floatprog.fdot_acc(arr, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Differential matrix: program == numpy FTZ+RTZ reference, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(FMTS))
+def test_float_dot_matches_reference(rng, name):
+    fmt = FMTS[name]
+    prog, lay = floatprog.float_dot(fmt, rows=512)
+    a = _bits(rng, fmt, (lay.tuples, COLS))
+    b = _bits(rng, fmt, (lay.tuples, COLS))
+    got, got_acc = _run_fdot(fmt, a, b)
+    want, want_acc = ref.float_dot_acc(a, b, fmt.ebits, fmt.mbits)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got_acc, want_acc)
+
+
+@pytest.mark.parametrize("name", sorted(FMTS))
+@pytest.mark.parametrize("kcase", ["one", "cap-1", "cap", "cap+1"])
+def test_float_dot_capacity_boundaries(rng, name, kcase):
+    """K at 1 / capacity-1 / capacity / capacity+1: the +1 case K-tiles
+    into a second launch with the wide accumulator image chained, so the
+    result must stay bit-identical to one sequential reference pass."""
+    fmt = FMTS[name]
+    cap = cram.fdot_geometry(fmt, 512)
+    K = {"one": 1, "cap-1": max(1, cap - 1), "cap": cap,
+         "cap+1": cap + 1}[kcase]
+    a = _bits(rng, fmt, (K, COLS))
+    b = _bits(rng, fmt, (K, COLS))
+    got = cram.cram_fdot(a, b, fmt, executor="scan")
+    np.testing.assert_array_equal(
+        got, ref.float_dot(a, b, fmt.ebits, fmt.mbits))
+
+
+@pytest.mark.parametrize("name", sorted(FMTS))
+def test_float_dot_signed_operands(rng, name):
+    """Dense mixed signs: effective subtraction + cancellation paths."""
+    fmt = FMTS[name]
+    K = min(4, cram.fdot_geometry(fmt, 512))
+    a = _bits(rng, fmt, (K, COLS), zero_p=0.0)
+    b = _bits(rng, fmt, (K, COLS), zero_p=0.0)
+    sbit = np.uint64(1) << np.uint64(fmt.width - 1)
+    a[0] |= sbit                          # force negatives in row 0
+    b[1] |= sbit
+    got, _ = _run_fdot(fmt, a, b)
+    np.testing.assert_array_equal(
+        got, ref.float_dot(a, b, fmt.ebits, fmt.mbits))
+
+
+@pytest.mark.parametrize("name", sorted(FMTS))
+def test_float_dot_denormal_inputs_ftz(rng, name):
+    """Denormal bit patterns (exp == 0, mantissa != 0) are flushed on
+    load: the result equals both the reference on the raw patterns and
+    the reference on explicitly-zeroed ones."""
+    fmt = FMTS[name]
+    K = min(3, cram.fdot_geometry(fmt, 512))
+    a = _bits(rng, fmt, (K, COLS))
+    b = _bits(rng, fmt, (K, COLS))
+    mmask = np.uint64((1 << fmt.mbits) - 1)
+    a[0] &= mmask                         # exp=0, mantissa junk: denormal
+    a[0] |= np.uint64(1)
+    got, _ = _run_fdot(fmt, a, b)
+    want = ref.float_dot(a, b, fmt.ebits, fmt.mbits)
+    np.testing.assert_array_equal(got, want)
+    flushed = a.copy()
+    flushed[0] = 0
+    np.testing.assert_array_equal(
+        want, ref.float_dot(flushed, b, fmt.ebits, fmt.mbits))
+
+
+@pytest.mark.parametrize("name", sorted(FMTS))
+def test_float_dot_overflow_region(rng, name):
+    """Near-emax exponents: finite-only semantics wrap the exponent the
+    same way in program and reference (documented deviation)."""
+    fmt = FMTS[name]
+    emax = (1 << fmt.ebits) - 1
+    K = min(3, cram.fdot_geometry(fmt, 512))
+    a = _bits(rng, fmt, (K, COLS), elo=emax - 2, ehi=emax, zero_p=0.0)
+    b = _bits(rng, fmt, (K, COLS), elo=emax - 2, ehi=emax, zero_p=0.0)
+    got, _ = _run_fdot(fmt, a, b)
+    np.testing.assert_array_equal(
+        got, ref.float_dot(a, b, fmt.ebits, fmt.mbits))
+
+
+# ---------------------------------------------------------------------------
+# Accuracy vs a float32-accumulate reference (tolerance, not bit-exact:
+# RTZ at every step loses up to ~2^-mbits per product plus guard-bit
+# truncation in the accumulator)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,rtol", [("bf16", 0.05), ("fp16", 0.01),
+                                       ("fp8", 0.5)])
+def test_float_dot_close_to_float32_accumulate(rng, name, rtol):
+    fmt = FMTS[name]
+    prog, lay = floatprog.float_dot(fmt, rows=512)
+    a = _bits(rng, fmt, (lay.tuples, COLS))
+    b = _bits(rng, fmt, (lay.tuples, COLS))
+    got, _ = _run_fdot(fmt, a, b)
+    gotf = ref.from_bits(got, fmt.ebits, fmt.mbits)
+    truef = (ref.from_bits(a, fmt.ebits, fmt.mbits).astype(np.float64)
+             * ref.from_bits(b, fmt.ebits, fmt.mbits)).sum(axis=0)
+    scale = np.abs(ref.from_bits(a, fmt.ebits, fmt.mbits)
+                   * ref.from_bits(b, fmt.ebits, fmt.mbits)).sum(axis=0)
+    err = np.abs(gotf.astype(np.float64) - truef)
+    assert np.all(err <= rtol * np.maximum(scale, 1e-6)), \
+        (err, rtol * scale)
+
+
+# ---------------------------------------------------------------------------
+# Executor bit-identity (full state: array + carry + tag)
+# ---------------------------------------------------------------------------
+def _states_equal(a, b):
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("array", "carry", "tag"))
+
+
+def test_float_dot_executors_bit_identical(rng):
+    """unroll == scan == compiled on the bf16 fused MAC, including the
+    final carry/tag latches and every scratch row."""
+    fmt = BF16
+    prog, lay = floatprog.float_dot(fmt, rows=512, tuples=2)
+    a = _bits(rng, fmt, (2, COLS))
+    b = _bits(rng, fmt, (2, COLS))
+    state = harness.make_jax_state(
+        harness.pack_state(lay, {"a": a, "b": b}, COLS))
+    un = engine.execute(prog, state)
+    sc = engine.execute_scan(prog, state)
+    co = engine.execute_compiled(prog, state)
+    assert _states_equal(un, sc)
+    assert _states_equal(un, co)
+    np.testing.assert_array_equal(
+        floatprog.fdot_result(np.asarray(co.array), fmt),
+        ref.float_dot(a, b, fmt.ebits, fmt.mbits))
+
+
+def test_float_dot_chaining_bit_identical_across_launches(rng):
+    """A K-tiled reduction chained through fdot_set_acc equals one
+    sequential pass: the tiling is invisible in the bits."""
+    fmt = FP8_E4M3
+    cap = cram.fdot_geometry(fmt, 512)
+    K = cap + 3
+    a = _bits(rng, fmt, (K, COLS))
+    b = _bits(rng, fmt, (K, COLS))
+    # manual two-launch chain
+    prog1, lay1 = floatprog.float_dot(fmt, rows=512, tuples=cap)
+    img = harness.pack_state(lay1, {"a": a[:cap], "b": b[:cap]}, COLS)
+    arr = np.asarray(engine.run(prog1, harness.make_jax_state(img),
+                                executor="scan").array)
+    acc = floatprog.fdot_acc(arr, fmt)
+    prog2, lay2 = floatprog.float_dot(fmt, rows=512, tuples=K - cap)
+    img2 = harness.pack_state(lay2, {"a": a[cap:], "b": b[cap:]}, COLS)
+    floatprog.fdot_set_acc(img2, fmt, acc)
+    arr2 = np.asarray(engine.run(prog2, harness.make_jax_state(img2),
+                                 executor="scan").array)
+    got = floatprog.fdot_result(arr2, fmt)
+    want, want_acc = ref.float_dot_acc(a, b, fmt.ebits, fmt.mbits)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(floatprog.fdot_acc(arr2, fmt), want_acc)
+    # the oracle chains identically through its acc parameter
+    mid = ref.float_dot_acc(a[:cap], b[:cap], fmt.ebits, fmt.mbits)[1]
+    np.testing.assert_array_equal(
+        ref.float_dot_acc(a[cap:], b[cap:], fmt.ebits, fmt.mbits,
+                          acc=mid)[1], want_acc)
+
+
+# ---------------------------------------------------------------------------
+# Example-based bodies of the hypothesis rounding-edge properties
+# (test_fabric_property.py fuzzes these; here they run without hypothesis)
+# ---------------------------------------------------------------------------
+def test_float_dot_single_product_equals_float_mul(rng):
+    """K=1 dot == float_mul exactly: acc starts at +0, one product is
+    added losslessly (guard bits are zeros), final round drops them."""
+    for name, fmt in FMTS.items():
+        a = _bits(rng, fmt, (1, COLS))
+        b = _bits(rng, fmt, (1, COLS))
+        got = cram.cram_fdot(a, b, fmt, executor="scan")
+        np.testing.assert_array_equal(
+            got, ref.float_mul(a[0], b[0], fmt.ebits, fmt.mbits))
+
+
+def test_float_dot_catastrophic_cancellation_is_exact_zero(rng):
+    """x*y + x*(-y): the products negate exactly (sign-XOR), equal
+    magnitudes subtract to zero mantissa, and the flush yields +0 --
+    the documented FTZ behavior, not a tiny residual."""
+    fmt = BF16
+    x = _bits(rng, fmt, (1, COLS), zero_p=0.0)[0]
+    y = _bits(rng, fmt, (1, COLS), zero_p=0.0)[0]
+    sbit = np.uint64(1) << np.uint64(fmt.width - 1)
+    a = np.stack([x, x])
+    b = np.stack([y, y ^ sbit])
+    got, got_acc = _run_fdot(fmt, a, b)
+    assert (got == 0).all()
+    assert (got_acc == 0).all()
+
+
+def test_float_dot_exponent_extremes(rng):
+    """Smallest-normal x smallest-normal underflows to +0 (FTZ); the
+    reference agrees bit for bit at both exponent-field extremes."""
+    fmt = BF16
+    eb, m = fmt.ebits, fmt.mbits
+    lo = _bits(rng, fmt, (2, COLS), elo=1, ehi=2, zero_p=0.0)
+    got, _ = _run_fdot(fmt, lo, lo)
+    want = ref.float_dot(lo, lo, eb, m)
+    np.testing.assert_array_equal(got, want)
+    assert (want == 0).all()              # product exps underflow: FTZ
+    hi = _bits(rng, fmt, (2, COLS), elo=(1 << eb) - 2, ehi=(1 << eb) - 1,
+               zero_p=0.0)
+    got_hi, _ = _run_fdot(fmt, hi, hi)
+    np.testing.assert_array_equal(got_hi, ref.float_dot(hi, hi, eb, m))
+
+
+# ---------------------------------------------------------------------------
+# Golden pins: cycles, footprint, capacity (program-generator level;
+# an executor can never change these)
+# ---------------------------------------------------------------------------
+def test_float_dot_golden_cycles_and_footprints():
+    golden = {
+        # fmt: (cycles, imem slots, tuples @ 512 rows)
+        "bf16": (5001, 439, 5),
+        "fp16": (5620, 463, 5),
+        "fp8": (11663, 382, 18),
+    }
+    for name, (cycles, slots, tuples) in golden.items():
+        prog, lay = floatprog.float_dot(FMTS[name], rows=512)
+        assert prog.cycles() == cycles, name
+        assert prog.footprint() == slots, name
+        assert lay.tuples == tuples, name
+        # the fused MAC is the documented 2-image program (docs/engine.md)
+        assert prog.imem_images() == 2, name
+
+
+def test_fdot_geometry_capacity():
+    assert cram.fdot_geometry(BF16, 512) == 5
+    assert cram.fdot_geometry(FP8_E4M3, 512) == 18
+    assert cram.fdot_geometry(BF16, 256) == 0        # scratch alone > rows
+    with pytest.raises(ValueError, match="cannot host"):
+        cram.cram_fdot(np.zeros((1, 2), np.uint64),
+                       np.zeros((1, 2), np.uint64), BF16, rows=256)
+    with pytest.raises(ValueError, match="float_dot"):
+        floatprog.float_dot(BF16, rows=512, tuples=99)
+
+
+def test_cram_fmatmul_matches_reference(rng):
+    fmt = FP8_E4M3
+    cap = cram.fdot_geometry(fmt, 512)
+    x = _bits(rng, fmt, (3, cap + 2))
+    w = _bits(rng, fmt, (cap + 2, 10))
+    got = cram.cram_fmatmul(x, w, fmt, cols=COLS, executor="scan")
+    np.testing.assert_array_equal(
+        got, ref.float_matmul(x, w, fmt.ebits, fmt.mbits))
+
+
+# ---------------------------------------------------------------------------
+# to_bits / from_bits conversion contract
+# ---------------------------------------------------------------------------
+def test_to_bits_bf16_is_truncating_float32_conversion(rng):
+    x = rng.normal(scale=10.0, size=64).astype(np.float32)
+    got = ref.to_bits(x, 8, 7)
+    want = (x.view(np.uint32) >> 16).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_to_bits_ftz_and_clamp():
+    x = np.array([0.0, 1e-45, -1e-42, np.inf, -np.inf, 1e38, 65504.0],
+                 np.float32)
+    b16 = ref.to_bits(x, 5, 10)                      # fp16
+    assert b16[0] == 0 and b16[1] == 0 and b16[2] == 0   # FTZ
+    maxfin = ((1 << 5) - 1) << 10 | ((1 << 10) - 1)
+    assert b16[3] == maxfin                          # +inf clamps
+    assert b16[4] == maxfin | (1 << 15)              # -inf clamps signed
+    # round trip of exactly-representable values is lossless
+    exact = np.array([1.0, -2.5, 0.15625, 40.0], np.float32)
+    np.testing.assert_array_equal(
+        ref.from_bits(ref.to_bits(exact, 8, 7), 8, 7), exact)
+
+
+# ---------------------------------------------------------------------------
+# Compiler: the lane plan engages on the float tuple loops
+# ---------------------------------------------------------------------------
+def test_float_dot_lane_plan_engaged():
+    """analyze() must produce a plan (no flat-lowering fallback) with a
+    substantive vectorized prefix: load + FTZ + multiply + product-widen
+    run as lanes; only the accumulate is loop-carried."""
+    for name, fmt in FMTS.items():
+        prog, lay = floatprog.float_dot(fmt, rows=512)
+        plan = compiler.analyze(prog)
+        assert plan is not None, f"{name}: flat-lowering fallback"
+        assert plan.lanes == lay.tuples
+        assert plan.serial_start >= len(plan.body) // 4, \
+            f"{name}: prefix too small ({plan.serial_start})"
+        assert plan.serial_start < len(plan.body)    # accumulate serial
+
+
+def test_float_mul_now_fully_vectorizes():
+    """The complementary-predication coverage upgrade: float_mul's only
+    red rows were the TROW/TNROW-pair normalize writes; the whole tuple
+    body now runs as lanes (no serial suffix)."""
+    prog, _ = floatprog.float_mul(BF16, rows=512)
+    plan = compiler.analyze(prog)
+    assert plan is not None
+    assert plan.serial_start == len(plan.body)
+
+
+def test_coverage_kills_complementary_pair():
+    """_coverage_kills: a trow g / tnrow g predicated pair covers; a
+    read between the halves, or a guard rewrite, spoils it."""
+    from repro.core.isa import Instr
+    O = isa
+    pair = [
+        Instr(O.OP_TROW, a=9),
+        Instr(O.OP_COPY, dst=5, a=1, pred=True),
+        Instr(O.OP_TNROW, a=9),
+        Instr(O.OP_COPY, dst=5, a=2, pred=True),
+    ]
+    assert 5 in compiler._coverage_kills(pair)
+    spoiled_read = [pair[0], pair[1],
+                    Instr(O.OP_XOR, dst=6, a=5, b=1),      # exposed read
+                    pair[2], pair[3]]
+    assert 5 not in compiler._coverage_kills(spoiled_read)
+    spoiled_guard = [pair[0], pair[1],
+                     Instr(O.OP_W1, dst=9),                # guard rewritten
+                     pair[2], pair[3]]
+    assert 5 not in compiler._coverage_kills(spoiled_guard)
+    # unpredicated and t1-predicated writes cover immediately
+    direct = [Instr(O.OP_W0, dst=7),
+              Instr(O.OP_T1), Instr(O.OP_W1, dst=8, pred=True)]
+    cov = compiler._coverage_kills(direct)
+    assert {7, 8} <= cov
+
+
+def test_segment_folds_copy_and_fill_runs():
+    """The simple-op batcher: uniform-stride COPY runs and predicated
+    W0/W1 runs fold into single integer-domain items."""
+    from repro.core.isa import Instr
+    O = isa
+    stream = [Instr(O.OP_COPY, dst=("k", 10 + i), a=("k", 20 + i))
+              for i in range(6)]
+    stream += [Instr(O.OP_W0, dst=("k", 30 + i), pred=True)
+               for i in range(5)]
+    items = compiler._segment(stream)
+    kinds = [k for k, _ in items]
+    assert kinds == ["copyrun", "fillrun"]
+    # a stride break splits the run
+    broken = stream[:3] + [Instr(O.OP_COPY, dst=("k", 99), a=("k", 0))]
+    kinds2 = [k for k, _ in compiler._segment(broken)]
+    assert "copyrun" not in kinds2
+
+
+def test_run_batcher_bit_exact_on_crafted_program(rng):
+    """Descending predicated copy runs (the normalize shift idiom) and
+    fill runs execute bit-exactly through the compiled path."""
+    from repro.core.isa import Instr, Loop, Program, R, SetReg
+    O = isa
+    nodes = [
+        SetReg(1, 16), SetReg(2, 0),
+        Loop(6, [Instr(O.OP_COPY, R(1), R(2), inc=((1, 1), (2, 1)))]),
+        Instr(O.OP_TROW, a=40),
+        SetReg(1, 38), SetReg(2, 33),
+        Loop(5, [Instr(O.OP_COPY, R(1), R(2), pred=True,
+                       inc=((1, -1), (2, -1)))]),
+        SetReg(1, 48),
+        Loop(5, [Instr(O.OP_W1, R(1), pred=True, inc=((1, 1),))]),
+    ]
+    prog = Program("crafted_runs", nodes)
+    import jax.numpy as jnp
+    state = engine.CRState(
+        array=jnp.asarray(rng.integers(0, 2, (64, COLS)).astype(bool)),
+        carry=jnp.asarray(rng.integers(0, 2, COLS).astype(bool)),
+        tag=jnp.asarray(rng.integers(0, 2, COLS).astype(bool)))
+    un = engine.execute(prog, state)
+    co = engine.execute_compiled(prog, state)
+    assert _states_equal(un, co)
