@@ -7,13 +7,17 @@ Writes the executor numbers to ``BENCH_engine.json`` so regressions in
 the compiled path show up as a diff, not just a log line.
 
 CLI: ``python benchmarks/engine_bench.py [--quick] [--json PATH]
-[--min-idot-speedup X] [--max-compile-s S]``.  ``--quick`` runs a
-reduced program set with fewer replays (CI tier-1 budget);
+[--min-idot-speedup X] [--max-compile-s S] [--min-blocks-scaling X]``.
+``--quick`` runs a reduced program set with fewer replays (CI tier-1
+budget) but still covers the full 1/16/64 blocks sweep;
 ``--min-idot-speedup`` exits non-zero if any ``idot`` compiled-vs-scan
 speedup falls below the floor, which is how CI fails loudly on executor
 regressions (ROADMAP "benchmark hygiene"); ``--max-compile-s`` exits
 non-zero if the float-program compile (bf16 add through the jaxpr-level
-CSE pass) exceeds the ceiling -- the compile-time regression guard.
+CSE pass) exceeds the ceiling -- the compile-time regression guard;
+``--min-blocks-scaling`` exits non-zero when the 64-block packed-
+resident replay stops scaling over the 1-block one (the multi-block
+replay wall this sweep exists to catch).
 """
 
 import argparse
@@ -97,11 +101,22 @@ def bench_executors(print_fn=print, rows=512, cols=40, quick=False):
 
 
 def bench_blocks(print_fn=print, rows=512, cols=40, quick=False):
-    """Multi-block fabric simulation (int4 dot product per block):
-    vmapped scan vs the compiled wide-block path."""
+    """Multi-block fabric simulation (int4 dot product per block).
+
+    The compiled replay is measured in its *packed-resident* form: the
+    block batch is packed once (``engine.pack_block_states``), replayed
+    as one wide uint32 launch per round, and unpacked once at the end --
+    which is how replay loops (fabric rounds, :func:`engine.run_chain`)
+    actually run the program.  Measuring the single-shot
+    ``execute_blocks`` launch instead would time the per-launch bool
+    pack/unpack ladder (recorded separately as ``launch_ms``), which is
+    amortized over a replay loop and at 64 blocks costs ~3x the inner
+    compute.  The vmapped scan controller is the baseline.
+    ``--min-blocks-scaling`` gates blocks64/blocks1 throughput.
+    """
     prog, lay = programs.idot(4, rows=rows)
     results = {}
-    for blocks in (1, 16) if quick else (1, 16, 64):
+    for blocks in (1, 16, 64):
         states = engine.CRState(
             array=jnp.zeros((blocks, rows, cols), jnp.bool_),
             carry=jnp.zeros((blocks, cols), jnp.bool_),
@@ -109,23 +124,38 @@ def bench_blocks(print_fn=print, rows=512, cols=40, quick=False):
         )
         f_scan = jax.jit(
             lambda s: engine.execute_blocks(prog, s, executor="scan"))
+        wide = jax.block_until_ready(engine.pack_block_states(states))
+        fn = engine.compile_packed(prog, rows, blocks * cols)
+        jax.block_until_ready(fn(wide).array)               # compile
         jax.block_until_ready(
-            engine.execute_blocks(prog, states).array)      # compile
+            engine.execute_blocks(prog, states).array)      # compile e2e
         t_scan, t_comp = _replay_pair(
             lambda: jax.block_until_ready(f_scan(states).array),
-            lambda: jax.block_until_ready(
-                engine.execute_blocks(prog, states).array), n=8)
+            lambda: jax.block_until_ready(fn(wide).array),
+            n=4 if quick else 8)
+        t_launch = float("inf")                  # single-shot, with ladder
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(engine.execute_blocks(prog, states).array)
+            t_launch = min(t_launch, time.perf_counter() - t0)
         ops_total = lay.tuples * cols * blocks   # int4 MACs simulated
         results[f"blocks{blocks}"] = {
             "scan_replay_ms": round(t_scan * 1e3, 4),
             "compiled_replay_ms": round(t_comp * 1e3, 4),
+            "launch_ms": round(t_launch * 1e3, 4),
             "speedup": round(t_scan / t_comp, 2),
             "sim_mops_compiled": round(ops_total / (t_comp * 1e6), 1),
         }
         print_fn(f"engine/multiblock_idot4/{blocks}blk,"
                  f"{t_comp*1e6:.0f},ops={ops_total};"
                  f"sim_mops={ops_total/(t_comp*1e6):.1f};"
-                 f"speedup_vs_scan={t_scan/t_comp:.1f}")
+                 f"speedup_vs_scan={t_scan/t_comp:.1f};"
+                 f"launch_ms={t_launch*1e3:.2f}")
+    scaling = (results["blocks64"]["sim_mops_compiled"]
+               / results["blocks1"]["sim_mops_compiled"])
+    results["scaling_64v1"] = round(scaling, 2)
+    print_fn(f"engine/multiblock_idot4/scaling_64v1,{scaling:.2f},"
+             f"resident_replay")
     return results
 
 
@@ -266,6 +296,25 @@ def check_compile_time(payload: dict, ceiling: float) -> list:
     return bad
 
 
+def check_blocks_scaling(payload: dict, floor: float) -> list:
+    """Fail when 64-block packed-resident throughput doesn't scale.
+
+    The whole point of the wide-block lowering is that B blocks cost one
+    launch, so simulated MACs/s must GROW with the block count; this
+    gate pins blocks64/blocks1 >= ``floor``.  A payload missing either
+    endpoint is a FAILURE (the gate must not silently disarm)."""
+    bl = payload.get("blocks", {})
+    lo = bl.get("blocks1", {}).get("sim_mops_compiled")
+    hi = bl.get("blocks64", {}).get("sim_mops_compiled")
+    if not lo or hi is None:
+        return ["blocks sweep missing blocks1/blocks64 sim_mops_compiled "
+                "(gate has nothing to check)"]
+    if hi / lo < floor:
+        return [f"blocks scaling: {hi / lo:.2f}x < {floor}x "
+                f"(blocks64 {hi} vs blocks1 {lo} sim_mops)"]
+    return []
+
+
 def check_fdot_speedup(payload: dict, floor: float) -> list:
     """Fail when the compiled fused-MAC replay drops below the floor or
     the lane plan silently fell back to flat lowering."""
@@ -301,6 +350,10 @@ def main(argv=None) -> int:
                     metavar="S",
                     help="fail (exit 1) if a float-program compile "
                     "(bf16 add or bf16 dot) takes longer than S seconds")
+    ap.add_argument("--min-blocks-scaling", type=float, default=None,
+                    metavar="X",
+                    help="fail (exit 1) if blocks64/blocks1 packed-"
+                    "resident throughput (sim_mops_compiled) is below X")
     args = ap.parse_args(argv)
     payload = run(json_path=args.json, quick=args.quick)
     bad = []
@@ -310,6 +363,8 @@ def main(argv=None) -> int:
         bad += check_fdot_speedup(payload, args.min_fdot_speedup)
     if args.max_compile_s is not None:
         bad += check_compile_time(payload, args.max_compile_s)
+    if args.min_blocks_scaling is not None:
+        bad += check_blocks_scaling(payload, args.min_blocks_scaling)
     if bad:
         print("BENCH REGRESSION: " + "; ".join(bad))
         return 1
@@ -319,6 +374,8 @@ def main(argv=None) -> int:
         print(f"float_dot speedup >= {args.min_fdot_speedup}x: OK")
     if args.max_compile_s is not None:
         print(f"float compiles <= {args.max_compile_s}s: OK")
+    if args.min_blocks_scaling is not None:
+        print(f"blocks scaling >= {args.min_blocks_scaling}x: OK")
     return 0
 
 

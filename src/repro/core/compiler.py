@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import isa
+from ..kernels import bitplane_ops
 from .isa import (Instr, _READS_A, _READS_B, _WRITES_ROW,
                   OP_NOP, OP_COPY, OP_NOT, OP_AND, OP_OR, OP_XOR, OP_NOR,
                   OP_FA, OP_FS, OP_W0, OP_W1, OP_C0, OP_C1, OP_CROW,
@@ -66,6 +67,16 @@ _TAG_KILL = {OP_T1, OP_TROW, OP_TNROW, OP_TC, OP_TNC}
 MAX_CHAIN = 24
 # Minimum run length worth the pack/unpack overhead of the integer form.
 MIN_CHAIN = 4
+
+# With the packed (uint32-word) interior, run folds stay in the *bit
+# plane* domain: integers are lists of packed planes and a ripple chain
+# is 5 bitwise word-ops per bit (kernels/bitplane_ops.py) instead of an
+# unpack -> int32 weighted-sum -> repack ladder.  Bitwise plane ops are
+# pure elementwise, so XLA fuses whole chains into a few memory passes;
+# at fabric widths (64 blocks x 40 cols) this is the difference between
+# memory-traffic-bound and compute-trivial.  The flag exists only as a
+# debugging escape hatch.
+PLANE_DOMAIN = True
 
 
 def n_words(cols: int) -> int:
@@ -179,6 +190,38 @@ def _segment(stream: Sequence[Instr]):
             else:
                 items.extend(("op", r) for r in run)
             i = j
+        elif ins.op in (OP_OR, OP_XOR):
+            # bitwise runs: OR/XOR over uniform-stride row windows (b
+            # may also be one shared row) fold to a single integer-
+            # domain bitwise op -- | and ^ act bit-plane-wise on the
+            # packed integers, so no carry structure is needed at all
+            run = [ins]
+            written = {ins.dst}
+            d = db = None
+            j = i + 1
+            while (j < n and len(run) < MAX_CHAIN
+                   and stream[j].op == ins.op
+                   and stream[j].pred == ins.pred):
+                prev, nxt = run[-1], stream[j]
+                dd = _ref_delta(prev.dst, nxt.dst)
+                if dd not in (1, -1) or (d is not None and dd != d):
+                    break
+                if _ref_delta(prev.a, nxt.a) != dd or nxt.a in written:
+                    break
+                dbd = _ref_delta(prev.b, nxt.b)
+                if dbd not in (0, dd) or (db is not None and dbd != db):
+                    break
+                if nxt.b in written or nxt.dst in written:
+                    break
+                d, db = dd, dbd
+                run.append(nxt)
+                written.add(nxt.dst)
+                j += 1
+            if len(run) >= MIN_CHAIN:
+                items.append(("bitrun", run))
+            else:
+                items.extend(("op", r) for r in run)
+            i = j
         elif (ins.op == OP_COPY
               or (ins.pred and ins.op in (OP_W0, OP_W1))):
             run = [ins]
@@ -224,6 +267,11 @@ class _Ctx:
     def __init__(self, cols: int, packed: bool):
         self.cols = cols
         self.packed = packed
+        # packed interiors keep folded integers in the bit-plane domain
+        # (see PLANE_DOMAIN): each plane IS a row's repr value, so
+        # building/extracting integers is free and every arithmetic step
+        # is a fusable bitwise op on uint32 words.
+        self.planes = packed and PLANE_DOMAIN
         if packed:
             self.empty = jnp.zeros((n_words(cols),), jnp.uint32)
             self.full = jnp.full((n_words(cols),), 0xFFFFFFFF, jnp.uint32)
@@ -315,7 +363,7 @@ class _Machine:
     """
 
     def __init__(self, ctx: _Ctx, read, write, carry, tag,
-                 prov=None, lane_view=None, peek=None):
+                 prov=None, lane_view=None, peek=None, planes=None):
         self.ctx = ctx
         self._read_cb = read
         self._write_cb = write
@@ -327,6 +375,11 @@ class _Machine:
         self._int_cache: Dict[tuple, jax.Array] = {}
         self._int_deps: Dict[tuple, set] = {}
         self._tagb = None
+        # per-machine domain choice: serial per-lane suffix machines
+        # force the int32 domain (their deep scalar carry chains make
+        # XLA's scheduling blow up in the plane domain) while flat and
+        # vectorized-prefix machines default to ctx.planes
+        self.planes = ctx.planes if planes is None else planes
 
     # -- value access -------------------------------------------------------
     def read(self, ref):
@@ -396,10 +449,83 @@ class _Machine:
             self._int_deps.setdefault(r, set()).add(key)
         return v
 
+    # -- bit-plane domain (packed interior) ---------------------------------
+    def _plane_tag(self):
+        return _mat(self.ctx, self.tag)
+
+    def _plane_zero(self, v):
+        """None (known zero) <-> repr sentinel conversion helpers."""
+        return None if v is self.ctx.empty else v
+
+    def _plane_val(self, v):
+        return self.ctx.empty if v is None else v
+
+    def _chain_planes(self, run):
+        """FA/FS chain in the plane domain: one bitwise ripple
+        (kernels.bitplane_ops.planes_add) whose planes are written back
+        directly -- no int32 build, no bit extraction, exact carry."""
+        ctx = self.ctx
+        a = [self._plane_zero(self.read(c.a)) for c in run]
+        b = [self._plane_zero(self.read(c.b)) for c in run]
+        cin = self.carry
+        assert cin is not None, "read of uninitialized carry latch"
+        s, cout = bitplane_ops.planes_add(
+            a, b, self._plane_zero(_mat(ctx, cin)),
+            sub=run[0].op == OP_FS)
+        if run[0].pred:
+            # tag=0 columns keep their old rows and old carry -- the
+            # same end-of-chain mux the int32 fold applies
+            t = self._plane_tag()
+            s = [_select(t, self._plane_val(x), self.read(c.dst))
+                 for x, c in zip(s, run)]
+            cout = _select(t, self._plane_val(cout), _mat(ctx, cin))
+        for c, x in zip(run, s):
+            self.write(c.dst, self._plane_val(x))
+        self.carry = self._plane_val(cout)
+
+    def _and_run_planes(self, run):
+        b_bit = self.read(run[0].b)
+        vals = [self.read(c.a) & b_bit for c in run]
+        for c, v in zip(run, vals):
+            self.write(c.dst, v)
+
+    def _copy_run_planes(self, run):
+        vals = [self.read(c.a) for c in run]
+        if run[0].pred:
+            t = self._plane_tag()
+            vals = [_select(t, v, self.read(c.dst))
+                    for v, c in zip(vals, run)]
+        for c, v in zip(run, vals):
+            self.write(c.dst, v)
+
+    def _fill_run_planes(self, run):
+        t = self._plane_tag()
+        if run[0].op == OP_W0:
+            vals = [self.read(c.dst) & ~t for c in run]
+        else:
+            vals = [self.read(c.dst) | t for c in run]
+        for c, v in zip(run, vals):
+            self.write(c.dst, v)
+
+    def _bit_run_planes(self, run):
+        op = run[0].op
+        a = [self.read(c.a) for c in run]
+        b = [self.read(c.b) for c in run]
+        vals = [(x | y) if op == OP_OR else (x ^ y) for x, y in zip(a, b)]
+        if run[0].pred:
+            t = self._plane_tag()
+            vals = [_select(t, v, self.read(c.dst))
+                    for v, c in zip(vals, run)]
+        for c, v in zip(run, vals):
+            self.write(c.dst, v)
+
+    # -- int32 domain (bool interior) ---------------------------------------
     def _chain(self, run):
         """One FA/FS ripple chain == one per-column integer add/sub,
         computed and kept in the integer domain (writes become lazy
         bit extractions; the carry latch becomes a lazy bit)."""
+        if self.planes:
+            return self._chain_planes(run)
         m = len(run)
         a_refs = [c.a for c in run]
         b_refs = [c.b for c in run]
@@ -440,6 +566,8 @@ class _Machine:
 
     def _and_run(self, run):
         """Partial-product AND run == integer multiply by the shared bit."""
+        if self.planes:
+            return self._and_run_planes(run)
         m = len(run)
         a_int = self._int_of([c.a for c in run], m)
         b_bit = self.ctx.to_bits(self.read(run[0].b))
@@ -450,6 +578,8 @@ class _Machine:
 
     def _copy_run(self, run):
         """Uniform-stride COPY run == one integer-domain move (mux)."""
+        if self.planes:
+            return self._copy_run_planes(run)
         m = len(run)
         s = self._int_of([c.a for c in run], m)
         if run[0].pred:
@@ -461,6 +591,8 @@ class _Machine:
 
     def _fill_run(self, run):
         """Predicated W0/W1 run == one integer-domain mask merge."""
+        if self.planes:
+            return self._fill_run_planes(run)
         m = len(run)
         old = self._int_of([c.dst for c in run], m)
         tb = self._tag_bits()
@@ -468,6 +600,22 @@ class _Machine:
             s = old - old * tb
         else:
             s = old + (((1 << m) - 1) - old) * tb
+        for i, c in enumerate(run):
+            self.write(c.dst, _Lazy(s, i))
+            self.prov[c.dst] = (s, i)
+
+    def _bit_run(self, run):
+        """OR/XOR run over strided windows == one integer bitwise op
+        (| and ^ distribute over bit planes of the packed integers)."""
+        if self.planes:
+            return self._bit_run_planes(run)
+        m = len(run)
+        a_int = self._int_of([c.a for c in run], m)
+        b_int = self._int_of([c.b for c in run], m)
+        s = (a_int | b_int) if run[0].op == OP_OR else (a_int ^ b_int)
+        if run[0].pred:
+            old = self._int_of([c.dst for c in run], m)
+            s = old + (s - old) * self._tag_bits()
         for i, c in enumerate(run):
             self.write(c.dst, _Lazy(s, i))
             self.prov[c.dst] = (s, i)
@@ -488,6 +636,9 @@ class _Machine:
                 continue
             if kind == "fillrun":
                 self._fill_run(ins)
+                continue
+            if kind == "bitrun":
+                self._bit_run(ins)
                 continue
             op = ins.op
             if op == OP_NOP:
@@ -625,7 +776,22 @@ def _coverage_kills(stream: Sequence[Instr]) -> set:
       completes the cover;
     * any exposed read before the cover completes (operand reads and
       guard reads; a predicated write's read-back of its own dst is the
-      mux being modeled, not an exposed read) disqualifies the row.
+      mux being modeled, not an exposed read) disqualifies the row --
+      EXCEPT *masked* reads, which only observe columns the pending
+      half-write already covered:
+
+      - ``tand r`` (and operand reads of predicated ops) observe ``r``
+        only where the tag is 1: safe when the half was written under
+        the exact current tag ``(g, neg)``;
+      - ``tor r`` observes ``r`` only where the tag is 0: safe when the
+        half was written under the *complementary* ``(g, ~neg)``.
+
+      This is what unseals the float adder's carry-out idiom
+      (``?t cstore COUT`` under ``tag<-row[SUB]`` followed by
+      ``trow SUB; tand COUT``): the tand reads exactly the half-written
+      columns, the later unpredicated ``tstore COUT`` completes the
+      cover, so COUT is lane-private scratch and no longer pins a
+      serial suffix.
 
     Rows never pair-written are simply absent -- the default
     classification applies, so this only ever *upgrades* red to kill.
@@ -646,8 +812,18 @@ def _coverage_kills(stream: Sequence[Instr]) -> set:
             if slot == "dst":
                 continue          # predicated write read-back: the mux
             r = getattr(ins, slot)
-            if r not in covered:
-                spoil(r)
+            if r in covered:
+                continue
+            half = halves.get(r)
+            if half is not None and tag is not None and tag[0] == "row":
+                g, neg, gv = tag[1], tag[2], tag[3]
+                masked_by_tag = (ins.op == OP_TAND
+                                 or (ins.pred and ins.op in _WRITES_ROW))
+                if masked_by_tag and half == (g, neg, gv):
+                    continue      # observes only half-written columns
+                if ins.op == OP_TOR and half == (g, not neg, gv):
+                    continue      # tor reads where tag=0: the other half
+            spoil(r)
         if ins.op in (OP_TROW, OP_TNROW):
             tag = ("row", ins.a, ins.op == OP_TNROW, ver.get(ins.a, 0))
         elif ins.op == OP_T1:
@@ -679,11 +855,47 @@ def _coverage_kills(stream: Sequence[Instr]) -> set:
 
 
 def analyze(program: isa.Program) -> Optional[LanePlan]:
-    """Try to build a lane-vectorization plan; None means fall back."""
+    """Plan for the single dominant top-level loop; None = fall back.
+
+    Kept as the introspection API (tests/benchmarks assert on it); the
+    lowering itself goes through :func:`analyze_multi`, which plans
+    EVERY top-level loop so chained/concatenated programs with two or
+    more dominant loops vectorize each of them.
+    """
     grouped = program.expand_grouped()
     if grouped is None:
         return None
     pre, iters, post = grouped
+    return _plan_loop(pre, iters, post)
+
+
+def analyze_multi(program: isa.Program):
+    """Segment the program at every top-level loop and plan each.
+
+    Returns a list of ``("flat", stream)`` / ``("loop", LanePlan)``
+    segments (plans carry empty pre/post), or None when no loop admits
+    a plan -- the caller then flat-lowers the whole stream.  Loops whose
+    plan fails degrade to flat segments, so correctness never depends
+    on any individual loop vectorizing.
+    """
+    out, any_plan = [], False
+    for kind, payload in program.expand_segments():
+        if kind == "loop":
+            plan = _plan_loop([], payload, [])
+            if plan is not None:
+                out.append(("loop", plan))
+                any_plan = True
+                continue
+            payload = [i for it in payload for i in it]
+        if out and out[-1][0] == "flat":
+            out[-1] = ("flat", out[-1][1] + list(payload))
+        else:
+            out.append(("flat", list(payload)))
+    return out if any_plan else None
+
+
+def _plan_loop(pre, iters, post) -> Optional[LanePlan]:
+    """Lane-vectorization analysis of one loop's iteration streams."""
     T = len(iters)
     L = len(iters[0])
     if T < 2 or L == 0:
@@ -848,19 +1060,20 @@ def _run_flat(ctx, items, arr, store, carry, tag):
     return written, m.carry, m.tag
 
 
-def _lower_flat(program: isa.Program, rows: int, cols: int, packed: bool):
+def _lower_flat(program: isa.Program, rows: int, cols: int, packed: bool,
+                packed_io: bool = False):
     items = _segment(_flat_refs(program.expand()))
 
     def fn(state):
         ctx = _Ctx(cols, packed)
-        if packed:
+        if packed and not packed_io:
             arr = pack_cols(state.array)
             carry, tag = pack_cols(state.carry), pack_cols(state.tag)
         else:
             arr, carry, tag = state.array, state.carry, state.tag
         written, carry, tag = _run_flat(ctx, items, arr, {}, carry, tag)
         arr = _scatter(ctx, arr, written)
-        if packed:
+        if packed and not packed_io:
             return type(state)(unpack_cols(arr, cols),
                                unpack_cols(_mat(ctx, carry), cols),
                                unpack_cols(_mat(ctx, tag), cols))
@@ -869,15 +1082,23 @@ def _lower_flat(program: isa.Program, rows: int, cols: int, packed: bool):
     return fn
 
 
-def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
-                 plan: LanePlan):
+@dataclasses.dataclass
+class _LoopLow:
+    """Per-loop static lowering data (shared by every trace)."""
+    plan: LanePlan
+    prefix_items: list
+    suffix_items: list
+    suffix: list                 # raw suffix ref-stream
+    suffix_affine_writes: set
+    prefetch: list
+    written_rows: set            # absolute rows the loop writes
+    fold: Optional[list]         # foldable accumulate chain, or None
+
+
+def _loop_static(plan: LanePlan) -> _LoopLow:
     T, s = plan.lanes, plan.stride
-    pre_items = _segment(_flat_refs(plan.pre))
-    post_items = _segment(_flat_refs(plan.post))
     prefix = plan.body[:plan.serial_start]
     suffix = plan.body[plan.serial_start:]
-    prefix_items = _segment(prefix)
-    suffix_items = _segment(suffix)
     suffix_affine_writes = {ins.dst[1] for ins in suffix
                             if ins.op in _WRITES_ROW and ins.dst[0] == "l"}
 
@@ -896,214 +1117,317 @@ def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
             written_refs.add(ins.dst)
     prefetch = sorted(prefetch)
 
+    written_rows = set()
+    for ins in plan.body:
+        if ins.op in _WRITES_ROW:
+            if ins.dst[0] == "k":
+                written_rows.add(ins.dst[1])
+            else:
+                written_rows.update(ins.dst[1] + t * s for t in range(T))
+
+    # the serial-suffix ACCUMULATION FOLD: a suffix that is exactly one
+    # unpredicated in-place FA chain over shared reduction rows
+    # (``acc += lane_value``, carry killed in the prefix) is T modular
+    # adds -- associative, so the per-lane serial loop collapses into a
+    # log-depth lane fold (kernels.bitplane_ops.lane_fold) plus one
+    # carry-exact final add with the last lane.  This is what lets dot-
+    # product programs scale with block count instead of serializing.
+    suffix_items = _segment(suffix)
+    fold = None
+    if len(suffix_items) == 1 and suffix_items[0][0] == "chain":
+        run = suffix_items[0][1]
+        a_refs = [c.a for c in run]
+        prefix_writes = {ins.dst for ins in prefix if ins.op in _WRITES_ROW}
+        if (run[0].op == OP_FA and not run[0].pred
+                and all(c.dst == c.a for c in run)
+                and all(r[0] == "k" for r in a_refs)
+                and not ({c.b for c in run} & set(a_refs))
+                and not (set(a_refs) & prefix_writes)
+                and plan.carry_in_prefix):
+            fold = run
+    return _LoopLow(plan, _segment(prefix), suffix_items, suffix,
+                    suffix_affine_writes, prefetch, written_rows, fold)
+
+
+def _run_loop(ctx, ll: _LoopLow, arr, carry, tag, store):
+    """Execute one planned loop against (arr, carry, tag).
+
+    ``store`` caches const-row values across segments (reads reuse it;
+    rows this loop writes are refreshed/invalidated on exit).
+    """
+    plan = ll.plan
+    T, s = plan.lanes, plan.stride
+    suffix = ll.suffix
+
+    # ---- vectorized prefix: all lanes at once ----------------------------
+    lane_store: Dict[tuple, jax.Array] = {}
+    lane_written: Dict[tuple, bool] = {}
+    if ll.prefetch:
+        idx = np.asarray([[c + t * s for t in range(T)]
+                          for c in ll.prefetch], np.int32)
+        block = _rows(arr, idx)            # (n_prefetch, T, cols|W)
+        for i, c in enumerate(ll.prefetch):
+            lane_store[("l", c)] = block[i]
+
+    def lane_read(ref):
+        v = lane_store.get(ref)
+        if v is None:
+            if ref[0] == "k":
+                v = store.get(ref[1])
+                if v is None:
+                    v = _row(arr, ref[1])
+            else:
+                idx = np.asarray(
+                    [ref[1] + t * s for t in range(T)], np.int32)
+                v = _rows(arr, idx)
+            lane_store[ref] = v
+        return v
+
+    def lane_write(ref, v):
+        lane_store[ref] = v
+        lane_written[ref] = True
+
+    def lane_peek(ref):
+        v = lane_store.get(ref)
+        if v is None and ref[0] == "k":
+            v = store.get(ref[1])
+        return v
+
+    # a poisoned latch would mean the analysis mis-ordered a kill;
+    # reading it raises at trace time rather than miscomputing
+    pm = _Machine(ctx, lane_read, lane_write,
+                  None if plan.carry_in_prefix else carry,
+                  None if plan.tag_in_prefix else tag,
+                  peek=lane_peek)
+    pm.run(ll.prefix_items)
+
+    # ---- suffix ----------------------------------------------------------
+    suffix_store: Dict[int, jax.Array] = {}
+    suffix_lane_vals: Dict[int, list] = {c: [] for c
+                                         in ll.suffix_affine_writes}
+    if suffix and ll.fold is not None and pm.carry is ctx.empty:
+        run = ll.fold
+        m = len(run)
+
+        def as_planes(vals):
+            return [None if v is ctx.empty else v for v in vals]
+
+        bplanes = []
+        for c in run:
+            v = lane_read(c.b)
+            if v is ctx.empty:
+                bplanes.append(None)
+                continue
+            v = _mat(ctx, v)
+            if v.ndim == 1:        # shared row: same addend every lane
+                v = jnp.broadcast_to(v, (T,) + v.shape)
+            bplanes.append(v)
+        acc0 = []
+        for c in run:
+            v = store.get(c.a[1])
+            v = _row(arr, c.a[1]) if v is None else _mat(ctx, v)
+            acc0.append(v)
+        acc0 = as_planes(acc0)
+        if T > 1:
+            main = [None if p is None else p[:T - 1] for p in bplanes]
+            red = bitplane_ops.lane_fold(main, m, packed=ctx.packed)
+            accm, _ = bitplane_ops.planes_add(acc0, red, None, width=m)
+        else:
+            accm = acc0
+        last = [None if p is None else p[T - 1] for p in bplanes]
+        # the final add runs carry-exact: its carry-out IS the latch the
+        # last serial lane would have left (bit m of acc_{T-1} + b_{T-1})
+        final, cout = bitplane_ops.planes_add(accm, last, None, width=m)
+        for c, x in zip(run, final):
+            suffix_store[c.a[1]] = ctx.empty if x is None else x
+        carry = ctx.empty if cout is None else cout
+        if plan.tag_in_prefix:
+            tag = _lane_last(pm.tag)
+    elif suffix:
+        # chain operands produced by the prefix (e.g. idot's product
+        # rows) are integer-summarized ONCE across all lanes here,
+        # instead of once per lane inside the serial loop
+        suffix_written = {ins.dst for ins in suffix
+                          if ins.op in _WRITES_ROW}
+        shared_ints: Dict[tuple, jax.Array] = {}
+        for kind, run in ll.suffix_items:
+            if kind not in ("chain", "andrun", "copyrun"):
+                continue
+            ref_lists = [[c.a for c in run]]
+            if kind == "chain":
+                ref_lists.append([c.b for c in run])
+            for refs in ref_lists:
+                key = tuple(refs)
+                if key in shared_ints or (set(refs) & suffix_written):
+                    continue
+                shared_ints[key] = pm._int_of(refs, len(run))
+        ser_carry = carry if not plan.carry_in_prefix else None
+        ser_tag = tag if not plan.tag_in_prefix else None
+        kill_scoped: Dict[int, jax.Array] = {}
+        for t in range(T):
+            # "kill" rows are lane-private scratch: every lane
+            # overwrites them before reading, so suffix writes to
+            # them must not leak into the next lane (which still
+            # sees its own prefix value)
+            kill_scoped = {}
+            if t:
+                # provenance written by the previous lane's suffix
+                # (1-D sources) is stale for this lane on exactly
+                # the lane-private refs: kill consts and affine
+                # rows.  Prefix provenance (lane-shaped 2-D
+                # sources, mapped by lane_view) and shared
+                # reduction rows stay valid.
+                for ref, (src, _b) in list(pm.prov.items()):
+                    if getattr(src, "ndim", 1) == 2:
+                        continue
+                    if (ref[0] == "l"
+                            or plan.const_kind.get(ref[1]) == "kill"):
+                        del pm.prov[ref]
+
+            def ser_read(ref, t=t, ks=kill_scoped):
+                if ref[0] == "k":
+                    r = ref[1]
+                    if plan.const_kind.get(r) == "kill":
+                        v = ks.get(r)
+                        if v is None:
+                            v = lane_store.get(ref)
+                            return (_row(arr, r) if v is None
+                                    else _lane_at(v, t))
+                        return v
+                    v = suffix_store.get(r)
+                    if v is not None:
+                        return v
+                    v = lane_store.get(ref)
+                    if v is not None:
+                        return _lane_at(v, t)
+                    v = store.get(r)
+                    return _row(arr, r) if v is None else v
+                lst = suffix_lane_vals.get(ref[1])
+                if lst is not None and len(lst) > t:
+                    return lst[t]
+                v = lane_store.get(ref)
+                if v is not None:
+                    return _lane_at(v, t)
+                return _row(arr, ref[1] + t * s)
+
+            def ser_peek(ref, t=t, ks=kill_scoped):
+                if ref[0] == "k":
+                    r = ref[1]
+                    for d in (ks, suffix_store, store):
+                        if r in d:
+                            return d[r]
+                    return None
+                lst = suffix_lane_vals.get(ref[1])
+                if lst is not None and len(lst) > t:
+                    return lst[t]
+                return None
+
+            def ser_write(ref, v, t=t, ks=kill_scoped):
+                if ref[0] == "k":
+                    if plan.const_kind.get(ref[1]) == "kill":
+                        ks[ref[1]] = v
+                    else:
+                        suffix_store[ref[1]] = v
+                else:
+                    lst = suffix_lane_vals[ref[1]]
+                    if len(lst) == t:      # first write this lane
+                        lst.append(v)
+                    else:                  # rewrite: last value wins
+                        lst[t] = v
+
+            sm = _Machine(
+                ctx, ser_read, ser_write,
+                _lane_at(pm.carry, t) if plan.carry_in_prefix
+                else ser_carry,
+                _lane_at(pm.tag, t) if plan.tag_in_prefix else ser_tag,
+                prov=pm.prov, peek=ser_peek,
+                lane_view=lambda v, t=t: v[t] if v.ndim == 2 else v,
+                planes=False)
+            for key, v in shared_ints.items():
+                sm._int_cache[key] = v[t] if v.ndim == 2 else v
+            sm.run(ll.suffix_items)
+            ser_carry, ser_tag = sm.carry, sm.tag
+        carry, tag = ser_carry, ser_tag
+        # final values of lane-private rows rewritten by the last
+        # lane's suffix override its prefix values
+        suffix_store.update(kill_scoped)
+    else:
+        if plan.carry_in_body:
+            carry = _lane_last(pm.carry)
+        if plan.tag_in_body:
+            tag = _lane_last(pm.tag)
+
+    # ---- materialize final rows ------------------------------------------
+    const_updates: Dict[int, jax.Array] = {}
+    for ref in lane_written:
+        if ref[0] == "k":
+            const_updates[ref[1]] = _lane_last(lane_store[ref])
+    const_updates.update(suffix_store)
+    arr = _scatter(ctx, arr, const_updates)
+
+    # all affine row groups land in one batched scatter
+    aff_idx, aff_vals = [], []
+    for ref in lane_written:            # prefix affine writes
+        if ref[0] == "l" and ref[1] not in ll.suffix_affine_writes:
+            aff_idx.append(np.asarray(
+                [ref[1] + t * s for t in range(T)], np.int32))
+            v = _mat(ctx, lane_store[ref])
+            if v.ndim == 1:
+                v = jnp.broadcast_to(v, (T,) + v.shape)
+            aff_vals.append(v)
+    for c, lst in suffix_lane_vals.items():
+        aff_idx.append(np.asarray(
+            [c + t * s for t in range(T)], np.int32))
+        aff_vals.append(_stack(_mat_many(ctx, lst)))
+    if aff_idx:
+        arr = arr.at[np.concatenate(aff_idx)].set(
+            jnp.concatenate(aff_vals), mode="promise_in_bounds",
+            unique_indices=True)
+
+    # keep the cross-segment row store coherent: rows this loop wrote
+    # are refreshed (const rows) or dropped (affine rows); everything
+    # the loop left alone stays resident for the next segment
+    for r in ll.written_rows:
+        store.pop(r, None)
+    for r, v in const_updates.items():
+        store[r] = v
+    return arr, carry, tag
+
+
+def _lower_multi(program: isa.Program, rows: int, cols: int, packed: bool,
+                 segs, packed_io: bool = False):
+    """Lower a segmented program: flat runs + one `_run_loop` per plan.
+
+    ``segs`` comes from :func:`analyze_multi`.  A shared row store keeps
+    const rows resident across segment boundaries so chained loops (two
+    dominant loops, fabric-composed programs) don't re-gather rows the
+    previous segment just computed.
+    """
+    lowered = []
+    for kind, payload in segs:
+        if kind == "loop":
+            lowered.append(("loop", _loop_static(payload)))
+        else:
+            lowered.append(("flat", _segment(_flat_refs(payload))))
+
     def fn(state):
         ctx = _Ctx(cols, packed)
-        if packed:
+        if packed and not packed_io:
             arr = pack_cols(state.array)
             carry, tag = pack_cols(state.carry), pack_cols(state.tag)
         else:
             arr, carry, tag = state.array, state.carry, state.tag
-
-        # ---- prelude (flat) ----------------------------------------------
-        pre_store: Dict[int, jax.Array] = {}
-        pre_written, carry, tag = _run_flat(ctx, pre_items, arr, pre_store,
-                                            carry, tag)
-        arr = _scatter(ctx, arr, pre_written)
-
-        # ---- vectorized prefix: all lanes at once ------------------------
-        lane_store: Dict[tuple, jax.Array] = {}
-        lane_written: Dict[tuple, bool] = {}
-        if prefetch:
-            idx = np.asarray([[c + t * s for t in range(T)]
-                              for c in prefetch], np.int32)
-            block = _rows(arr, idx)            # (n_prefetch, T, cols|W)
-            for i, c in enumerate(prefetch):
-                lane_store[("l", c)] = block[i]
-
-        def lane_read(ref):
-            v = lane_store.get(ref)
-            if v is None:
-                if ref[0] == "k":
-                    v = pre_store.get(ref[1])
-                    if v is None:
-                        v = _row(arr, ref[1])
-                else:
-                    idx = np.asarray(
-                        [ref[1] + t * s for t in range(T)], np.int32)
-                    v = _rows(arr, idx)
-                lane_store[ref] = v
-            return v
-
-        def lane_write(ref, v):
-            lane_store[ref] = v
-            lane_written[ref] = True
-
-        def lane_peek(ref):
-            v = lane_store.get(ref)
-            if v is None and ref[0] == "k":
-                v = pre_store.get(ref[1])
-            return v
-
-        # a poisoned latch would mean the analysis mis-ordered a kill;
-        # reading it raises at trace time rather than miscomputing
-        pm = _Machine(ctx, lane_read, lane_write,
-                      None if plan.carry_in_prefix else carry,
-                      None if plan.tag_in_prefix else tag,
-                      peek=lane_peek)
-        pm.run(prefix_items)
-
-        # ---- serial suffix, one lane at a time ---------------------------
-        suffix_store: Dict[int, jax.Array] = {}
-        suffix_lane_vals: Dict[int, list] = {c: [] for c
-                                             in suffix_affine_writes}
-        if suffix:
-            # chain operands produced by the prefix (e.g. idot's product
-            # rows) are integer-summarized ONCE across all lanes here,
-            # instead of once per lane inside the serial loop
-            suffix_written = {ins.dst for ins in suffix
-                              if ins.op in _WRITES_ROW}
-            shared_ints: Dict[tuple, jax.Array] = {}
-            for kind, run in suffix_items:
-                if kind not in ("chain", "andrun", "copyrun"):
-                    continue
-                ref_lists = [[c.a for c in run]]
-                if kind == "chain":
-                    ref_lists.append([c.b for c in run])
-                for refs in ref_lists:
-                    key = tuple(refs)
-                    if key in shared_ints or (set(refs) & suffix_written):
-                        continue
-                    shared_ints[key] = pm._int_of(refs, len(run))
-            ser_carry = carry if not plan.carry_in_prefix else None
-            ser_tag = tag if not plan.tag_in_prefix else None
-            kill_scoped: Dict[int, jax.Array] = {}
-            for t in range(T):
-                # "kill" rows are lane-private scratch: every lane
-                # overwrites them before reading, so suffix writes to
-                # them must not leak into the next lane (which still
-                # sees its own prefix value)
-                kill_scoped = {}
-                if t:
-                    # provenance written by the previous lane's suffix
-                    # (1-D sources) is stale for this lane on exactly
-                    # the lane-private refs: kill consts and affine
-                    # rows.  Prefix provenance (lane-shaped 2-D
-                    # sources, mapped by lane_view) and shared
-                    # reduction rows stay valid.
-                    for ref, (src, _b) in list(pm.prov.items()):
-                        if getattr(src, "ndim", 1) == 2:
-                            continue
-                        if (ref[0] == "l"
-                                or plan.const_kind.get(ref[1]) == "kill"):
-                            del pm.prov[ref]
-
-                def ser_read(ref, t=t, ks=kill_scoped):
-                    if ref[0] == "k":
-                        r = ref[1]
-                        if plan.const_kind.get(r) == "kill":
-                            v = ks.get(r)
-                            if v is None:
-                                v = lane_store.get(ref)
-                                return (_row(arr, r) if v is None
-                                        else _lane_at(v, t))
-                            return v
-                        v = suffix_store.get(r)
-                        if v is not None:
-                            return v
-                        v = lane_store.get(ref)
-                        if v is not None:
-                            return _lane_at(v, t)
-                        v = pre_store.get(r)
-                        return _row(arr, r) if v is None else v
-                    lst = suffix_lane_vals.get(ref[1])
-                    if lst is not None and len(lst) > t:
-                        return lst[t]
-                    v = lane_store.get(ref)
-                    if v is not None:
-                        return _lane_at(v, t)
-                    return _row(arr, ref[1] + t * s)
-
-                def ser_peek(ref, t=t, ks=kill_scoped):
-                    if ref[0] == "k":
-                        r = ref[1]
-                        for d in (ks, suffix_store, pre_store):
-                            if r in d:
-                                return d[r]
-                        return None
-                    lst = suffix_lane_vals.get(ref[1])
-                    if lst is not None and len(lst) > t:
-                        return lst[t]
-                    return None
-
-                def ser_write(ref, v, t=t, ks=kill_scoped):
-                    if ref[0] == "k":
-                        if plan.const_kind.get(ref[1]) == "kill":
-                            ks[ref[1]] = v
-                        else:
-                            suffix_store[ref[1]] = v
-                    else:
-                        lst = suffix_lane_vals[ref[1]]
-                        if len(lst) == t:      # first write this lane
-                            lst.append(v)
-                        else:                  # rewrite: last value wins
-                            lst[t] = v
-
-                sm = _Machine(
-                    ctx, ser_read, ser_write,
-                    _lane_at(pm.carry, t) if plan.carry_in_prefix
-                    else ser_carry,
-                    _lane_at(pm.tag, t) if plan.tag_in_prefix else ser_tag,
-                    prov=pm.prov, peek=ser_peek,
-                    lane_view=lambda v, t=t: v[t] if v.ndim == 2 else v)
-                for key, v in shared_ints.items():
-                    sm._int_cache[key] = v[t] if v.ndim == 2 else v
-                sm.run(suffix_items)
-                ser_carry, ser_tag = sm.carry, sm.tag
-            carry, tag = ser_carry, ser_tag
-            # final values of lane-private rows rewritten by the last
-            # lane's suffix override its prefix values
-            suffix_store.update(kill_scoped)
-        else:
-            if plan.carry_in_body:
-                carry = _lane_last(pm.carry)
-            if plan.tag_in_body:
-                tag = _lane_last(pm.tag)
-
-        # ---- materialize final rows --------------------------------------
-        const_updates: Dict[int, jax.Array] = {}
-        for ref in lane_written:
-            if ref[0] == "k":
-                const_updates[ref[1]] = _lane_last(lane_store[ref])
-        const_updates.update(suffix_store)
-        arr = _scatter(ctx, arr, const_updates)
-
-        # all affine row groups land in one batched scatter
-        aff_idx, aff_vals = [], []
-        for ref in lane_written:            # prefix affine writes
-            if ref[0] == "l" and ref[1] not in suffix_affine_writes:
-                aff_idx.append(np.asarray(
-                    [ref[1] + t * s for t in range(T)], np.int32))
-                v = _mat(ctx, lane_store[ref])
-                if v.ndim == 1:
-                    v = jnp.broadcast_to(v, (T,) + v.shape)
-                aff_vals.append(v)
-        for c, lst in suffix_lane_vals.items():
-            aff_idx.append(np.asarray(
-                [c + t * s for t in range(T)], np.int32))
-            aff_vals.append(_stack(_mat_many(ctx, lst)))
-        if aff_idx:
-            arr = arr.at[np.concatenate(aff_idx)].set(
-                jnp.concatenate(aff_vals), mode="promise_in_bounds",
-                unique_indices=True)
-
-        # ---- postlude (flat) ---------------------------------------------
-        if post_items:
-            post_written, carry, tag = _run_flat(ctx, post_items, arr, {},
-                                                 carry, tag)
-            arr = _scatter(ctx, arr, post_written)
-
+        store: Dict[int, jax.Array] = {}
+        for kind, payload in lowered:
+            if kind == "flat":
+                written, carry, tag = _run_flat(ctx, payload, arr, store,
+                                                carry, tag)
+                arr = _scatter(ctx, arr, written)
+            else:
+                arr, carry, tag = _run_loop(ctx, payload, arr, carry, tag,
+                                            store)
         carry, tag = _mat(ctx, carry), _mat(ctx, tag)
-        if packed:
+        if packed and not packed_io:
             return type(state)(unpack_cols(arr, cols),
                                unpack_cols(carry, cols),
                                unpack_cols(tag, cols))
@@ -1112,21 +1436,29 @@ def _lower_lanes(program: isa.Program, rows: int, cols: int, packed: bool,
     return fn
 
 
-def lower(program: isa.Program, rows: int, cols: int, packed: bool):
+def lower(program: isa.Program, rows: int, cols: int, packed: bool, *,
+          packed_io: bool = False):
     """Lower ``program`` to a pure fn(CRState) -> CRState (un-jitted).
 
-    Prefix-affine reads (``lane_read``) only appear when the lane plan
+    ``packed_io`` (implies ``packed``) makes the fn take and return a
+    state whose fields are already column-packed uint32 words; callers
+    that chain launches keep state packed end-to-end and skip the
+    per-launch pack/unpack ladders entirely.
+
+    Prefix-affine reads (``lane_read``) only appear when a lane plan
     validates; otherwise the whole stream goes through `_lower_flat`.
     """
+    if packed_io:
+        packed = True
     meta = program.meta()
     if meta.max_row >= rows:
         raise ValueError(
             f"program {program.name!r} touches row {meta.max_row} but the "
             f"geometry has only {rows} rows")
-    plan = analyze(program)
-    if plan is not None:
-        return _lower_lanes(program, rows, cols, packed, plan)
-    return _lower_flat(program, rows, cols, packed)
+    segs = analyze_multi(program)
+    if segs is not None:
+        return _lower_multi(program, rows, cols, packed, segs, packed_io)
+    return _lower_flat(program, rows, cols, packed, packed_io)
 
 
 # ---------------------------------------------------------------------------

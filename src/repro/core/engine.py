@@ -292,6 +292,36 @@ _COMPILE_CACHE = _LRUCache(COMPILE_CACHE_LIMIT)
 # trace would cost more than it saves.
 CSE_MIN_CYCLES = 1500
 
+# Packed-by-default policy: programs up to this many expanded micro-ops
+# resolve ``packed=None`` to the uint32 bit-plane interior.  Above it
+# the bool interior stays the default: the long flat float sequences
+# trace to very deep elementwise chains in the plane domain, which XLA's
+# CPU scheduling passes handle pathologically (minutes, vs seconds for
+# the int32 interior).  Every integer/fabric program sits far below the
+# threshold; callers can always force either representation explicitly.
+PACKED_DEFAULT_MAX_CYCLES = 2500
+
+#: canonical wide-block compile budgets: `execute_blocks` rounds the
+#: block count up to the next budget (zero-padding the batch) so ONE
+#: compiled fn serves every count in (prev, budget] -- autotuner sweeps
+#: and ragged last chunks stop churning the compile cache.
+BLOCK_BUDGETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+
+def default_packed(program: isa.Program) -> bool:
+    """Resolve the ``packed=None`` default for ``program`` (see
+    :data:`PACKED_DEFAULT_MAX_CYCLES`)."""
+    return len(program.expand()) <= PACKED_DEFAULT_MAX_CYCLES
+
+
+def canonical_block_budget(blocks: int) -> int:
+    """Smallest canonical budget >= ``blocks`` (identity above the
+    largest budget -- the fabric already chunks its batches there)."""
+    for b in BLOCK_BUDGETS:
+        if blocks <= b:
+            return b
+    return blocks
+
 #: stats of the most recent CSE run ({"eqns_before", "eqns_after",
 #: "removed"}) -- benchmark introspection, None until a pass runs.
 last_cse_stats = None
@@ -339,19 +369,23 @@ def _cse_pass(fn, blocks: int, rows: int, cols: int) -> "callable":
 
 
 def compile_program(program: isa.Program, rows: int = 512, cols: int = 40,
-                    *, packed: bool = False, cse: bool | None = None):
+                    *, packed: bool | None = None, cse: bool | None = None):
     """Compile ``program`` for a fixed geometry into a jitted fn.
 
     Returns ``fn(CRState) -> CRState``.  Results are cached module-wide
     in a bounded LRU (see :data:`COMPILE_CACHE_LIMIT` /
     :func:`set_compile_cache_limit`); the key includes
     :meth:`Program.fingerprint` so same-named programs with different
-    nodes never collide.  ``cse=None`` auto-enables the jaxpr-level CSE
-    pass for programs of >= :data:`CSE_MIN_CYCLES` micro-ops; the
-    resolved flag is part of the cache key (forced on/off variants never
-    alias).
+    nodes never collide.  ``packed=None`` resolves via
+    :func:`default_packed` (uint32 interior for everything below the
+    float-sequence size threshold).  ``cse=None`` auto-enables the
+    jaxpr-level CSE pass for programs of >= :data:`CSE_MIN_CYCLES`
+    micro-ops; both resolved flags are part of the cache key (forced
+    variants never alias).
     """
     use_cse = _use_cse(program, cse)
+    if packed is None:
+        packed = default_packed(program)
     key = (program.name, rows, cols, bool(packed), use_cse,
            program.fingerprint())
     fn = _COMPILE_CACHE.get(key)
@@ -369,7 +403,7 @@ def clear_compile_cache() -> None:
 
 
 def execute_compiled(program: isa.Program, state: CRState,
-                     *, packed: bool = False) -> CRState:
+                     *, packed: bool | None = None) -> CRState:
     """Run ``program`` through the statically-specialized compiled path."""
     rows, cols = state.array.shape
     return compile_program(program, rows, cols, packed=packed)(state)
@@ -382,7 +416,7 @@ EXECUTORS = ("unroll", "scan", "compiled")
 
 
 def run(program: isa.Program, state: CRState, executor: str = "compiled",
-        *, packed: bool = False) -> CRState:
+        *, packed: bool | None = None) -> CRState:
     """Run ``program`` with the chosen executor (see module docstring)."""
     if executor == "unroll":
         return execute(program, state)
@@ -397,24 +431,32 @@ def run(program: isa.Program, state: CRState, executor: str = "compiled",
 # multi-block execution -----------------------------------------------------
 def execute_blocks(program: isa.Program, states: CRState,
                    executor: str = "compiled",
-                   *, packed: bool = False) -> CRState:
+                   *, packed: bool | None = None) -> CRState:
     """Run the same program on many blocks: states have a leading block dim.
 
     The compiled path exploits that every micro-op is column-parallel:
     B blocks of C columns are exactly one block of B*C columns, so the
     fabric is simulated by reshaping into a single wide block (no vmap,
-    no per-block overhead).  The scan/unroll paths vmap per block.
+    no per-block overhead).  The block count is rounded up to the next
+    canonical budget (:func:`canonical_block_budget`) and the batch
+    zero-padded, so one compiled fn serves a whole range of ragged
+    counts instead of recompiling per distinct count; columns are fully
+    independent, so the pad columns cannot perturb the live ones and are
+    sliced off on return.  The scan/unroll paths vmap per block.
     """
     if executor == "compiled":
         blocks, rows, cols = states.array.shape
+        if packed is None:
+            packed = default_packed(program)
+        budget = canonical_block_budget(blocks)
         use_cse = _use_cse(program, None)
-        key = ("blocks", program.name, blocks, rows, cols, bool(packed),
+        key = ("blocks", program.name, budget, rows, cols, bool(packed),
                use_cse, program.fingerprint())
         fn = _COMPILE_CACHE.get(key)
         if fn is None:
-            inner = compiler.lower(program, rows, blocks * cols, packed)
+            inner = compiler.lower(program, rows, budget * cols, packed)
 
-            def wide_fn(st: CRState, blocks=blocks, rows=rows, cols=cols):
+            def wide_fn(st: CRState, blocks=budget, rows=rows, cols=cols):
                 wide = CRState(
                     array=jnp.moveaxis(st.array, 0, 1).reshape(
                         rows, blocks * cols),
@@ -428,11 +470,132 @@ def execute_blocks(program: isa.Program, states: CRState,
                     tag=out.tag.reshape(blocks, cols))
 
             if use_cse:
-                wide_fn = _cse_pass(wide_fn, blocks, rows, cols)
+                wide_fn = _cse_pass(wide_fn, budget, rows, cols)
             fn = _COMPILE_CACHE.put(key, jax.jit(wide_fn))
+        if budget != blocks:
+            pad = budget - blocks
+            padded = CRState(
+                array=jnp.concatenate(
+                    [states.array,
+                     jnp.zeros((pad, rows, cols), jnp.bool_)]),
+                carry=jnp.concatenate(
+                    [states.carry, jnp.zeros((pad, cols), jnp.bool_)]),
+                tag=jnp.concatenate(
+                    [states.tag, jnp.zeros((pad, cols), jnp.bool_)]))
+            out = fn(padded)
+            return CRState(out.array[:blocks], out.carry[:blocks],
+                           out.tag[:blocks])
         return fn(states)
     if executor not in ("unroll", "scan"):
         raise ValueError(
             f"unknown executor {executor!r}; expected one of {EXECUTORS}")
     inner = execute if executor == "unroll" else execute_scan
     return jax.vmap(lambda s: inner(program, s))(states)
+
+
+# packed-resident execution -------------------------------------------------
+#
+# `execute_blocks` round-trips the bool planes through the pack/unpack
+# ladder on every launch; at 64 blocks that ladder costs ~3x the packed
+# inner compute.  Replay loops (fabric rounds, chained small programs)
+# should instead keep the state *packed-resident*: pack once, replay any
+# number of launches on uint32 words, unpack once at the end.
+def pack_state(state: CRState) -> CRState:
+    """Column-pack every field of a state (bool -> uint32 words)."""
+    return CRState(pack_cols(state.array), pack_cols(state.carry),
+                   pack_cols(state.tag))
+
+
+def unpack_state(state: CRState, cols: int) -> CRState:
+    """Invert :func:`pack_state` back to ``cols`` bool columns."""
+    return CRState(unpack_cols(state.array, cols),
+                   unpack_cols(state.carry, cols),
+                   unpack_cols(state.tag, cols))
+
+
+def pack_block_states(states: CRState) -> CRState:
+    """Fuse a ``(blocks, rows, cols)`` batch into one packed wide state.
+
+    Returns a packed single-block state of ``blocks * cols`` columns
+    (``array`` is ``(rows, n_words)`` uint32) -- the resident form the
+    :func:`compile_packed` fns operate on.
+    """
+    blocks, rows, cols = states.array.shape
+    wide = CRState(
+        array=jnp.moveaxis(states.array, 0, 1).reshape(rows, blocks * cols),
+        carry=states.carry.reshape(blocks * cols),
+        tag=states.tag.reshape(blocks * cols))
+    return pack_state(wide)
+
+
+def unpack_block_states(wide: CRState, blocks: int, cols: int) -> CRState:
+    """Invert :func:`pack_block_states` back to a block batch."""
+    rows = wide.array.shape[0]
+    st = unpack_state(wide, blocks * cols)
+    return CRState(
+        array=jnp.moveaxis(st.array.reshape(rows, blocks, cols), 1, 0),
+        carry=st.carry.reshape(blocks, cols),
+        tag=st.tag.reshape(blocks, cols))
+
+
+def compile_packed(program: isa.Program, rows: int, cols: int,
+                   *, cse: bool | None = None):
+    """Compile ``program`` into a jitted fn over *packed* states.
+
+    The returned fn maps a packed state of ``cols`` total columns (see
+    :func:`pack_state` / :func:`pack_block_states`) to a packed state:
+    no per-launch pack/unpack ladder at all.  Bit-identical to the other
+    executors after :func:`unpack_state`.  Cached like
+    :func:`compile_program`.
+    """
+    use_cse = _use_cse(program, cse)
+    key = ("pio", program.name, rows, cols, use_cse, program.fingerprint())
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        inner = compiler.lower(program, rows, cols, True, packed_io=True)
+        if use_cse:
+            global last_cse_stats
+            w = compiler.n_words(cols)
+            example = CRState(
+                array=jax.ShapeDtypeStruct((rows, w), jnp.uint32),
+                carry=jax.ShapeDtypeStruct((w,), jnp.uint32),
+                tag=jax.ShapeDtypeStruct((w,), jnp.uint32))
+            inner = compiler.apply_cse(inner, example)
+            last_cse_stats = getattr(inner, "_cse_stats", None)
+        fn = _COMPILE_CACHE.put(key, jax.jit(inner))
+    return fn
+
+
+def run_chain(programs, state: CRState, *, cse: bool | None = None) -> CRState:
+    """Run several programs back-to-back, state packed across launches.
+
+    The whole chain is fused into ONE jitted function: pack once, run
+    every program's packed-io body, unpack once.  This is the fix for
+    small-program replay barely beating the scan executor -- a chain of
+    K short programs pays one launch + one pack/unpack ladder instead of
+    K of each.  Bit-identical to ``for p in programs: state = run(p,
+    state)``.  Cached per chain fingerprint.
+    """
+    programs = tuple(programs)
+    if not programs:
+        return state
+    rows, cols = state.array.shape
+    if cse is None:
+        cse = sum(len(p.expand()) for p in programs) >= CSE_MIN_CYCLES
+    key = ("chain", rows, cols, bool(cse),
+           tuple(p.fingerprint() for p in programs))
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        bodies = [compiler.lower(p, rows, cols, True, packed_io=True)
+                  for p in programs]
+
+        def chain_fn(st: CRState):
+            pst = pack_state(st)
+            for body in bodies:
+                pst = body(pst)
+            return unpack_state(pst, cols)
+
+        if cse:
+            chain_fn = _cse_pass(chain_fn, 0, rows, cols)
+        fn = _COMPILE_CACHE.put(key, jax.jit(chain_fn))
+    return fn(state)

@@ -293,6 +293,46 @@ class Program:
         post = expand_nodes(self.nodes[best + 1:])
         return pre, iters, post
 
+    def expand_segments(self):
+        """Expand, splitting at EVERY top-level hardware loop.
+
+        Returns a list of ``("flat", stream)`` and ``("loop", iters)``
+        segments in program order, where ``iters`` is one micro-op
+        stream per iteration of a top-level :class:`Loop` with at least
+        2 iterations.  Register state threads through the segments in
+        order, so the concatenation of all streams is always identical
+        to :meth:`expand` -- like :meth:`expand_grouped` this only adds
+        boundaries.  Programs built by concatenation (``__add__``) keep
+        one segment per constituent loop, which is what lets the
+        compiled executor lane-vectorize each dominant loop of a chained
+        program instead of only the single biggest one.
+        """
+        regs = [0] * NUM_REGS
+        ctrl = [0]
+        segs = []
+        flat: List[Node] = []
+
+        def expand_nodes(nodes):
+            return Program("_", list(nodes))._expand_with(regs, ctrl)
+
+        def flush():
+            if flat:
+                stream = expand_nodes(flat)
+                if stream:
+                    segs.append(("flat", stream))
+                del flat[:]
+
+        for nd in self.nodes:
+            if isinstance(nd, Loop) and nd.count >= 2:
+                flush()
+                segs.append(("loop",
+                             [expand_nodes(nd.body)
+                              for _ in range(nd.count)]))
+            else:
+                flat.append(nd)
+        flush()
+        return segs
+
     def _expand_with(self, regs, ctrl):
         """Like :meth:`expand` but threading caller-owned register state
         (``regs``) and a 1-element controller-cycle accumulator."""

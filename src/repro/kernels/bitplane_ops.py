@@ -1,0 +1,233 @@
+"""Bit-plane arithmetic backends: ripple adds and lane-axis popcount folds.
+
+The compiled executor's packed interior (``core/compiler.py``) represents
+per-column integers as *bit planes*: plane ``i`` is one main-array row's
+repr value -- ``(cols,)`` bool, or ``(W,)`` uint32 words with 32 columns
+per word.  Arithmetic on such integers is pure bitwise logic (the same
+full-adder the carry chain of paper fig. 5 implements), which XLA fuses
+into a handful of memory passes instead of the gather/weighted-sum
+ladders of an int32 interior.
+
+Two hot loops live here so they can be backend-dispatched:
+
+* :func:`planes_add` -- an m-bit ripple-carry add/sub over plane lists
+  (5 bitwise ops per bit).  Always jnp: chains are small and fuse.
+* :func:`lane_fold` -- the reduction ``sum_t x_t mod 2^width`` over the
+  lane (tuple) axis of lane-shaped planes.  This is a *positional
+  popcount* (count/accumulate bits per column position across T lanes),
+  computed as a log-depth carry-save ripple-fold tree.  It is the inner
+  loop of every dot-product accumulator on the fabric, and the only
+  piece big enough to pay for a Pallas kernel: above a column-count
+  threshold on TPU the fold runs as one VMEM kernel
+  (:func:`lane_fold_pallas`, built on the ``bitserial_matmul`` idioms);
+  everywhere else the jax.numpy tree is the fallback.
+
+Both paths are exact (mod ``2**width``) and bit-identical; tests verify
+the Pallas kernel in ``interpret=True`` mode like the other kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "planes_add", "lane_fold", "lane_fold_jnp", "lane_fold_pallas",
+    "use_pallas_fold", "PALLAS_FOLD_MIN_COLS",
+]
+
+#: lane_fold switches to the Pallas kernel when the fold covers at least
+#: this many columns (lanes x packed words x 32) AND the default backend
+#: is a TPU.  The jnp tree is always the fallback.
+PALLAS_FOLD_MIN_COLS = 1 << 16
+
+_ENV = "REPRO_BITPLANE_BACKEND"          # "auto" (default) | "jnp" | "pallas"
+
+
+def _fa(a, b, c):
+    """Bitwise full adder on mask arrays: returns (sum, carry_out)."""
+    axb = a ^ b
+    return axb ^ c, (a & b) | (c & axb)
+
+
+def _fs(a, b, c):
+    """Bitwise full subtractor (a - b - borrow): (diff, borrow_out)."""
+    axb = a ^ b
+    return axb ^ c, (~a & b) | (c & ~axb)
+
+
+def _add1(a, b, c, sub: bool):
+    """One ripple step where any of a/b/c may be None (known zero).
+
+    Subtraction is NOT commutative in (a, b): the zero-elision cases are
+    handled per side (0 - b borrows where b|c; a - 0 borrows where ~a&c).
+    """
+    if a is None and b is None:           # 0 op 0 op c
+        return c, (c if sub else None)
+    if a is None:                         # 0 op b
+        if sub:
+            # 0 - b - c: diff = b ^ c, borrow = b | c
+            if c is None:
+                return b, b
+            return b ^ c, b | c
+        if c is None:
+            return b, None
+        return b ^ c, b & c
+    if b is None:                         # a op 0
+        if c is None:
+            return a, None
+        if sub:
+            # a - 0 - c: diff = a ^ c, borrow = ~a & c
+            return a ^ c, ~a & c
+        return a ^ c, a & c
+    if c is None:
+        if sub:
+            return a ^ b, ~a & b
+        return a ^ b, a & b
+    return (_fs if sub else _fa)(a, b, c)
+
+
+def planes_add(a, b, cin=None, *, sub: bool = False, width=None):
+    """Ripple add/sub of two bit-plane lists.
+
+    ``a`` and ``b`` are sequences of same-dtype mask arrays (bool planes
+    or packed uint32 words), least-significant first; ``None`` entries
+    (and a ``None`` ``cin``) are known-zero planes and cost no ops.
+    Shorter inputs are zero-extended.  Returns ``(planes, carry_out)``
+    of length ``width`` (default ``max(len(a), len(b))``); both the
+    planes and the carry may be ``None`` (known zero).  For ``sub`` the
+    carry is the borrow.  Exact mod ``2**width`` with the exact final
+    carry/borrow -- the same contract as the engine's OP_FA/OP_FS chain.
+    """
+    m = max(len(a), len(b)) if width is None else width
+    out = []
+    c = cin
+    for i in range(m):
+        ai = a[i] if i < len(a) else None
+        bi = b[i] if i < len(b) else None
+        s, c = _add1(ai, bi, c, sub)
+        out.append(s)
+    return out, c
+
+
+def _tree_fold(planes, width: int):
+    """Pairwise carry-save ripple-fold over the leading lane axis.
+
+    ``planes``: list of ``(T, ...)`` mask arrays (entries may be None).
+    Returns a list of ``width`` base-shaped planes == the mod-2**width
+    sum over lanes.  Associativity of modular addition makes any
+    pairing order exact, so the tree halves T each level.
+    """
+    planes = list(planes[:width])
+    planes += [None] * (width - len(planes))
+    T = next(p.shape[0] for p in planes if p is not None)
+    while T > 1:
+        h = T // 2
+        a = [None if p is None else p[:h] for p in planes]
+        b = [None if p is None else p[h:2 * h] for p in planes]
+        s, _ = planes_add(a, b, width=width)
+        if T % 2:                      # odd lane rides along to next level
+            def cat(si, ti):
+                if si is None and ti is None:
+                    return None
+                ref = si if si is not None else ti
+                left = (jnp.zeros((h,) + ref.shape[1:], ref.dtype)
+                        if si is None else si)
+                right = (jnp.zeros((1,) + ref.shape[1:], ref.dtype)
+                         if ti is None else ti)
+                return jnp.concatenate([left, right])
+            tail = [None if p is None else p[2 * h:] for p in planes]
+            planes, T = [cat(si, ti) for si, ti in zip(s, tail)], h + 1
+        else:
+            planes, T = s, h
+    return [None if p is None else p[0] for p in planes]
+
+
+def lane_fold_jnp(planes, width: int):
+    """jax.numpy backend of :func:`lane_fold` (works on bool or uint32)."""
+    return _tree_fold(planes, width)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend: the whole fold as one VMEM kernel over packed words
+# ---------------------------------------------------------------------------
+def _lane_fold_kernel(x_ref, o_ref, *, lanes: int, m: int, width: int):
+    """Positional-popcount fold of one word-column tile.
+
+    ``x_ref``: (m, lanes, bw) uint32 planes; ``o_ref``: (width, bw).
+    The reduction runs entirely in VMEM as the same carry-save tree the
+    jnp path uses -- on the VPU every step is an elementwise op.
+    """
+    x = x_ref[...]
+    planes = [x[i] for i in range(m)] + [None] * (width - m)
+    out = _tree_fold(planes, width)
+    zero = jnp.zeros(o_ref.shape[1:], jnp.uint32)
+    o_ref[...] = jnp.stack([zero if p is None else p for p in out])
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_w", "interpret"))
+def lane_fold_pallas(x, width: int, *, block_w: int = 512,
+                     interpret: bool = False):
+    """Pallas TPU fold: ``x`` is (m, T, W) uint32, result (width, W).
+
+    Grid over word-column tiles; each program folds its tile's T lanes
+    in VMEM.  Validated against :func:`lane_fold_jnp` in interpret mode.
+    """
+    from jax.experimental import pallas as pl
+
+    m, lanes, w = x.shape
+    bw = min(block_w, w)
+    pad = (-w) % bw
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+    wp = w + pad
+    out = pl.pallas_call(
+        functools.partial(_lane_fold_kernel, lanes=lanes, m=m, width=width),
+        grid=(wp // bw,),
+        in_specs=[pl.BlockSpec((m, lanes, bw), lambda j: (0, 0, j))],
+        out_specs=pl.BlockSpec((width, bw), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((width, wp), jnp.uint32),
+        interpret=interpret,
+    )(x)
+    return out[:, :w] if pad else out
+
+
+def _backend() -> str:
+    v = os.environ.get(_ENV, "auto").lower()
+    return v if v in ("auto", "jnp", "pallas") else "auto"
+
+
+def use_pallas_fold(lanes: int, words: int, packed: bool) -> bool:
+    """Selection rule: Pallas only for packed planes, on a TPU backend,
+    when the fold covers >= :data:`PALLAS_FOLD_MIN_COLS` columns.  The
+    ``REPRO_BITPLANE_BACKEND`` env var forces either backend."""
+    be = _backend()
+    if be == "jnp" or not packed:
+        return False
+    if be == "pallas":
+        return True
+    return (jax.default_backend() == "tpu"
+            and lanes * words * 32 >= PALLAS_FOLD_MIN_COLS)
+
+
+def lane_fold(planes, width: int, *, packed: bool, interpret: bool = False):
+    """Fold lane-shaped planes down the lane axis, mod ``2**width``.
+
+    Dispatches to the Pallas kernel per :func:`use_pallas_fold`, falling
+    back to the fused jnp tree.  ``planes`` entries may be None (known
+    zero); the result list may contain None entries likewise.
+    """
+    live = [p for p in planes[:width] if p is not None]
+    if not live:
+        return [None] * width
+    lanes, words = live[0].shape[0], live[0].shape[-1]
+    if (use_pallas_fold(lanes, words, packed)
+            and all(p is None or p.ndim == 2 for p in planes[:width])):
+        zero = jnp.zeros_like(live[0])
+        x = jnp.stack([zero if p is None else p for p in planes[:width]])
+        out = lane_fold_pallas(x, width, interpret=interpret)
+        return [out[i] for i in range(width)]
+    return lane_fold_jnp(planes, width)

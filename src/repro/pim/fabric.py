@@ -729,8 +729,8 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
                     executor: Optional[str] = None,
                     batch_rounds: Optional[bool] = None,
                     max_batch_blocks: int = MAX_BATCH_BLOCKS,
-                    x_alt: Optional[Dict[str, np.ndarray]] = None
-                    ) -> List[np.ndarray]:
+                    x_alt: Optional[Dict[str, np.ndarray]] = None,
+                    packed: Optional[bool] = None) -> List[np.ndarray]:
     """Run the program's rounds exactly; operands already encoded.
 
     x_u ``(M, K)`` is the shared activation in the *primary* dtype
@@ -752,6 +752,14 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
     accumulator image, which the host carries between stages, so the
     result is bit-identical to the per-round loop *and* independent of
     the K-tiling.
+
+    ``packed`` selects the compiled interior representation and is
+    forwarded to ``engine.execute_blocks``: the default ``None``
+    resolves per program via ``engine.default_packed`` -- the int
+    dot/mul round programs go through the uint32 bit-plane interior
+    (where the wide-block scaling win lives) while the big float
+    sequences keep the bool interior and its fast compiles.  Either
+    setting is bit-identical.
     """
     import jax.numpy as jnp
 
@@ -844,7 +852,7 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
             carry=jnp.zeros((blocks, cfg.cols), bool),
             tag=jnp.ones((blocks, cfg.cols), bool))
         return np.asarray(engine.execute_blocks(
-            progs[c][0], states, executor=executor).array)
+            progs[c][0], states, executor=executor, packed=packed).array)
 
     def consume(c: str, slots, res: np.ndarray) -> None:
         info = class_info[c]
@@ -896,14 +904,16 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
 def execute_schedule(sched: FabricProgram, x_u: np.ndarray, w_u: np.ndarray,
                      executor: Optional[str] = None,
                      batch_rounds: Optional[bool] = None,
-                     max_batch_blocks: int = MAX_BATCH_BLOCKS) -> np.ndarray:
+                     max_batch_blocks: int = MAX_BATCH_BLOCKS,
+                     packed: Optional[bool] = None) -> np.ndarray:
     """Single-GEMM wrapper of :func:`execute_program` (legacy surface)."""
     if len(sched.gemms) != 1:
         raise ValueError("execute_schedule is single-GEMM; use "
                          "execute_program for fused programs")
     return execute_program(sched, x_u, (w_u,), executor=executor,
                            batch_rounds=batch_rounds,
-                           max_batch_blocks=max_batch_blocks)[0]
+                           max_batch_blocks=max_batch_blocks,
+                           packed=packed)[0]
 
 
 @dataclasses.dataclass(frozen=True)

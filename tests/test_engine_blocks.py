@@ -1,0 +1,200 @@
+"""Multi-block execution: ragged block counts, canonical compile
+budgets, and the packed-resident replay paths.
+
+`engine.execute_blocks` simulates B blocks as ONE wide block of B*C
+columns, rounds B up to a canonical budget (zero-padding the batch) so a
+single compiled fn serves a whole range of ragged counts, and -- since
+the packed-by-default policy -- runs the interior on uint32 bit planes.
+These tests pin all of that bit-exactly against the unroll oracle, pin
+the cache behaviour the budgets exist for, and pin the packed-resident
+forms (`pack_block_states` / `compile_packed` / `run_chain`) that keep
+state packed across chained launches.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine, floatprog, harness, programs, ref
+from repro.core.floatprog import FP8_E4M3
+
+
+def _states_equal(a, b):
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("array", "carry", "tag"))
+
+
+def _rand_block_states(rng, blocks, rows, cols):
+    return engine.CRState(
+        array=jnp.asarray(rng.integers(0, 2, (blocks, rows, cols))
+                          .astype(bool)),
+        carry=jnp.asarray(rng.integers(0, 2, (blocks, cols)).astype(bool)),
+        tag=jnp.asarray(rng.integers(0, 2, (blocks, cols)).astype(bool)))
+
+
+# ---------------------------------------------------------------------------
+# Ragged block counts x executors x packed, bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("blocks", [1, 3, 17, 65])
+def test_ragged_blocks_bit_identity(rng, blocks):
+    """blocks in {1, 3, 17, 65} hit four different canonical budgets
+    (1, 4, 32, 128): every one must be bit-identical to the vmapped
+    unroll oracle through scan and both compiled representations, with
+    the zero-padded tail sliced away (65 -> budget 128 exercises a pad
+    bigger than the batch itself)."""
+    prog, _ = programs.idot(4, rows=128)
+    states = _rand_block_states(rng, blocks, 128, 8)
+    ref_out = engine.execute_blocks(prog, states, "unroll")
+    assert ref_out.array.shape == states.array.shape
+    scan = engine.execute_blocks(prog, states, "scan")
+    assert _states_equal(ref_out, scan)
+    for packed in (False, True, None):        # None = policy default
+        comp = engine.execute_blocks(prog, states, "compiled",
+                                     packed=packed)
+        assert comp.array.shape == states.array.shape
+        assert _states_equal(ref_out, comp), f"packed={packed}"
+
+
+def test_canonical_block_budget_values():
+    assert [engine.canonical_block_budget(b) for b in
+            (1, 2, 3, 4, 5, 17, 64, 65, 512)] \
+        == [1, 2, 4, 4, 8, 32, 64, 128, 512]
+    # above the largest budget the count passes through unchanged (the
+    # fabric chunks its batches at MAX_BATCH_BLOCKS=512 already)
+    assert engine.canonical_block_budget(513) == 513
+
+
+def test_blocks_budget_cache_reuse(rng):
+    """Ragged counts within one budget share ONE compiled fn: replaying
+    blocks 5..8 after a cold 5-block launch may compile once (budget 8)
+    and must then be pure cache hits -- the per-distinct-count
+    recompiles the budgets eliminate."""
+    prog, _ = programs.iadd(8, rows=64)
+    rows, cols = 64, 8
+    engine.execute_blocks(prog, _rand_block_states(rng, 5, rows, cols))
+    s0 = engine.compile_cache_stats()
+    for blocks in (6, 7, 8, 5):
+        out = engine.execute_blocks(
+            prog, _rand_block_states(rng, blocks, rows, cols))
+        assert out.array.shape == (blocks, rows, cols)
+    s1 = engine.compile_cache_stats()
+    assert s1["misses"] == s0["misses"], \
+        "block counts 5-8 must reuse the budget-8 compiled fn"
+    assert s1["hits"] >= s0["hits"] + 4
+
+
+def test_default_packed_policy():
+    """Small programs resolve packed=None to the uint32 interior; the
+    big flat float sequences stay on the bool interior (their plane-
+    domain chains compile pathologically on CPU XLA)."""
+    assert engine.default_packed(programs.iadd(8)[0])
+    assert engine.default_packed(programs.idot(4)[0])
+    assert not engine.default_packed(programs.bf16_dot(rows=512)[0])
+    assert not engine.default_packed(programs.fp8_dot(rows=512)[0])
+
+
+# ---------------------------------------------------------------------------
+# Packed-resident replay: pack once, launch N times, unpack once
+# ---------------------------------------------------------------------------
+def test_pack_block_states_roundtrip(rng):
+    states = _rand_block_states(rng, 5, 32, 8)
+    wide = engine.pack_block_states(states)
+    assert wide.array.dtype == jnp.uint32
+    back = engine.unpack_block_states(wide, 5, 8)
+    assert _states_equal(states, back)
+
+
+def test_packed_resident_replay_bit_identity(rng):
+    """Three chained launches on packed-resident state == three
+    sequential unroll launches on the bool batch."""
+    prog, _ = programs.idot(4, rows=128)
+    blocks, rows, cols = 5, 128, 8
+    states = _rand_block_states(rng, blocks, rows, cols)
+    fn = engine.compile_packed(prog, rows, blocks * cols)
+    wide = engine.pack_block_states(states)
+    for _ in range(3):
+        wide = fn(wide)
+    got = engine.unpack_block_states(wide, blocks, cols)
+    want = states
+    for _ in range(3):
+        want = engine.execute_blocks(prog, want, "unroll")
+    assert _states_equal(got, want)
+
+
+def test_run_chain_matches_sequential(rng):
+    """A fused packed chain of distinct small programs == running them
+    one launch at a time through the unroll oracle (satellite: small-
+    program replay keeps state packed across chained launches)."""
+    chain = [programs.iadd(8, rows=128)[0],
+             programs.imul(4, rows=128)[0],
+             programs.idot(4, rows=128)[0],
+             programs.iadd(8, rows=128)[0]]   # repeat: same body reused
+    state = engine.CRState(
+        array=jnp.asarray(rng.integers(0, 2, (128, 8)).astype(bool)),
+        carry=jnp.asarray(rng.integers(0, 2, 8).astype(bool)),
+        tag=jnp.asarray(rng.integers(0, 2, 8).astype(bool)))
+    got = engine.run_chain(chain, state)
+    want = state
+    for p in chain:
+        want = engine.run(p, want, "unroll")
+    assert _states_equal(got, want)
+    assert engine.run_chain([], state) is state
+
+
+def test_run_chain_is_cached(rng):
+    state = engine.make_state(64, 8)
+    chain = [programs.iadd(4, rows=64)[0], programs.iadd(4, rows=64)[0]]
+    engine.run_chain(chain, state)
+    s0 = engine.compile_cache_stats()
+    engine.run_chain(chain, state)
+    s1 = engine.compile_cache_stats()
+    assert s1["misses"] == s0["misses"] and s1["hits"] == s0["hits"] + 1
+
+
+# ---------------------------------------------------------------------------
+# float_dot wide-accumulator chaining across ragged compiled launches
+# ---------------------------------------------------------------------------
+def _bits(rng, fmt, shape):
+    s = rng.integers(0, 2, shape).astype(np.uint64)
+    e = rng.integers(1, (1 << fmt.ebits) - 1, shape).astype(np.uint64)
+    m = rng.integers(0, 1 << fmt.mbits, shape).astype(np.uint64)
+    return (s << np.uint64(fmt.ebits + fmt.mbits)) \
+        | (e << np.uint64(fmt.mbits)) | m
+
+
+def test_float_dot_wide_acc_chain_ragged_blocks(rng):
+    """A K-tiled float dot chained through fdot_set_acc across TWO
+    ragged compiled execute_blocks launches (3 blocks -> budget 4,
+    zero-padded) matches the float reference oracle per block."""
+    fmt = FP8_E4M3
+    cap, K, blocks, cols = 3, 5, 3, 8
+    a = _bits(rng, fmt, (blocks, K, cols))
+    b = _bits(rng, fmt, (blocks, K, cols))
+
+    def launch(tuples, a_t, b_t, accs):
+        prog, lay = floatprog.float_dot(fmt, rows=512, tuples=tuples)
+        imgs = []
+        for i in range(blocks):
+            img = harness.pack_state(
+                lay, {"a": a_t[i], "b": b_t[i]}, cols)
+            if accs is not None:
+                floatprog.fdot_set_acc(img, fmt, accs[i])
+            imgs.append(img)
+        states = engine.CRState(
+            array=jnp.asarray(np.stack(imgs)),
+            carry=jnp.zeros((blocks, cols), bool),
+            tag=jnp.ones((blocks, cols), bool))
+        out = engine.execute_blocks(prog, states, "compiled")
+        assert _states_equal(out,
+                             engine.execute_blocks(prog, states, "scan"))
+        return np.asarray(out.array)
+
+    arr1 = launch(cap, a[:, :cap], b[:, :cap], None)
+    accs = [floatprog.fdot_acc(arr1[i], fmt) for i in range(blocks)]
+    arr2 = launch(K - cap, a[:, cap:], b[:, cap:], accs)
+    for i in range(blocks):
+        got = floatprog.fdot_result(arr2[i], fmt)
+        want, _ = ref.float_dot_acc(a[i], b[i], fmt.ebits, fmt.mbits)
+        np.testing.assert_array_equal(got, want)

@@ -135,3 +135,139 @@ def test_flash_attention_matches_model_chunked_path():
     got = jnp.moveaxis(got.reshape(b, h, s, hd), 1, 2)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane backends (repro.kernels.bitplane_ops): the ripple add and
+# the lane-axis popcount fold behind the packed compiled executor
+# ---------------------------------------------------------------------------
+def test_planes_add_none_elision_oracle():
+    """planes_add with None (known-zero) planes == dense add/sub.
+
+    Exhausts every None/dense pattern over 4-bit operands with and
+    without a carry-in; subtraction is the asymmetric case (a-0 vs 0-b
+    elide differently), so both orders are covered by construction.
+    """
+    from itertools import product
+
+    from repro.kernels import bitplane_ops as bp
+
+    rng = np.random.default_rng(0)
+    w = 4
+    av = rng.integers(0, 2, (w, 8)).astype(np.uint32)
+    bv = rng.integers(0, 2, (w, 8)).astype(np.uint32)
+    cv = rng.integers(0, 2, (8,)).astype(np.uint32)
+    for mask_a, mask_b, cin, sub in product(
+            range(1 << w), range(1 << w), (False, True), (False, True)):
+        a = [jnp.asarray(av[i]) if mask_a >> i & 1 else None
+             for i in range(w)]
+        b = [jnp.asarray(bv[i]) if mask_b >> i & 1 else None
+             for i in range(w)]
+        ad = [jnp.zeros(8, jnp.uint32) if p is None else p for p in a]
+        bd = [jnp.zeros(8, jnp.uint32) if p is None else p for p in b]
+        ci = jnp.asarray(cv) if cin else None
+        cd = jnp.asarray(cv) if cin else jnp.zeros(8, jnp.uint32)
+        got, gc = bp.planes_add(a, b, ci, sub=sub)
+        want, wc = bp.planes_add(ad, bd, cd, sub=sub)
+        for g, x in zip(got, want):
+            gd = jnp.zeros(8, jnp.uint32) if g is None else g
+            np.testing.assert_array_equal(np.asarray(gd & 1),
+                                          np.asarray(x & 1))
+        gcd = jnp.zeros(8, jnp.uint32) if gc is None else gc
+        np.testing.assert_array_equal(np.asarray(gcd & 1),
+                                      np.asarray(wc & 1))
+
+
+def test_planes_add_matches_integer_arithmetic():
+    """Dense planes_add == uint add/sub mod 2^w with exact carry-out."""
+    from repro.kernels import bitplane_ops as bp
+
+    rng = np.random.default_rng(1)
+    w, n = 6, 64
+    a = rng.integers(0, 1 << w, n)
+    b = rng.integers(0, 1 << w, n)
+    c = rng.integers(0, 2, n)
+    for sub in (False, True):
+        ap = [jnp.asarray((a >> i & 1).astype(np.uint32)) for i in range(w)]
+        bpl = [jnp.asarray((b >> i & 1).astype(np.uint32)) for i in range(w)]
+        out, cout = bp.planes_add(ap, bpl, jnp.asarray(c.astype(np.uint32)),
+                                  sub=sub)
+        got = sum(np.asarray(p & 1).astype(np.int64) << i
+                  for i, p in enumerate(out))
+        full = a - b - c if sub else a + b + c
+        np.testing.assert_array_equal(got, full % (1 << w))
+        np.testing.assert_array_equal(np.asarray(cout & 1).astype(bool),
+                                      (full < 0) if sub
+                                      else (full >> w).astype(bool))
+
+
+@pytest.mark.parametrize("lanes,words,width", [(3, 4, 5), (8, 16, 8),
+                                               (17, 33, 12)])
+def test_lane_fold_pallas_matches_jnp(lanes, words, width):
+    """The Pallas positional-popcount fold (interpret mode) == the jnp
+    carry-save tree == per-bit integer summation, on ragged lane/word
+    counts that exercise the grid padding."""
+    from repro.kernels import bitplane_ops as bp
+
+    rng = np.random.default_rng(2)
+    m = min(width, 4)
+    x = jnp.asarray(rng.integers(0, 1 << 32, (m, lanes, words),
+                                 dtype=np.uint64).astype(np.uint32))
+    got = bp.lane_fold_pallas(x, width, block_w=16, interpret=True)
+    want = bp.lane_fold_jnp([x[i] for i in range(m)], width)
+    for i in range(width):
+        w = np.zeros(words, np.uint32) if want[i] is None \
+            else np.asarray(want[i])
+        np.testing.assert_array_equal(np.asarray(got[i]), w)
+    # integer oracle: the column at (word wi, bit) holds, per lane, the
+    # integer sum_i(plane_i_bit << i); the fold sums lanes mod 2^width
+    xs = np.asarray(x, np.uint64)
+    folded = np.asarray(got, np.uint64)
+    for wi in range(0, words, max(1, words // 5)):
+        for bit in (0, 31):
+            tot = sum(sum((int(xs[i][t, wi]) >> bit & 1) << i
+                          for i in range(m))
+                      for t in range(lanes))
+            have = sum((int(folded[i, wi]) >> bit & 1) << i
+                       for i in range(width))
+            assert have == tot % (1 << width), (wi, bit)
+
+
+def test_use_pallas_fold_selection_rule(monkeypatch):
+    """Auto mode: Pallas only for packed folds on a TPU backend above
+    the column threshold; env var force-overrides either way."""
+    from repro.kernels import bitplane_ops as bp
+
+    monkeypatch.delenv(bp._ENV, raising=False)
+    big = bp.PALLAS_FOLD_MIN_COLS // 32
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert not bp.use_pallas_fold(8, big, True)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert bp.use_pallas_fold(8, big, True)
+    assert not bp.use_pallas_fold(1, 1, True)      # below threshold
+    assert not bp.use_pallas_fold(8, big, False)   # never unpacked
+    monkeypatch.setenv(bp._ENV, "jnp")
+    assert not bp.use_pallas_fold(8, big, True)
+    monkeypatch.setenv(bp._ENV, "pallas")
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert bp.use_pallas_fold(1, 1, True)
+
+
+def test_lane_fold_dispatch_env_override(monkeypatch):
+    """lane_fold under REPRO_BITPLANE_BACKEND=pallas (interpret) is
+    bit-identical to the jnp tree on packed planes."""
+    from repro.kernels import bitplane_ops as bp
+
+    rng = np.random.default_rng(3)
+    width, lanes, words = 6, 5, 7
+    planes = [None if i == 2 else
+              jnp.asarray(rng.integers(0, 1 << 32, (lanes, words),
+                                       dtype=np.uint64).astype(np.uint32))
+              for i in range(width)]
+    want = bp.lane_fold_jnp(planes, width)
+    monkeypatch.setenv(bp._ENV, "pallas")
+    got = bp.lane_fold(planes, width, packed=True, interpret=True)
+    for g, w in zip(got, want):
+        gd = np.zeros(words, np.uint32) if g is None else np.asarray(g)
+        wd = np.zeros(words, np.uint32) if w is None else np.asarray(w)
+        np.testing.assert_array_equal(gd, wd)
