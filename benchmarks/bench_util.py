@@ -1,0 +1,43 @@
+"""Shared bench-main plumbing: atomic artifacts, gates before writes.
+
+Two invariants every ``BENCH_*.json`` producer must keep (CI's artifact
+validation step trusts them):
+
+* **Artifacts are atomic.**  The JSON is written to a ``.tmp`` sibling
+  and ``os.replace``d into place -- a crashed or killed bench can never
+  leave a torn/partial artifact for CI to "validate".
+* **Gates run before the artifact exists.**  A bench whose gate fails
+  exits non-zero with a one-line ``BENCH ABORT`` reason and writes NO
+  artifact (and never clobbers a previous good one), so a failing run
+  cannot smuggle a green-looking artifact past the gate step.
+"""
+import json
+import os
+import pathlib
+
+
+def atomic_write_json(path, payload: dict, print_fn=print,
+                      tag: str = "bench") -> None:
+    """Atomically write ``payload`` as JSON to ``path`` (tmp + rename)."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(payload, indent=2))
+    os.replace(tmp, path)
+    print_fn(f"{tag}/bench_json,{path},written")
+
+
+def gate_and_write(payload: dict, bad: list, json_path, tag: str,
+                   print_fn=print) -> int:
+    """Shared bench-main epilogue: abort (no artifact) or write + pass.
+
+    ``bad`` is the concatenated gate-failure list.  Non-empty: print a
+    single ``BENCH ABORT`` line naming every failure and return 1
+    WITHOUT touching the artifact.  Empty: atomically write the
+    artifact and return 0.
+    """
+    if bad:
+        print_fn(f"BENCH ABORT ({tag}): " + "; ".join(bad)
+                 + " -- no artifact written")
+        return 1
+    atomic_write_json(json_path, payload, print_fn, tag=tag)
+    return 0

@@ -30,7 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel as cm, engine, harness, programs
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import bench_util  # noqa: E402
+
+from repro.core import costmodel as cm, engine, harness, programs  # noqa: E402
 
 BENCH_JSON = "BENCH_engine.json"
 
@@ -264,8 +267,9 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "float_compile": bench_float_compile(print_fn, quick=quick),
         "float_dot": bench_float_dot(print_fn, quick=quick),
     }
-    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
-    print_fn(f"engine/bench_json,{json_path},written")
+    if json_path:
+        bench_util.atomic_write_json(json_path, payload, print_fn,
+                                     tag="engine")
     return payload
 
 
@@ -355,7 +359,9 @@ def main(argv=None) -> int:
                     help="fail (exit 1) if blocks64/blocks1 packed-"
                     "resident throughput (sim_mops_compiled) is below X")
     args = ap.parse_args(argv)
-    payload = run(json_path=args.json, quick=args.quick)
+    # gates run BEFORE the artifact exists: a failing gate exits 1 with
+    # one line and writes nothing for CI to "validate"
+    payload = run(json_path=None, quick=args.quick)
     bad = []
     if args.min_idot_speedup is not None:
         bad += check_idot_speedup(payload, args.min_idot_speedup)
@@ -365,8 +371,7 @@ def main(argv=None) -> int:
         bad += check_compile_time(payload, args.max_compile_s)
     if args.min_blocks_scaling is not None:
         bad += check_blocks_scaling(payload, args.min_blocks_scaling)
-    if bad:
-        print("BENCH REGRESSION: " + "; ".join(bad))
+    if bench_util.gate_and_write(payload, bad, args.json, "engine"):
         return 1
     if args.min_idot_speedup is not None:
         print(f"idot speedups >= {args.min_idot_speedup}x: OK")

@@ -35,8 +35,11 @@ import time
 
 import numpy as np
 
-from repro.pim import fabric
-from repro.pim.fabric import FabricConfig
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import bench_util  # noqa: E402
+
+from repro.pim import fabric  # noqa: E402
+from repro.pim.fabric import FabricConfig  # noqa: E402
 
 BENCH_JSON = "BENCH_fabric.json"
 
@@ -189,8 +192,9 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "residency": bench_residency(print_fn, quick=quick),
         "autotune": bench_autotune(print_fn, quick=quick),
     }
-    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
-    print_fn(f"fabric/bench_json,{json_path},written")
+    if json_path:
+        bench_util.atomic_write_json(json_path, payload, print_fn,
+                                     tag="fabric")
     return payload
 
 
@@ -222,15 +226,15 @@ def main(argv=None) -> int:
                     help="fail (exit 1) if the residency fetch-count "
                     "reduction drops below X")
     args = ap.parse_args(argv)
-    payload = run(json_path=args.json, quick=args.quick)
+    # gates run BEFORE the artifact exists (see bench_util)
+    payload = run(json_path=None, quick=args.quick)
     bad = []
     if args.min_batch_speedup is not None:
         bad += check_batch_speedup(payload, args.min_batch_speedup)
     if args.min_residency_fetch_reduction is not None:
         bad += check_residency_reduction(
             payload, args.min_residency_fetch_reduction)
-    if bad:
-        print("SPEEDUP REGRESSION: " + "; ".join(bad))
+    if bench_util.gate_and_write(payload, bad, args.json, "fabric"):
         return 1
     if args.min_batch_speedup is not None:
         print(f"batched replay speedup >= {args.min_batch_speedup}x: OK")

@@ -25,7 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import bench_util  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
 
 BENCH_JSON = "BENCH_kernels.json"
 
@@ -105,8 +108,9 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
     print_fn(f"kernel/flash_attention_{s_},{us:.0f},"
              f"vmem_working_set_bytes={vmem};never_materializes_SxS")
 
-    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
-    print_fn(f"kernel/bench_json,{json_path},written")
+    if json_path:
+        bench_util.atomic_write_json(json_path, payload, print_fn,
+                                     tag="kernel")
     return payload
 
 
@@ -139,12 +143,14 @@ def main(argv=None) -> int:
                     help="fail (exit 1) if the packed-weight HBM traffic "
                     "reduction (vs bf16) drops below X for any precision")
     args = ap.parse_args(argv)
-    payload = run(json_path=args.json, quick=args.quick)
+    # gates run BEFORE the artifact exists (see bench_util)
+    payload = run(json_path=None, quick=args.quick)
+    bad = []
     if args.min_traffic_reduction is not None:
         bad = check_traffic_reduction(payload, args.min_traffic_reduction)
-        if bad:
-            print("TRAFFIC REGRESSION: " + "; ".join(bad))
-            return 1
+    if bench_util.gate_and_write(payload, bad, args.json, "kernel"):
+        return 1
+    if args.min_traffic_reduction is not None:
         print(f"packed-weight traffic reduction >= "
               f"{args.min_traffic_reduction}x: OK")
     return 0

@@ -23,9 +23,12 @@ import numpy as np
 
 import jax
 
-from repro import configs
-from repro.models.model import LM
-from repro.serve.engine import Request, ServeEngine
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import bench_util  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models.model import LM  # noqa: E402
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
 
 BENCH_JSON = "BENCH_serve.json"
 
@@ -60,8 +63,9 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "us_per_token": round(us_per_token),
         "wall_s": round(dt, 3),
     }
-    pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
-    print_fn(f"serve/bench_json,{json_path},written")
+    if json_path:
+        bench_util.atomic_write_json(json_path, payload, print_fn,
+                                     tag="serve")
     return payload
 
 
@@ -81,12 +85,14 @@ def main(argv=None) -> int:
                     help="fail (exit 1) if fewer than N tokens are served "
                     "(continuous-batching integrity gate)")
     args = ap.parse_args(argv)
-    payload = run(json_path=args.json, quick=args.quick)
+    # gates run BEFORE the artifact exists (see bench_util)
+    payload = run(json_path=None, quick=args.quick)
+    bad = []
     if args.min_tokens is not None:
         bad = check_tokens(payload, args.min_tokens)
-        if bad:
-            print("SERVE REGRESSION: " + "; ".join(bad))
-            return 1
+    if bench_util.gate_and_write(payload, bad, args.json, "serve"):
+        return 1
+    if args.min_tokens is not None:
         print(f"tokens served >= {args.min_tokens}: OK")
     return 0
 

@@ -76,6 +76,10 @@ ARRAY_OP_NAMES = {
     OP_TSTORE: "tstore", OP_TNOT: "tnot",
 }
 
+#: inverse of :data:`ARRAY_OP_NAMES` -- the corpus text format and the
+#: fuzzer's program parser address opcodes by mnemonic.
+OP_BY_NAME = {name: op for op, name in ARRAY_OP_NAMES.items()}
+
 # Ops that write an array row (predication masks this write with tag).
 _WRITES_ROW = {OP_COPY, OP_NOT, OP_AND, OP_OR, OP_XOR, OP_NOR, OP_FA,
                OP_FS, OP_W0, OP_W1, OP_CSTORE, OP_TSTORE}
@@ -395,6 +399,82 @@ class Program:
     def __add__(self, other: "Program") -> "Program":
         return Program(f"{self.name}+{other.name}", self.nodes + other.nodes,
                        max(self.temp_rows, other.temp_rows))
+
+
+# ---------------------------------------------------------------------------
+# Program validity (the fuzzer's well-formed-by-construction contract)
+# ---------------------------------------------------------------------------
+def validate_program(program: Program, rows: int,
+                     max_cycles: int | None = None) -> List[str]:
+    """Check that ``program`` is well-formed for a ``rows``-row geometry.
+
+    Returns a list of human-readable violations (empty = valid).  This
+    is the contract the constrained-random fuzzer guarantees *by
+    construction* and re-checks before every differential replay: a
+    stream that indexes outside the array is not a program the hardware
+    could run, so executor divergence on it would be noise, not signal.
+
+    Checks, on the *expanded* stream (register-relative addressing
+    resolved, exactly what the executors consume):
+
+    * every row operand a micro-op actually reads/writes is in
+      ``[0, rows)`` -- negative rows wrap in the unroll executor but
+      clamp in the scan executor's gathers, so an out-of-range row is
+      not merely invalid, it is a false differential;
+    * opcodes are known array micro-ops;
+    * structural checks on the node tree: loop trip counts >= 1,
+      post-increment register indices in range;
+    * optionally, the expanded stream stays under ``max_cycles``.
+    """
+    bad: List[str] = []
+
+    def check_nodes(nodes: Sequence[Node], depth: int = 0):
+        for nd in nodes:
+            if isinstance(nd, Loop):
+                if nd.count < 1:
+                    bad.append(f"loop count {nd.count} < 1")
+                if depth >= 8:
+                    bad.append("loop nesting deeper than 8")
+                check_nodes(nd.body, depth + 1)
+            elif isinstance(nd, Instr):
+                if not (0 <= nd.op < N_ARRAY_OPS):
+                    bad.append(f"unknown opcode {nd.op}")
+                for reg, _delta in nd.inc:
+                    if not (0 <= reg < NUM_REGS):
+                        bad.append(f"inc register {reg} out of range")
+            elif isinstance(nd, (SetReg, AddReg, MovReg)):
+                pass      # register indices enforced by the dataclasses
+            else:
+                bad.append(f"unknown node type {type(nd).__name__}")
+
+    check_nodes(program.nodes)
+    if bad:
+        return bad                     # expansion may not be meaningful
+    stream = program.expand()
+    for i, ins in enumerate(stream):
+        used = []
+        if ins.op in _READS_A:
+            used.append(("a", ins.a))
+        if ins.op in _READS_B:
+            used.append(("b", ins.b))
+        if ins.op in _WRITES_ROW:
+            used.append(("dst", ins.dst))
+        for field, row in used:
+            if not (0 <= row < rows):
+                bad.append(f"cycle {i} ({ARRAY_OP_NAMES[ins.op]}): "
+                           f"{field}={row} outside [0, {rows})")
+    if max_cycles is not None and len(stream) > max_cycles:
+        bad.append(f"{len(stream)} micro-ops > cap {max_cycles}")
+    return bad
+
+
+def describe_stream(program: Program) -> str:
+    """One-line op-mix summary of the expanded stream (diagnostics)."""
+    meta = program.meta()
+    mix = " ".join(f"{ARRAY_OP_NAMES[op]}:{n}"
+                   for op, n in meta.op_histogram)
+    return (f"{program.name}: {meta.n_cycles} cycles, rows<= {meta.max_row},"
+            f" pred={meta.uses_pred} [{mix}]")
 
 
 # ---------------------------------------------------------------------------

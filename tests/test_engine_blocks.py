@@ -198,3 +198,49 @@ def test_float_dot_wide_acc_chain_ragged_blocks(rng):
         got = floatprog.fdot_result(arr2[i], fmt)
         want, _ = ref.float_dot_acc(a[i], b[i], fmt.ebits, fmt.mbits)
         np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.slow
+def test_run_chain_bf16_gemmspec_packed_resident(rng):
+    """TWO launches of a bf16 GemmSpec's class program chained through
+    packed-resident state (the PR 6 surface) == the sequential unpacked
+    unroll path, bit-for-bit.
+
+    Until now only int programs were pinned through run_chain /
+    pack_block_states; the float class programs take the packed_io
+    lowering through an entirely different plane-domain path, and their
+    packed compiles are slow -- hence the slow marker, and rows=384:
+    the shallowest bf16 fdot geometry, whose capacity-1 program
+    (~1k cycles) is what the GemmSpec schedule resolves to there.
+    """
+    from repro.pim import fabric
+    from repro.pim.fabric import FabricConfig, GemmSpec
+
+    cfg = FabricConfig(n_blocks=2, rows=384, cols=8, executor="scan")
+    sched = fabric.schedule_program(
+        (GemmSpec("o", 2, 1, 3, "bf16"),), 8, cfg=cfg)
+    prog, _lay = sched.class_program("bf16")
+    assert sched.class_kt("bf16") == 1        # keeps the compile bounded
+
+    blocks, rows, cols = 2, cfg.rows, cfg.cols
+    states = _rand_block_states(rng, blocks, rows, cols)
+
+    # the fused block batch as ONE wide block (pack_block_states'
+    # transform, pre-packing) -- run_chain packs it once, replays both
+    # launches on uint32 words, unpacks once
+    wide = engine.CRState(
+        array=jnp.moveaxis(states.array, 0, 1).reshape(rows,
+                                                       blocks * cols),
+        carry=states.carry.reshape(blocks * cols),
+        tag=states.tag.reshape(blocks * cols))
+    out = engine.run_chain([prog, prog], wide)
+    got = engine.CRState(
+        array=jnp.moveaxis(out.array.reshape(rows, blocks, cols), 1, 0),
+        carry=out.carry.reshape(blocks, cols),
+        tag=out.tag.reshape(blocks, cols))
+
+    # sequential unpacked oracle
+    want = states
+    for _ in range(2):
+        want = engine.execute_blocks(prog, want, "unroll")
+    assert _states_equal(got, want)

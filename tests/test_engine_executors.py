@@ -344,3 +344,88 @@ def test_cram_matmul_exact(rng):
     w = rng.integers(0, 16, (24, 12), dtype=np.uint64)
     np.testing.assert_array_equal(
         cram_matmul(x, w, n=4, rows=128, cols=8), x @ w)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key collisions on the packed / multi-loop lowering paths
+# (extends the PR 1 no-collision pins above: those only covered the
+# bool-interior single-loop path)
+# ---------------------------------------------------------------------------
+def test_cache_no_collision_predication_packed(rng):
+    """Fingerprint-adjacent programs -- same shape, same encoded words
+    except one predication bit -- must NOT share a packed compile-cache
+    entry: each compiles its own fn (two misses, zero hits), and the
+    predicated twin really behaves differently."""
+    def twin(pred):
+        return Program("twin_pred", [
+            Instr(isa.OP_TNROW, a=0),           # tag <- ~row0
+            Instr(isa.OP_W1, dst=3, pred=pred),
+            Instr(isa.OP_XOR, dst=5, a=3, b=1, pred=pred),
+        ])
+
+    p1, p2 = twin(False), twin(True)
+    assert p1.footprint() == p2.footprint()
+    assert p1.cycles() == p2.cycles()
+    assert p1.fingerprint() != p2.fingerprint()
+
+    engine.clear_compile_cache()
+    base = engine.compile_cache_stats()
+    state = _rand_state(rng, 16, 8)
+    out1 = engine.execute_compiled(p1, state, packed=True)
+    out2 = engine.execute_compiled(p2, state, packed=True)
+    st = engine.compile_cache_stats()
+    assert st["misses"] - base["misses"] == 2, \
+        "pred-differing twins must each miss (no key collision)"
+    assert st["hits"] == base["hits"]
+    # the unpredicated twin unconditionally writes rows 3/5; the
+    # predicated one only where tag (= ~row0) is set
+    assert not _states_equal(out1, out2)
+    np.testing.assert_array_equal(np.asarray(out1.array[3]),
+                                  np.ones(8, bool))
+    tag = ~np.asarray(state.array[0])
+    np.testing.assert_array_equal(
+        np.asarray(out2.array[3]),
+        np.where(tag, True, np.asarray(state.array[3])))
+    # replaying either twin is a pure hit -- nothing recompiles
+    engine.execute_compiled(p1, state, packed=True)
+    st2 = engine.compile_cache_stats()
+    assert st2["misses"] == st["misses"] and st2["hits"] == st["hits"] + 1
+
+
+def test_cache_miss_behavior_multiloop_and_blocks_paths(rng):
+    """One fuzz-generated multi-loop program through the three compiled
+    lowerings: bool, packed, and the wide-block path each key their own
+    entry (distinct misses), and packed=None keys as its resolved
+    default rather than a fourth entry."""
+    from repro.core import fuzz
+
+    cfg = fuzz.FuzzConfig(weights=tuple(
+        (n, 1.0 if n == "multiloop" else 0.0) for n in fuzz.SEQUENCES))
+    prog = fuzz.gen_program(0, cfg).program
+    assert sum(isinstance(nd, Loop) for nd in prog.nodes) >= 2
+
+    engine.clear_compile_cache()
+    base = engine.compile_cache_stats()
+    state = _rand_state(rng, cfg.rows, cfg.cols)
+    blocks = engine.CRState(
+        array=jnp.stack([state.array] * 3),
+        carry=jnp.stack([state.carry] * 3),
+        tag=jnp.stack([state.tag] * 3))
+
+    outs = [engine.execute_compiled(prog, state, packed=False),
+            engine.execute_compiled(prog, state, packed=True)]
+    engine.execute_blocks(prog, blocks, "compiled", packed=True)
+    st = engine.compile_cache_stats()
+    assert st["misses"] - base["misses"] == 3, \
+        "bool / packed / wide-block lowerings must not share keys"
+    # packed=None resolves to default_packed(prog) -- a HIT on the
+    # matching packed entry, not a new compile
+    assert engine.default_packed(prog)
+    engine.execute_compiled(prog, state, packed=None)
+    st2 = engine.compile_cache_stats()
+    assert st2["misses"] == st["misses"]
+    assert st2["hits"] == st["hits"] + 1
+    # all lowerings agree with the unroll oracle, of course
+    want = engine.execute(prog, state)
+    for out in outs:
+        assert _states_equal(out, want)
