@@ -27,17 +27,26 @@ def atomic_write_json(path, payload: dict, print_fn=print,
 
 
 def gate_and_write(payload: dict, bad: list, json_path, tag: str,
-                   print_fn=print) -> int:
+                   print_fn=print, repro_path=None) -> int:
     """Shared bench-main epilogue: abort (no artifact) or write + pass.
 
     ``bad`` is the concatenated gate-failure list.  Non-empty: print a
     single ``BENCH ABORT`` line naming every failure and return 1
     WITHOUT touching the artifact.  Empty: atomically write the
     artifact and return 0.
+
+    ``repro_path``: when given, an aborting run atomically writes the
+    (gate-failing) payload plus the failure list THERE -- a repro
+    artifact CI uploads on failure so the exact sweep that tripped the
+    gate is preserved, while the real artifact path stays untouched.
     """
     if bad:
         print_fn(f"BENCH ABORT ({tag}): " + "; ".join(bad)
                  + " -- no artifact written")
+        if repro_path is not None:
+            atomic_write_json(repro_path,
+                              {"gate_failures": bad, "payload": payload},
+                              print_fn, tag=f"{tag}/repro")
         return 1
     atomic_write_json(json_path, payload, print_fn, tag=tag)
     return 0

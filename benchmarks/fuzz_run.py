@@ -21,6 +21,10 @@ Modes::
     # demonstrate the shrinking pipeline against a known-bad mutation
     PYTHONPATH=src python benchmarks/fuzz_run.py --force-bug fa-flip --budget 50
 
+    # force the fault-escape bug: disable the parity scrub so injected
+    # bit flips reach the outputs and the "faults" variant mismatches
+    PYTHONPATH=src python benchmarks/fuzz_run.py --no-fault-scrub --budget 5
+
 Seed discipline: ``--seed N --budget B`` fuzzes seeds ``N..N+B-1``; the
 soak derives its base seed from the clock and prints it, so any soak
 finding is reproducible from the log line alone.
@@ -81,6 +85,14 @@ def main(argv=None) -> int:
     ap.add_argument("--rows", type=int, default=48)
     ap.add_argument("--cols", type=int, default=8)
     ap.add_argument("--max-ops", type=int, default=320)
+    ap.add_argument("--fault-rate", type=float,
+                    default=fuzz.FuzzConfig().fault_rate,
+                    help="per-bit flip rate of the 'faults' replay "
+                    "variant (0 disables injection)")
+    ap.add_argument("--no-fault-scrub", action="store_true",
+                    help="disable the parity scrub in the 'faults' "
+                    "variant: injected flips escape into outputs, the "
+                    "mismatch is shrunk and written to the corpus")
     ap.add_argument("--no-shrink", action="store_true",
                     help="skip delta-debugging on mismatch (fast triage)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -89,7 +101,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = fuzz.FuzzConfig(rows=args.rows, cols=args.cols,
-                          max_ops=args.max_ops)
+                          max_ops=args.max_ops,
+                          fault_rate=args.fault_rate,
+                          fault_scrub=not args.no_fault_scrub)
     mutate = fuzz.MUTATIONS[args.force_bug] if args.force_bug else None
 
     # -- replay mode --------------------------------------------------------

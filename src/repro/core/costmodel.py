@@ -457,6 +457,45 @@ def schedule_cost_rollup(name: str, *, n_blocks: int, n_compute: int,
     )
 
 
+def fault_cost(name: str, *, n_blocks: int, cols: int, parity_bits: float,
+               scrub_rows: float, refetch_bits: float,
+               edge_hops: float = 1.0) -> ScheduleCost:
+    """Price fault-tolerance overhead as a :class:`ScheduleCost`.
+
+    The fault subsystem (``repro.core.faults``, docs/faults.md) adds
+    three kinds of honest overhead on top of a schedule's own roll-up:
+
+    * **parity storage**: the 2-D parity signature of every protected
+      block (``rows + cols`` bits each) is written once at load time --
+      ``ceil(parity_bits / cols)`` storage-mode row writes plus the bits
+      crossing the fabric to the parity words;
+    * **scrub reads**: every scrub pass re-reads the rows it verifies
+      (``scrub_rows`` storage-mode row reads, at BRAM frequency);
+    * **re-fetch traffic**: a dirty tile is evicted and re-fetched from
+      its backing store -- ``refetch_bits`` moved across the fabric
+      (priced at ``edge_hops`` Manhattan hops, the conservative
+      worst-case span) plus the row writes to land them.
+
+    All three are storage/wire costs -- detection and repair burn no
+    compute-mode cycles.  Combine with the schedule's own cost via
+    :func:`repro.pim.fabric.combine_costs` (sequential: the scrub stage
+    serializes with the rounds it protects).
+    """
+    row_bits = max(int(cols), 1)
+    rows_touched = (float(scrub_rows)
+                    + math.ceil(parity_bits / row_bits)
+                    + math.ceil(refetch_bits / row_bits))
+    moved = float(parity_bits + refetch_bits)
+    serial = rows_touched * STORAGE_ROW_CR_CYCLES
+    return schedule_cost_rollup(
+        name, n_blocks=n_blocks, n_compute=0, n_storage=0, rounds=0,
+        compute_block_cycles=0.0, round_cycles=0.0,
+        storage_rows_touched=rows_touched,
+        fabric_bits_moved=moved, spill_bits_moved=0.0, ops=0,
+        serial_cycles=serial, overlapped_cycles=serial,
+        fabric_bit_mm=moved * hop_net_length_mm(edge_hops))
+
+
 def cr_throughput_gops(op: str, precision: str, cols: int = 40,
                        rows: int = 512) -> float:
     """Compute RAM throughput from executed instruction sequences."""

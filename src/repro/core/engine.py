@@ -431,7 +431,8 @@ def run(program: isa.Program, state: CRState, executor: str = "compiled",
 # multi-block execution -----------------------------------------------------
 def execute_blocks(program: isa.Program, states: CRState,
                    executor: str = "compiled",
-                   *, packed: bool | None = None) -> CRState:
+                   *, packed: bool | None = None,
+                   faults=None) -> CRState:
     """Run the same program on many blocks: states have a leading block dim.
 
     The compiled path exploits that every micro-op is column-parallel:
@@ -443,7 +444,17 @@ def execute_blocks(program: isa.Program, states: CRState,
     counts instead of recompiling per distinct count; columns are fully
     independent, so the pad columns cannot perturb the live ones and are
     sliced off on return.  The scan/unroll paths vmap per block.
+
+    ``faults`` (a :class:`repro.core.faults.FaultModel`, default None =
+    pristine SRAM) injects seeded bit flips / dead-block garbage into
+    the row-states before dispatch and parity-scrubs on the model's
+    cadence; injection happens host-side before lowering, so packed and
+    bool interiors see identical corruption (docs/faults.md).
     """
+    if faults is not None and faults.active:
+        from . import faults as faults_mod
+        return faults_mod.apply_block_faults(
+            program, states, faults, executor=executor, packed=packed)
     if executor == "compiled":
         blocks, rows, cols = states.array.shape
         if packed is None:
@@ -566,7 +577,8 @@ def compile_packed(program: isa.Program, rows: int, cols: int,
     return fn
 
 
-def run_chain(programs, state: CRState, *, cse: bool | None = None) -> CRState:
+def run_chain(programs, state: CRState, *, cse: bool | None = None,
+              faults=None) -> CRState:
     """Run several programs back-to-back, state packed across launches.
 
     The whole chain is fused into ONE jitted function: pack once, run
@@ -575,8 +587,17 @@ def run_chain(programs, state: CRState, *, cse: bool | None = None) -> CRState:
     K short programs pays one launch + one pack/unpack ladder instead of
     K of each.  Bit-identical to ``for p in programs: state = run(p,
     state)``.  Cached per chain fingerprint.
+
+    An active ``faults`` model (:class:`repro.core.faults.FaultModel`)
+    injects flips *between* chained programs, which requires host
+    visibility of the intermediate states -- the chain falls back to a
+    sequential per-program replay (each leg still compiled + cached);
+    the fused single-jit path is untouched when faults are off.
     """
     programs = tuple(programs)
+    if faults is not None and faults.active:
+        from . import faults as faults_mod
+        return faults_mod.apply_chain_faults(programs, state, faults, cse=cse)
     if not programs:
         return state
     rows, cols = state.array.shape

@@ -25,9 +25,17 @@ hunt the way constrained-random verification does for RISC-V cores:
 * **Differential replay** (:func:`replay`) runs every generated program
   across the full executor x packing matrix -- ``unroll`` (oracle),
   ``scan``, ``compiled`` x ``packed in {False, True, None}`` -- plus
-  ``execute_blocks`` at a ragged block count and a two-program
-  ``run_chain``, asserting the final state bit-identical everywhere and
-  the cycle/footprint accounting deterministic under regeneration.
+  ``execute_blocks`` at a ragged block count, a two-program
+  ``run_chain``, and a **fault family** (``"faults"``): the same block
+  batch replayed through the protected
+  :func:`repro.core.engine.execute_blocks` path with a seeded
+  :class:`repro.core.faults.FaultModel` flipping bits between load and
+  launch.  With scrub on (the default) the parity scrub must repair
+  every flip -- the variant asserts bit-identity with the clean oracle
+  AND that the injected flips were actually *detected*; with
+  ``FuzzConfig.fault_scrub=False`` the same flips escape into the
+  outputs, which is the forced bug the shrinking pipeline reduces to
+  the committed ``tests/corpus/fuzz_faults.txt`` repro.
 * On mismatch, **delta-debugging shrinking** (:func:`shrink`) reduces
   the repro -- drop sequences, then drop/halve op runs, then narrow the
   column width -- and the minimal program is serialized to a corpus
@@ -54,6 +62,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import engine, isa
+from . import faults as faults_core
 from .isa import (AddReg, Instr, Loop, MovReg, Program, R, SetReg,
                   OP_AND, OP_C0, OP_C1, OP_COPY, OP_CROW, OP_CSTORE,
                   OP_FA, OP_FS, OP_NOP, OP_NOR, OP_NOT, OP_OR, OP_T1,
@@ -81,6 +90,15 @@ class FuzzConfig:
     CI budget's wall-clock stays bounded; ``min_seqs``/``max_seqs``
     bound the funnel draw; ``weights`` overrides the per-sequence
     default weights (unknown names are an error, weight 0 disables).
+
+    The fault-family knobs drive the ``"faults"`` replay variant:
+    ``fault_rate`` is the per-bit flip probability at the pre-launch
+    injection point (the default expects a couple of flips per replay
+    on the default 3x48x8 batch -- enough that detection is exercised
+    on nearly every program); the per-program fault seed is
+    ``seed ^ fault_seed``; ``fault_scrub=False`` disables the parity
+    scrub so the same flips escape into the outputs -- the forced-bug
+    mode the shrinking pipeline and the committed fault corpus use.
     """
     rows: int = 48
     cols: int = 8
@@ -89,12 +107,18 @@ class FuzzConfig:
     min_seqs: int = 2
     max_seqs: int = 5
     weights: Tuple[Tuple[str, float], ...] = ()
+    fault_rate: float = 2e-3
+    fault_seed: int = 0xFA17
+    fault_scrub: bool = True
 
     def __post_init__(self):
         if self.rows < 24:
             raise ValueError("fuzz geometry needs >= 24 rows")
         if self.cols < 1 or self.blocks < 1:
             raise ValueError("cols and blocks must be >= 1")
+        if not 0.0 <= self.fault_rate <= 1.0:
+            raise ValueError(f"fault_rate must be in [0, 1]: "
+                             f"{self.fault_rate}")
         for name, _w in self.weights:
             if name not in SEQUENCES:
                 raise ValueError(f"unknown sequence {name!r}; "
@@ -456,8 +480,10 @@ class ReplayReport:
 
 
 #: the full differential matrix.  unroll is the oracle, not a variant.
+#: "faults" replays the block batch through the protected engine path
+#: with seeded bit flips injected pre-launch (scrub-on => bit-exact).
 VARIANTS = ("scan", "compiled:packed=False", "compiled:packed=True",
-            "compiled:packed=None", "blocks", "chain")
+            "compiled:packed=None", "blocks", "chain", "faults")
 
 #: known-bad mutations (test hooks for the shrinking pipeline): name ->
 #: fn(variant, program, CRState) -> CRState applied to a variant's
@@ -545,6 +571,17 @@ def replay(fp: FuzzProgram, variants: Sequence[str] = VARIANTS,
             got = mutate(variant, prog, got)
         _diff_state(variant, got, want, mismatches)
 
+    # "blocks" and "faults" share one block batch + unroll oracle, so
+    # running both costs a single extra (compile-cached) executable run
+    _blocks_oracle = {}
+
+    def blocks_oracle():
+        if not _blocks_oracle:
+            bstates = gen_state(fp.seed, cfg, blocks=cfg.blocks)
+            _blocks_oracle["v"] = (
+                bstates, engine.execute_blocks(prog, bstates, "unroll"))
+        return _blocks_oracle["v"]
+
     for variant in variants:
         if variant == "scan":
             check(variant, engine.execute_scan(prog, state))
@@ -553,12 +590,26 @@ def replay(fp: FuzzProgram, variants: Sequence[str] = VARIANTS,
                   "None": None}[variant.split("=", 1)[1]]
             check(variant, engine.execute_compiled(prog, state, packed=pk))
         elif variant == "blocks":
-            bstates = gen_state(fp.seed, cfg, blocks=cfg.blocks)
-            bwant = engine.execute_blocks(prog, bstates, "unroll")
+            bstates, bwant = blocks_oracle()
             bgot = engine.execute_blocks(prog, bstates, "compiled")
             if mutate is not None:
                 bgot = mutate(variant, prog, bgot)
             _diff_state(variant, bgot, bwant, mismatches)
+        elif variant == "faults":
+            bstates, bwant = blocks_oracle()
+            fm = faults_core.FaultModel(
+                bit_rate=cfg.fault_rate, seed=fp.seed ^ cfg.fault_seed,
+                scrub=cfg.fault_scrub)
+            fgot = engine.execute_blocks(prog, bstates, "compiled",
+                                         faults=fm)
+            if mutate is not None:
+                fgot = mutate(variant, prog, fgot)
+            _diff_state(variant, fgot, bwant, mismatches)
+            if cfg.fault_scrub and fm.injected_flips and not fm.detected:
+                mismatches.append(Mismatch(
+                    variant, "detection",
+                    f"{fm.injected_flips} flip(s) injected but parity "
+                    f"scrub detected none"))
         elif variant == "chain":
             cwant = engine.execute(prog, want)     # 2nd sequential run
             cgot = engine.run_chain([prog, prog], state)
@@ -741,6 +792,11 @@ def program_to_text(fp: FuzzProgram, header: Dict[str, str] = ()) -> str:
     c = fp.cfg
     lines.append(f"seed {fp.seed}")
     lines.append(f"geometry rows={c.rows} cols={c.cols} blocks={c.blocks}")
+    dflt = FuzzConfig()
+    if (c.fault_rate, c.fault_seed, c.fault_scrub) != \
+            (dflt.fault_rate, dflt.fault_seed, dflt.fault_scrub):
+        lines.append(f"faults rate={c.fault_rate!r} seed={c.fault_seed} "
+                     f"scrub={int(c.fault_scrub)}")
     lines.append(f"shrunk {int(fp.shrunk)}")
     lines.append(f"cycles {fp.program.cycles()}")
     lines.append(f"footprint {fp.program.footprint()}")
@@ -764,6 +820,7 @@ def program_from_text(text: str) -> Tuple[FuzzProgram, Dict[str, int]]:
     line is informational only.
     """
     seed, cfg_kw = 0, {}
+    fault_kw: Dict = {}
     pins: Dict[str, int] = {}
     groups: List[Tuple[str, List]] = []
     stack: List[List] = []       # innermost-last loop bodies
@@ -786,6 +843,11 @@ def program_from_text(text: str) -> Tuple[FuzzProgram, Dict[str, int]]:
         elif kw == "geometry":
             cfg_kw = {k: int(v) for k, v in
                       (t.split("=") for t in toks[1:])}
+        elif kw == "faults":
+            kv = dict(t.split("=") for t in toks[1:])
+            fault_kw = {"fault_rate": float(kv.get("rate", 0.0)),
+                        "fault_seed": int(kv.get("seed", 0)),
+                        "fault_scrub": bool(int(kv.get("scrub", 1)))}
         elif kw == "shrunk":
             pass                       # informational (see docstring)
         elif kw in ("cycles", "footprint"):
@@ -829,7 +891,7 @@ def program_from_text(text: str) -> Tuple[FuzzProgram, Dict[str, int]]:
         raise ValueError("unterminated loop")
     cfg = FuzzConfig(rows=cfg_kw.get("rows", 48),
                      cols=cfg_kw.get("cols", 8),
-                     blocks=cfg_kw.get("blocks", 3))
+                     blocks=cfg_kw.get("blocks", 3), **fault_kw)
     fp = FuzzProgram(seed, cfg,
                      tuple((n, tuple(nds)) for n, nds in groups),
                      shrunk=True)

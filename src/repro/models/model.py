@@ -297,6 +297,17 @@ class LM:
                                        "train", None, enc_out, enc_pos)
         return logits, aux
 
+    @property
+    def prefill_pad_safe(self) -> bool:
+        """True when tail-padding a prompt cannot perturb the post-prefill
+        cache.  Positional KV caches only hold pad entries at positions
+        the decoder overwrites (or masks) before attending, but ``ssm`` /
+        ``rec`` layers fold every pad token into their recurrent state --
+        the serve engine's power-of-two prompt bucketing checks this
+        before padding."""
+        return not any(t in ("ssm", "rec")
+                       for t in (*self.unit, *self.rest))
+
     def init_cache(self, batch: int, capacity: int):
         cfg = self.cfg
 

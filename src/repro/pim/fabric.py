@@ -88,7 +88,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import costmodel, engine, floatprog, programs, ref
+from repro.core import faults as faults_core
 from repro.pim import cram
+
+FabricFaultError = faults_core.FabricFaultError
 
 ACC_BITS = 32
 
@@ -138,6 +141,11 @@ class FabricConfig:
     min_compute_blocks: int = 1    # never storage-starve the grid
     placement: str = "contiguous"  # where storage blocks sit on the grid
     residency: bool = True         # cross-round resident-tile map
+    # blocks held in reserve for fault repair: the LAST ``spare_blocks``
+    # grid sites are never assigned storage or compute mode by the
+    # scheduler; ``repair_program`` remaps a dead block onto the nearest
+    # live spare (docs/faults.md).  0 = the pre-fault grid, bit-exact.
+    spare_blocks: int = 0
 
     @property
     def block_bits(self) -> int:
@@ -170,11 +178,26 @@ class FabricConfig:
         r, c = self.site(block)
         return r + c + 1
 
+    @property
+    def spare_ids(self) -> Tuple[int, ...]:
+        """Grid sites reserved as repair spares (the last N blocks)."""
+        return tuple(range(self.n_blocks - self.spare_blocks,
+                           self.n_blocks))
+
+    @property
+    def usable_blocks(self) -> int:
+        """Blocks the scheduler may assign (grid minus spares)."""
+        return self.n_blocks - self.spare_blocks
+
     def __post_init__(self):
         if self.n_blocks < 1:
             raise ValueError("fabric needs at least one block")
-        if not 1 <= self.min_compute_blocks <= self.n_blocks:
-            raise ValueError("min_compute_blocks out of range")
+        if self.spare_blocks < 0:
+            raise ValueError("spare_blocks must be >= 0")
+        if not 1 <= self.min_compute_blocks <= self.n_blocks - \
+                self.spare_blocks:
+            raise ValueError("min_compute_blocks out of range (grid minus "
+                             "spares must still fit the compute floor)")
         if self.placement not in PLACEMENT_CHOICES:
             raise ValueError(f"placement {self.placement!r} not in "
                              f"{PLACEMENT_CHOICES}")
@@ -388,6 +411,12 @@ class FabricProgram:
                 f"{st['reads']} tile read(s) "
                 f"(hit rate {st['hit_rate']:.0%}, "
                 f"{st['fetch_reduction']:.2f}x fewer than reload)")
+        spares = self.modes.count("spare")
+        dead = self.modes.count("dead")
+        if spares or dead:
+            lines.append(f"  {spares} spare block(s) in reserve"
+                         + (f", {dead} dead block(s) remapped" if dead
+                            else ""))
         spills = sum(1 for t_ in self.w_home.values() if t_ < 0) \
             + sum(1 for t_ in self.x_home if t_ < 0) \
             + sum(1 for t_ in self.x_home_ext.values() if t_ < 0)
@@ -536,11 +565,14 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
     x_row_bits = {c: K * _dtype_info(c).bits for c in classes}
     total_bits = sum(w_tile_bits.values()) \
         + M * sum(x_row_bits[c] for c in classes)
+    usable = cfg.usable_blocks          # spares are never scheduled onto
     n_storage = min(math.ceil(total_bits / cfg.block_bits),
-                    cfg.n_blocks - cfg.min_compute_blocks)
+                    usable - cfg.min_compute_blocks)
     n_storage = max(n_storage, 0)
-    storage_ids = _storage_block_ids(cfg.n_blocks, n_storage, cfg.placement)
-    modes = tuple("storage" if b in set(storage_ids) else "compute"
+    storage_ids = _storage_block_ids(usable, n_storage, cfg.placement)
+    spare_ids = set(cfg.spare_ids)
+    modes = tuple("spare" if b in spare_ids
+                  else "storage" if b in set(storage_ids) else "compute"
                   for b in range(cfg.n_blocks))
     compute_blocks = tuple(b for b, m in enumerate(modes) if m == "compute")
     n_compute = len(compute_blocks)
@@ -716,6 +748,101 @@ def residency_stats(sched: FabricProgram) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Fault repair: remap dead blocks onto spares, or reschedule degraded
+# ---------------------------------------------------------------------------
+def repair_program(sched: FabricProgram, dead,
+                   fm: Optional[faults_core.FaultModel] = None
+                   ) -> FabricProgram:
+    """Remap dead blocks out of a fabric program (docs/faults.md).
+
+    ``dead`` is a collection of grid block ids diagnosed dead (a hard
+    whole-block fault).  Repair is tiered:
+
+    1. a dead block the schedule never used (an idle spare, or already
+       marked dead) costs nothing -- the program is returned unchanged;
+    2. each dead *used* block is remapped onto the nearest live spare by
+       Manhattan hops (ties broken by lower id, deterministic): the
+       spare inherits the dead block's mode and every task, operand
+       home, and load net is rewritten to the new site.  Bit-exact --
+       only the wire distances (and thus the cost roll-up) change;
+    3. with too few spares, the program is **rescheduled on a degraded
+       grid** of the surviving block count (sites renumbered densely) --
+       still exact, but the schedule shape may change (fewer rounds'
+       worth of parallelism);
+    4. if even the degraded grid cannot host the program,
+       :class:`repro.core.faults.FabricFaultError` is raised -- the
+       serve layer's cue to retry elsewhere or fall back to the ref
+       path.
+
+    ``fm`` (optional :class:`repro.core.faults.FaultModel`) receives the
+    remap count for the health report.
+    """
+    cfg = sched.cfg
+    dead = {int(b) for b in dead if 0 <= int(b) < cfg.n_blocks}
+    used = {b for b, m in enumerate(sched.modes)
+            if m in ("compute", "storage")}
+    dead_used = sorted(dead & used)
+    if not dead_used:
+        return sched
+    spares = [b for b, m in enumerate(sched.modes)
+              if m == "spare" and b not in dead]
+    if len(spares) >= len(dead_used):
+        mapping = {}
+        avail = list(spares)
+        for b in dead_used:
+            s = min(avail, key=lambda sp: (cfg.hops(b, sp), sp))
+            avail.remove(s)
+            mapping[b] = s
+        if fm is not None:
+            fm.remaps += len(mapping)
+
+        def remap(b: int) -> int:
+            return mapping.get(b, b) if b >= 0 else b
+
+        modes = list(sched.modes)
+        for b, s in mapping.items():
+            modes[s] = modes[b]
+            modes[b] = "dead"
+        rounds = tuple(
+            Round(tasks=tuple(
+                      dataclasses.replace(t, block=remap(t.block),
+                                          x_src=remap(t.x_src),
+                                          w_src=remap(t.w_src))
+                      for t in r.tasks),
+                  loads=tuple(
+                      dataclasses.replace(ld, src=remap(ld.src),
+                                          dsts=tuple(remap(d)
+                                                     for d in ld.dsts))
+                      for ld in r.loads),
+                  dtype=r.dtype)
+            for r in sched.rounds)
+        return dataclasses.replace(
+            sched, modes=tuple(modes),
+            x_home=tuple(remap(b) for b in sched.x_home),
+            w_home={k: remap(v) for k, v in sched.w_home.items()},
+            x_home_ext={k: remap(v) for k, v in sched.x_home_ext.items()},
+            rounds=rounds)
+
+    # not enough spares: degraded-grid reschedule on the survivors
+    alive = cfg.n_blocks - len(dead)
+    if alive < 1:
+        raise FabricFaultError(
+            f"all {cfg.n_blocks} blocks dead; nothing to reschedule onto")
+    if fm is not None:
+        fm.remaps += len(dead_used)
+    degraded = dataclasses.replace(
+        cfg, n_blocks=alive, spare_blocks=0,
+        min_compute_blocks=min(cfg.min_compute_blocks, alive))
+    try:
+        return schedule_program(sched.gemms, sched.nbits, cfg=degraded,
+                                signed=sched.signed)
+    except ValueError as e:
+        raise FabricFaultError(
+            f"degraded grid of {alive} block(s) cannot host the "
+            f"program: {e}") from e
+
+
+# ---------------------------------------------------------------------------
 # Exact execution on the block simulator
 # ---------------------------------------------------------------------------
 # Cap on blocks per batched launch: bounds host memory for huge
@@ -730,7 +857,9 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
                     batch_rounds: Optional[bool] = None,
                     max_batch_blocks: int = MAX_BATCH_BLOCKS,
                     x_alt: Optional[Dict[str, np.ndarray]] = None,
-                    packed: Optional[bool] = None) -> List[np.ndarray]:
+                    packed: Optional[bool] = None,
+                    faults: Optional[faults_core.FaultModel] = None,
+                    dead_repaired: bool = False) -> List[np.ndarray]:
     """Run the program's rounds exactly; operands already encoded.
 
     x_u ``(M, K)`` is the shared activation in the *primary* dtype
@@ -760,11 +889,36 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
     (where the wide-block scaling win lives) while the big float
     sequences keep the bool interior and its fast compiles.  Either
     setting is bit-identical.
+
+    An active ``faults`` model (:class:`repro.core.faults.FaultModel`)
+    injects seeded bit flips into every launch's packed block images
+    and parity-scrubs on the model's cadence *before* the blocks
+    execute: a dirty slot is restored from its pristine image (the
+    re-pack from the backing operands -- the re-fetch the cost model
+    prices).  Dead blocks must have been remapped away first
+    (:func:`repair_program`); an unrepaired dead block that the
+    schedule still uses raises
+    :class:`repro.core.faults.FabricFaultError`.
     """
     import jax.numpy as jnp
 
     cfg = sched.cfg
     executor = executor or cfg.executor
+    fm = faults if (faults is not None and faults.active) else None
+    # ``dead_repaired`` (set by fabric_fused_matmul after repair_program)
+    # suppresses this guard: a degraded-grid reschedule renumbers block
+    # ids densely, so the model's physical dead ids may coincide with
+    # live logical ids of the repaired schedule.
+    if fm is not None and fm.dead_blocks and not fm.healed \
+            and not dead_repaired:
+        unrepaired = sorted(
+            set(fm.dead_blocks)
+            & {b for b, m in enumerate(sched.modes)
+               if m in ("compute", "storage")})
+        if unrepaired:
+            raise FabricFaultError(
+                f"dead block(s) {unrepaired} still mapped by the "
+                f"schedule; run repair_program first")
     if batch_rounds is None:
         batch_rounds = executor == "compiled" and len(sched.rounds) > 1
     infos = sched.infos()
@@ -845,7 +999,24 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
             acc |= res[:, i, :].astype(np.uint64) << np.uint64(i)
         return acc
 
+    launch_idx = [0]                   # scrub cadence counts launches
+
+    def faulted(arrs: np.ndarray) -> np.ndarray:
+        """Inject + (on cadence) parity-scrub one launch's block images."""
+        pristine = arrs
+        blocks, rows_, cols_ = arrs.shape
+        fm.parity_bits = max(fm.parity_bits,
+                             blocks * faults_core.parity_bits(rows_, cols_))
+        sig = faults_core.parity_signature(pristine)
+        out = faults_core.inject(pristine.copy(), fm, dead_slots=())
+        if fm.scrub and launch_idx[0] % fm.scrub_every == 0:
+            out = faults_core.scrub_states(out, pristine, sig, fm)
+        launch_idx[0] += 1
+        return out
+
     def launch(c: str, arrs: np.ndarray) -> np.ndarray:
+        if fm is not None:
+            arrs = faulted(arrs)
         blocks = arrs.shape[0]
         states = engine.CRState(
             array=jnp.asarray(arrs),
@@ -950,7 +1121,9 @@ def fabric_matmul(x, w, nbits: int = 4,
                   signed: bool = False, *,
                   dtype=None,
                   schedule: Optional[FabricProgram] = None,
-                  batch_rounds: Optional[bool] = None) -> FabricResult:
+                  batch_rounds: Optional[bool] = None,
+                  faults: Optional[faults_core.FaultModel] = None
+                  ) -> FabricResult:
     """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
 
     Integer GEMMs (``dtype=None`` / ``"int4"`` / ...) are bit-exact vs
@@ -970,7 +1143,7 @@ def fabric_matmul(x, w, nbits: int = 4,
     """
     res = fabric_fused_matmul(x, (w,), nbits=nbits, cfg=cfg, signed=signed,
                               dtypes=(dtype,), program=schedule,
-                              batch_rounds=batch_rounds)
+                              batch_rounds=batch_rounds, faults=faults)
     return FabricResult(out=res.outs[0], schedule=res.schedule,
                         cost=res.cost,
                         out_bits=res.bits[0] if res.bits else None)
@@ -982,7 +1155,9 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
                         names: Optional[Sequence[str]] = None,
                         dtypes: Optional[Sequence] = None,
                         program: Optional[FabricProgram] = None,
-                        batch_rounds: Optional[bool] = None) -> FusedResult:
+                        batch_rounds: Optional[bool] = None,
+                        faults: Optional[faults_core.FaultModel] = None
+                        ) -> FusedResult:
     """Run several GEMMs sharing activations as ONE fabric program.
 
     ``x (M, K) @ ws[g] (K, N_g)`` for every g -- the fused-QKV case: one
@@ -1000,6 +1175,14 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
 
     ``program`` reuses a pre-built plan (e.g. the :func:`search_program`
     argmin); its shapes / precision / dtypes must match the operands.
+
+    ``faults`` (:class:`repro.core.faults.FaultModel`, default None =
+    pristine SRAM) enables the fault path: dead blocks are repaired out
+    of the schedule first (:func:`repair_program` -- spare remap or
+    degraded reschedule), bit flips are injected + parity-scrubbed per
+    launch inside :func:`execute_program`, and the returned cost adds
+    the honest fault overhead (parity storage, scrub reads, re-fetch
+    traffic via :func:`repro.core.costmodel.fault_cost`).
     """
     x = np.asarray(x)
     ws = [np.asarray(w) for w in ws]
@@ -1060,11 +1243,20 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
             cram._check_range([w], info.bits, signed=False)
             w_encs.append(np.asarray(w, np.uint64))
 
+    fm = faults if (faults is not None and faults.active) else None
+    repaired = False
+    if fm is not None and fm.dead_blocks and not fm.healed:
+        sched = repair_program(sched, fm.dead_blocks, fm=fm)
+        repaired = True
+
     primary = sched.classes[0]
     x_alt = {c: enc for c, enc in x_encs.items() if c != primary}
+    scrub0, refetch0 = ((fm.scrub_rows, fm.refetch_bits) if fm is not None
+                        else (0, 0))
     raws = execute_program(sched, x_encs[primary], w_encs,
                            batch_rounds=batch_rounds,
-                           x_alt=x_alt or None)
+                           x_alt=x_alt or None, faults=fm,
+                           dead_repaired=repaired)
 
     outs, bits = [], []
     for info, raw, wu in zip(infos, raws, w_encs):
@@ -1081,8 +1273,17 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
         else:
             outs.append(raw)
             bits.append(None)
+    cost = schedule_cost(sched)
+    if fm is not None:
+        fcost = costmodel.fault_cost(
+            "fabric/fault_overhead", n_blocks=sched.cfg.n_blocks,
+            cols=sched.cfg.cols, parity_bits=fm.parity_bits,
+            scrub_rows=fm.scrub_rows - scrub0,
+            refetch_bits=fm.refetch_bits - refetch0,
+            edge_hops=sched.cfg.grid_diameter)
+        cost = combine_costs(cost.name + "+faults", [cost, fcost])
     return FusedResult(outs=tuple(outs), schedule=sched,
-                       cost=schedule_cost(sched), bits=tuple(bits))
+                       cost=cost, bits=tuple(bits))
 
 
 # ---------------------------------------------------------------------------
@@ -1489,7 +1690,8 @@ class FabricLinearProbe:
     def __init__(self, w, cfg: FabricConfig = FabricConfig(),
                  bits: int = 8, max_steps: int = 1,
                  autotune: bool = False,
-                 search_geometries: Optional[tuple] = None):
+                 search_geometries: Optional[tuple] = None,
+                 faults: Optional[faults_core.FaultModel] = None):
         ws = list(w) if isinstance(w, (list, tuple)) else [w]
         self.ws = tuple(np.asarray(wi, np.float32) for wi in ws)
         self.fused = isinstance(w, (list, tuple))
@@ -1506,6 +1708,14 @@ class FabricLinearProbe:
         self.search: Optional[SearchResult] = None
         self.costs: list = []
         self.outputs: list = []
+        # fault path: inject via `faults` and cross-check every fabric
+        # output against the cheap host int matmul of the SAME quantized
+        # operands -- an exact oracle, so any escaped corruption is
+        # caught at the serving boundary and raised as FabricFaultError
+        # (the ServeEngine's retry/fallback cue) instead of silently
+        # wrong tokens.
+        self.faults = faults
+        self.escaped_outputs = 0
 
     @property
     def w(self) -> np.ndarray:
@@ -1541,14 +1751,38 @@ class FabricLinearProbe:
         qx, sx = _quantize_sym(x, self.bits)
         qws, sws = zip(*(_quantize_sym(wi, self.bits) for wi in self.ws))
         prog = self._program_for(qx.shape[0], qx.shape[1])
+        fm = self.faults if (self.faults is not None
+                             and self.faults.active) else None
         res = fabric_fused_matmul(qx, qws, nbits=self.bits, cfg=self.cfg,
-                                  signed=True, program=prog)
+                                  signed=True, program=prog, faults=fm)
+        if fm is not None:
+            for g, (qw, out) in enumerate(zip(qws, res.outs)):
+                expect = qx.astype(np.int64) @ np.asarray(qw, np.int64)
+                if not np.array_equal(np.asarray(out, np.int64), expect):
+                    fm.escaped += 1
+                    self.escaped_outputs += 1
+                    raise FabricFaultError(
+                        f"escaped corruption: fabric projection {g} "
+                        f"disagrees with the host oracle")
         ys = tuple(out.astype(np.float32) * (sx * sw)
                    for out, sw in zip(res.outs, sws))
         y = ys if self.fused else ys[0]
         self.costs.append(res.cost)
         self.outputs.append(y)
         return y
+
+    def observe_ref(self, x):
+        """The probe's projections on the host (``mode="ref"``): the
+        graceful-degradation fallback when the fabric keeps faulting.
+        Same quantization, no fabric execution, no cost sample."""
+        x = np.asarray(x, np.float32)
+        qx, sx = _quantize_sym(x, self.bits)
+        ys = []
+        for wi in self.ws:
+            qw, sw = _quantize_sym(wi, self.bits)
+            ys.append((qx.astype(np.int64) @ qw).astype(np.float32)
+                      * (sx * sw))
+        return tuple(ys) if self.fused else ys[0]
 
     def config_summary(self) -> dict:
         """The grid the probe actually serves from (autotuned or not)."""
@@ -1567,6 +1801,9 @@ class FabricLinearProbe:
             return None
         rep = combine_costs("fabric/decode_step", self.costs).report()
         rep.update(self.config_summary())
+        if self.faults is not None:
+            rep["faults"] = self.faults.stats()
+            rep["escaped_outputs"] = self.escaped_outputs
         return rep
 
 

@@ -12,16 +12,30 @@ activation residency, one batched launch.  A probe constructed with
 ``autotune=True`` picks its grid split and placement via the fabric
 program search on the first observed shape, so serving selects the best
 geometry automatically; ``fabric_report()`` names the grid served
-from."""
+from.
+
+Graceful degradation (docs/faults.md): a probe whose fault model lets a
+corruption escape raises
+:class:`repro.core.faults.FabricFaultError`; the engine retries the
+launch with exponential backoff up to ``probe_retries`` times, then
+permanently falls back to the probe's host ``ref`` path
+(``observe_ref``) -- serving keeps producing tokens either way.
+``step_deadline_ms`` tracks per-step wall-clock deadline misses, and
+``fault_report()`` aggregates the health counters (retries, fallbacks,
+deadline misses, the fault model's injected/detected/repaired/escaped
+tallies)."""
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.faults import FabricFaultError
 
 
 @dataclasses.dataclass
@@ -33,13 +47,20 @@ class Request:
     done: bool = False
 
 
+def _bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
 class ServeEngine:
     """Fixed-slot batch decode.  All slots share one jitted decode_step;
     finished slots are refilled from the queue (continuous batching)."""
 
     def __init__(self, model, params, batch_slots: int = 4,
                  capacity: int = 256, temperature: float = 0.0,
-                 fabric_probe=None):
+                 fabric_probe=None, seed: int = 0,
+                 step_deadline_ms: Optional[float] = None,
+                 probe_retries: int = 2, probe_backoff_s: float = 0.0):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -54,6 +75,27 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         self._prefill_one = jax.jit(
             lambda p, t: model.prefill(p, tokens=t, capacity=capacity))
+        # sampling: one base key per engine; each step folds in a
+        # monotonic counter, so no two steps can share a key (the old
+        # PRNGKey(pos.sum()) repeated whenever the pos-sum repeated --
+        # correlated samples across steps)
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self._step_count = 0
+        # prompt-length bucketing: _prefill_one compiles once per padded
+        # shape, so tracking the distinct buckets counts its compiles.
+        # Models with recurrent state (ssm/rec layers) fold pad tokens
+        # into their cache, so they prefill at exact lengths instead.
+        self._pad_safe = bool(getattr(model, "prefill_pad_safe", True))
+        self._prefill_buckets: set = set()
+        # graceful degradation knobs + health counters
+        self.step_deadline_ms = step_deadline_ms
+        self.probe_retries = probe_retries
+        self.probe_backoff_s = probe_backoff_s
+        self.probe_fallback = False
+        self.stats = {"steps": 0, "deadline_misses": 0,
+                      "probe_retries": 0, "probe_fallbacks": 0,
+                      "prefill_compiles": 0}
 
     def add(self, req: Request):
         self.queue.append(req)
@@ -62,8 +104,23 @@ class ServeEngine:
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
+                # pad the prompt to a power-of-two bucket: ragged arrival
+                # traffic hits a handful of compiled prefill shapes
+                # instead of one per distinct length.  Pad tokens sit at
+                # positions >= the real length, which decode either
+                # masks (cache position > current pos) or overwrites
+                # before ever attending -- bit-identical logits at the
+                # real last token.
+                plen = len(req.prompt)
+                bucket = (min(_bucket(plen), self.capacity)
+                          if self._pad_safe else plen)
+                padded = np.zeros((bucket,), np.int32)
+                padded[:plen] = req.prompt
+                if bucket not in self._prefill_buckets:
+                    self._prefill_buckets.add(bucket)
+                    self.stats["prefill_compiles"] += 1
                 logits, cache = self._prefill_one(
-                    self.params, jnp.asarray(req.prompt)[None, :])
+                    self.params, jnp.asarray(padded)[None, :])
 
                 # merge this request's cache into slot i: the batch dim is
                 # dim 1 for scanned-stack ("unit") caches, dim 0 for
@@ -78,34 +135,66 @@ class ServeEngine:
 
                 self.caches = jax.tree_util.tree_map_with_path(
                     merge, self.caches, cache)
-                nxt = int(jnp.argmax(logits[0, -1]))
+                nxt = int(jnp.argmax(logits[0, plen - 1]))
                 req.out.append(nxt)
                 self.slots[i] = req
-                self.pos[i] = len(req.prompt)
+                self.pos[i] = plen
                 self.tokens[i, 0] = nxt
+
+    def _observe_guarded(self, x):
+        """Probe observe with bounded retry-with-backoff, then fallback.
+
+        A :class:`FabricFaultError` (escaped corruption, or a dead grid
+        that can no longer be repaired) is retried up to
+        ``probe_retries`` times with exponential backoff; if the fabric
+        still faults, the engine falls back permanently to the probe's
+        host ``ref`` path -- degraded accounting, correct tokens.
+        """
+        delay = self.probe_backoff_s
+        for attempt in range(self.probe_retries + 1):
+            try:
+                return self.fabric_probe.observe(x)
+            except FabricFaultError:
+                if attempt < self.probe_retries:
+                    self.stats["probe_retries"] += 1
+                    if delay > 0:
+                        time.sleep(delay)
+                        delay *= 2
+        self.probe_fallback = True
+        self.stats["probe_fallbacks"] += 1
+        return self.fabric_probe.observe_ref(x)
 
     def step(self) -> List[Request]:
         """One decode step for all active slots; returns finished reqs."""
+        t0 = time.perf_counter()
         self._admit()
+        # a request whose budget the prefill token already satisfied
+        # (max_new=1) finishes here -- decoding would overshoot it
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is not None and len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
         if all(s is None for s in self.slots):
-            return []
-        if self.fabric_probe is not None and not self.fabric_probe.done:
+            return finished
+        if self.fabric_probe is not None and not self.fabric_probe.done \
+                and not self.probe_fallback:
             # this step's real activations (token embeddings of the
             # batch) through the simulated Compute RAM fabric
             x = self.model._embed(self.params, jnp.asarray(self.tokens))
-            self.fabric_probe.observe(np.asarray(x, np.float32)[:, 0, :])
+            self._observe_guarded(np.asarray(x, np.float32)[:, 0, :])
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self.tokens),
             jnp.asarray(self.pos))
         if self.temperature > 0:
-            key = jax.random.PRNGKey(int(self.pos.sum()))
+            key = jax.random.fold_in(self._base_key, self._step_count)
             nxt = jax.random.categorical(
                 key, logits[:, 0] / self.temperature, axis=-1)
         else:
             nxt = jnp.argmax(logits[:, 0], axis=-1)
         nxt = np.asarray(nxt, np.int32)
 
-        finished = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -116,6 +205,11 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self.slots[i] = None
+        self._step_count += 1
+        self.stats["steps"] += 1
+        if self.step_deadline_ms is not None:
+            if (time.perf_counter() - t0) * 1e3 > self.step_deadline_ms:
+                self.stats["deadline_misses"] += 1
         return finished
 
     def run(self) -> List[Request]:
@@ -133,3 +227,22 @@ class ServeEngine:
         if self.fabric_probe is None:
             return None
         return self.fabric_probe.report()
+
+    def fault_report(self) -> dict:
+        """Serving health: fault + degradation accounting (docs/faults.md).
+
+        Always available (zeros on a fault-free engine): step and
+        deadline counters, probe retries/fallbacks, the probe's
+        escaped-output count, and -- when the probe carries a
+        :class:`repro.core.faults.FaultModel` -- its full
+        injected/detected/repaired/escaped tally."""
+        rep = dict(self.stats)
+        rep["prefill_bucket_shapes"] = sorted(self._prefill_buckets)
+        rep["probe_fallback_active"] = self.probe_fallback
+        if self.fabric_probe is not None:
+            rep["probe_escaped_outputs"] = getattr(
+                self.fabric_probe, "escaped_outputs", 0)
+            fm = getattr(self.fabric_probe, "faults", None)
+            if fm is not None:
+                rep["faults"] = fm.stats()
+        return rep

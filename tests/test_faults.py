@@ -1,0 +1,370 @@
+"""Fault tolerance: injection, parity scrub, spare repair, degradation.
+
+Layered like the stack itself (docs/faults.md):
+
+* the :class:`~repro.core.faults.FaultModel` process -- seeded
+  determinism, inert-by-default, RNG discipline (scrub on/off replay
+  the same flips);
+* 2-D parity math -- odd flips detected, the 4-flip rectangle blind
+  spot pinned as *documented* behaviour;
+* the protected engine paths (``execute_blocks``/``run_chain``) --
+  scrub-on bit-exact vs the clean run, scrub-off escapes;
+* the fabric -- scrub-on exactness with priced overhead, scrub-off
+  escapes, dead-block spare remap, spare-less degraded reschedule,
+  and the ``FabricFaultError`` terminal case;
+* the probe oracle + serve fallback seam;
+* the fuzzer fault family and its committed two-sided corpus pin.
+"""
+
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel, engine, fuzz
+from repro.core import faults as fc
+from repro.core.faults import FabricFaultError, FaultModel
+from repro.pim import fabric
+from repro.pim.fabric import FabricConfig
+
+CORPUS = pathlib.Path(__file__).parent / "corpus"
+
+
+def _grid(n_blocks=8, **kw):
+    return FabricConfig(n_blocks=n_blocks, rows=128, cols=16, **kw)
+
+
+def _gemm(rng, m=6, k=40, n=5):
+    x = rng.integers(-8, 8, (m, k)).astype(np.int64)
+    w = rng.integers(-8, 8, (k, n)).astype(np.int64)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# FaultModel process
+# ---------------------------------------------------------------------------
+def test_fault_model_inert_by_default():
+    fm = FaultModel()
+    assert not fm.active
+    # bit_rate 0: the flip mask is empty but the event still counts
+    mask = fm.flip_mask((2, 4, 4))
+    assert not mask.any() and fm.injection_events == 1
+    assert fm.injected_flips == 0
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(bit_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(bit_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultModel(scrub_every=0)
+    # dead block ids are deduped + sorted
+    assert FaultModel(dead_blocks=(3, 1, 3)).dead_blocks == (1, 3)
+
+
+def test_fault_model_seed_determinism_and_reset():
+    a = FaultModel(bit_rate=0.05, seed=7)
+    b = FaultModel(bit_rate=0.05, seed=7)
+    m1, m2 = a.flip_mask((3, 16, 8)), b.flip_mask((3, 16, 8))
+    assert np.array_equal(m1, m2) and m1.any()
+    a.reset()
+    assert a.injection_events == 0
+    assert np.array_equal(a.flip_mask((3, 16, 8)), m2)
+
+
+def test_rng_advances_identically_with_scrub_on_or_off():
+    """Scrub must not perturb the draw sequence: same seed, different
+    scrub settings, identical flips -- the two-sided replay property."""
+    on = FaultModel(bit_rate=0.03, seed=3, scrub=True)
+    off = FaultModel(bit_rate=0.03, seed=3, scrub=False)
+    for _ in range(4):
+        assert np.array_equal(on.flip_mask((2, 8, 8)),
+                              off.flip_mask((2, 8, 8)))
+
+
+def test_heal_after_stops_injection_but_advances_rng():
+    fm = FaultModel(bit_rate=0.5, seed=0, heal_after=2)
+    assert fm.flip_mask((1, 8, 8)).any()
+    assert fm.flip_mask((1, 8, 8)).any()
+    assert fm.healed
+    assert not fm.flip_mask((1, 8, 8)).any()      # healed: no flips
+    assert fm.injection_events == 3               # ...but still counted
+
+
+def test_scrub_cadence():
+    fm = FaultModel(bit_rate=0.1, scrub_every=3)
+    assert [fm.should_scrub(p) for p in range(6)] == \
+        [True, False, False, True, False, False]
+    assert not FaultModel(bit_rate=0.1, scrub=False).should_scrub(0)
+
+
+# ---------------------------------------------------------------------------
+# Parity math
+# ---------------------------------------------------------------------------
+def test_parity_detects_odd_flip_patterns(rng):
+    base = rng.integers(0, 2, (4, 16, 8)).astype(bool)
+    sig = fc.parity_signature(base)
+    assert not fc.dirty_blocks(base, sig).any()
+    for nflips in (1, 2, 3, 5):
+        cur = base.copy()
+        rows = rng.choice(16, nflips, replace=False)
+        cols = rng.choice(8, nflips, replace=False)
+        for r, c in zip(rows, cols):       # distinct rows AND cols: odd
+            cur[1, r, c] ^= True           # parity in every touched line
+        assert list(fc.dirty_blocks(cur, sig)) == [False, True, False,
+                                                   False]
+
+
+def test_parity_rectangle_blind_spot_is_documented():
+    """The 4-flip rectangle is the smallest undetectable pattern --
+    pinned so a silent parity upgrade (or regression) shows up here."""
+    base = np.zeros((1, 16, 8), bool)
+    sig = fc.parity_signature(base)
+    cur = base.copy()
+    for r, c in ((2, 1), (2, 5), (9, 1), (9, 5)):
+        cur[0, r, c] ^= True
+    assert not fc.dirty_blocks(cur, sig).any()
+
+
+def test_scrub_restores_and_charges(rng):
+    pristine = rng.integers(0, 2, (3, 16, 8)).astype(bool)
+    sig = fc.parity_signature(pristine)
+    cur = pristine.copy()
+    cur[2, 5, 3] ^= True
+    fm = FaultModel(bit_rate=0.1)
+    out = fc.scrub_states(cur, pristine, sig, fm)
+    assert np.array_equal(out, pristine)
+    assert fm.detected == fm.repaired == 1
+    assert fm.refetch_bits == 16 * 8          # one dirty block re-fetched
+    assert fm.scrub_rows == 3 * 16            # ...but every row verified
+
+
+def test_inject_dead_block_reads_garbage_not_zeros(rng):
+    arrays = rng.integers(0, 2, (3, 32, 8)).astype(bool)
+    fm = FaultModel(dead_blocks=(1,), seed=0)
+    out = fc.inject(arrays.copy(), fm)
+    assert np.array_equal(out[0], arrays[0])
+    assert np.array_equal(out[2], arrays[2])
+    assert not np.array_equal(out[1], arrays[1])
+    assert 0 < out[1].sum() < out[1].size     # garbage, not all-0/all-1
+    # the fabric convention: dead ids are grid positions, not batch
+    # slots -- an explicit empty dead_slots leaves the batch alone
+    out2 = fc.inject(arrays.copy(), FaultModel(dead_blocks=(1,), seed=0),
+                     dead_slots=())
+    assert np.array_equal(out2, arrays)
+
+
+# ---------------------------------------------------------------------------
+# Protected engine paths
+# ---------------------------------------------------------------------------
+def _fuzz_case(seed=3):
+    fp = fuzz.gen_program(seed, fuzz.FuzzConfig())
+    states = fuzz.gen_state(seed, fp.cfg, blocks=fp.cfg.blocks)
+    return fp.program, states
+
+
+def test_execute_blocks_scrub_on_is_bit_exact():
+    prog, states = _fuzz_case()
+    want = engine.execute_blocks(prog, states, "compiled")
+    fm = FaultModel(bit_rate=3e-3, seed=1)
+    got = engine.execute_blocks(prog, states, "compiled", faults=fm)
+    assert fm.injected_flips > 0 and fm.detected > 0
+    assert fm.repaired == fm.detected
+    for f in ("array", "carry", "tag"):
+        assert np.array_equal(np.asarray(getattr(got, f)),
+                              np.asarray(getattr(want, f))), f
+
+
+def test_execute_blocks_scrub_off_escapes():
+    prog, states = _fuzz_case()
+    want = engine.execute_blocks(prog, states, "compiled")
+    fm = FaultModel(bit_rate=3e-3, seed=1, scrub=False)
+    got = engine.execute_blocks(prog, states, "compiled", faults=fm)
+    assert fm.injected_flips > 0 and fm.repaired == 0
+    assert not np.array_equal(np.asarray(got.array),
+                              np.asarray(want.array))
+
+
+def test_run_chain_injects_between_programs():
+    prog, _ = _fuzz_case()
+    state = fuzz.gen_state(3, fuzz.FuzzConfig())
+    want = engine.run_chain([prog, prog], state)
+    fm = FaultModel(bit_rate=2e-3, seed=4)
+    got = engine.run_chain([prog, prog], state, faults=fm)
+    assert fm.injection_events == 2           # one point per chained leg
+    for f in ("array", "carry", "tag"):
+        assert np.array_equal(np.asarray(getattr(got, f)),
+                              np.asarray(getattr(want, f))), f
+
+
+# ---------------------------------------------------------------------------
+# Fabric: scrub, spares, degraded grid
+# ---------------------------------------------------------------------------
+def test_fabric_scrub_on_exact_and_priced(rng):
+    x, w = _gemm(rng)
+    clean = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=_grid())
+    fm = FaultModel(bit_rate=2e-3, seed=0)
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=_grid(),
+                               faults=fm)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert fm.injected_flips > 0 and fm.escaped == 0
+    # the scrub/parity/re-fetch overhead is priced, not free
+    assert res.cost.energy_pj > clean.cost.energy_pj
+    assert "+faults" in res.cost.name
+
+
+def test_fabric_scrub_off_escapes(rng):
+    x, w = _gemm(rng)
+    fm = FaultModel(bit_rate=2e-3, seed=0, scrub=False)
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=_grid(),
+                               faults=fm)
+    assert fm.injected_flips > 0
+    assert not np.array_equal(np.asarray(res.out, np.int64), x @ w)
+
+
+def test_fabric_spare_remap_is_bit_exact(rng):
+    x, w = _gemm(rng)
+    cfg = _grid(8, spare_blocks=2)
+    assert cfg.spare_ids == (6, 7) and cfg.usable_blocks == 6
+    fm = FaultModel(dead_blocks=(2,), seed=0)
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg,
+                               faults=fm)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert fm.remaps == 1
+    assert res.schedule.modes[2] == "dead"
+    # exactly one spare took over, inheriting a live mode
+    taken = [b for b in cfg.spare_ids
+             if res.schedule.modes[b] != "spare"]
+    assert len(taken) == 1
+    assert res.schedule.modes[taken[0]] in ("compute", "storage")
+    assert "dead" in res.schedule.describe()
+
+
+def test_fabric_degraded_reschedule_without_spares(rng):
+    x, w = _gemm(rng)
+    fm = FaultModel(dead_blocks=(1, 3), seed=0)
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=_grid(8),
+                               faults=fm)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert res.schedule.cfg.n_blocks == 6     # re-planned on survivors
+    assert fm.remaps == 2
+
+
+def test_fabric_all_dead_raises(rng):
+    x, w = _gemm(rng)
+    fm = FaultModel(dead_blocks=(0, 1), seed=0)
+    with pytest.raises(FabricFaultError):
+        fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=_grid(2),
+                             faults=fm)
+
+
+def test_unrepaired_dead_block_refuses_to_launch(rng):
+    """execute_program must not silently launch a grid whose schedule
+    still uses a block the fault model says is dead."""
+    x = rng.integers(0, 16, (6, 40)).astype(np.uint64)
+    w = rng.integers(0, 16, (40, 5)).astype(np.uint64)
+    sched = fabric.schedule_program(
+        (fabric.GemmSpec("g", 6, 40, 5),), nbits=4, cfg=_grid(4))
+    used = [b for b in range(4) if sched.modes[b] in ("compute", "storage")]
+    fm = FaultModel(dead_blocks=(used[0],), seed=0)
+    with pytest.raises(FabricFaultError):
+        fabric.execute_program(sched, x, (w,), faults=fm)
+
+
+def test_spare_blocks_config_validation():
+    with pytest.raises(ValueError):
+        FabricConfig(n_blocks=4, spare_blocks=-1)
+    with pytest.raises(ValueError):
+        # reserving every block leaves nothing to compute on
+        FabricConfig(n_blocks=4, spare_blocks=4)
+    cfg = FabricConfig(n_blocks=4, spare_blocks=0)
+    assert cfg.spare_ids == () and cfg.usable_blocks == 4
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+def test_fault_cost_pins():
+    c = costmodel.fault_cost("t", n_blocks=8, cols=32, parity_bits=160,
+                             scrub_rows=100, refetch_bits=512,
+                             edge_hops=2.0)
+    # rows: 100 scrubbed + ceil(160/32) parity + ceil(512/32) re-fetch
+    assert c.storage_rows_touched == 100 + 5 + 16
+    assert c.fabric_bits_moved == 160 + 512
+    assert c.ops == 0 and c.energy_pj > 0
+    zero = costmodel.fault_cost("z", n_blocks=8, cols=32, parity_bits=0,
+                                scrub_rows=0, refetch_bits=0)
+    assert zero.energy_pj == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Probe oracle + serve fallback seam
+# ---------------------------------------------------------------------------
+def test_probe_escape_raises_and_ref_path_serves(rng):
+    w = rng.normal(size=(16, 6)).astype(np.float32)
+    x = rng.normal(size=(2, 16)).astype(np.float32)
+    fm = FaultModel(bit_rate=0.05, seed=0, scrub=False)
+    probe = fabric.FabricLinearProbe(w, cfg=_grid(4), bits=8, faults=fm)
+    with pytest.raises(FabricFaultError):
+        probe.observe(x)
+    assert probe.escaped_outputs == 1 and fm.escaped == 1
+    # the fallback path is the host quantized matmul, probe-exact
+    clean = fabric.FabricLinearProbe(w, cfg=_grid(4), bits=8)
+    assert np.allclose(probe.observe_ref(x), clean.observe(x))
+    assert fm.stats()["escaped"] == 1
+
+
+def test_probe_scrub_on_observes_clean(rng):
+    w = rng.normal(size=(16, 6)).astype(np.float32)
+    x = rng.normal(size=(2, 16)).astype(np.float32)
+    fm = FaultModel(bit_rate=2e-3, seed=0, scrub=True)
+    probe = fabric.FabricLinearProbe(w, cfg=_grid(4), bits=8, faults=fm)
+    clean = fabric.FabricLinearProbe(w, cfg=_grid(4), bits=8)
+    assert np.allclose(probe.observe(x), clean.observe(x))
+    assert probe.escaped_outputs == 0
+
+
+# ---------------------------------------------------------------------------
+# Fuzzer fault family + committed two-sided corpus pin
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 5, 11])
+def test_fuzz_faults_variant_clean(seed):
+    rep = fuzz.replay(fuzz.gen_program(seed, fuzz.FuzzConfig()),
+                      variants=("faults",))
+    assert rep.ok, [f"{m.variant}/{m.field}: {m.detail}"
+                    for m in rep.mismatches]
+
+
+def test_fuzz_faults_variant_catches_forced_escape():
+    cfg = fuzz.FuzzConfig(fault_rate=5e-3, fault_scrub=False)
+    stats = fuzz.run_budget(5, seed=0, cfg=cfg, corpus_dir=None,
+                            do_shrink=False)
+    assert stats["mismatch"] is not None
+    assert any(m.variant == "faults"
+               for m in stats["mismatch"].mismatches)
+
+
+def test_fault_corpus_two_sided():
+    """The committed repro: bit-exact as-committed (scrub on), escaping
+    with the *identical* flip sequence once the scrub is off."""
+    fp, pins = fuzz.load_corpus(CORPUS / "fuzz_faults.txt")
+    assert fp.cfg.fault_scrub and fp.cfg.fault_rate > 0
+    assert fp.program.cycles() == pins["cycles"]
+    assert fuzz.replay(fp, variants=("faults",)).ok
+    off = fp.with_groups(
+        fp.groups, cfg=dataclasses.replace(fp.cfg, fault_scrub=False))
+    rep = fuzz.replay(off, variants=("faults",))
+    assert not rep.ok
+    assert all(m.variant == "faults" for m in rep.mismatches)
+
+
+def test_fault_knobs_roundtrip_through_corpus_text():
+    fp = fuzz.gen_program(2, fuzz.FuzzConfig(fault_rate=0.25,
+                                             fault_seed=99,
+                                             fault_scrub=False))
+    fp2, _pins = fuzz.program_from_text(fuzz.program_to_text(fp))
+    assert fp2.cfg.fault_rate == 0.25
+    assert fp2.cfg.fault_seed == 99
+    assert fp2.cfg.fault_scrub is False

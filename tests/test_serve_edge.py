@@ -1,0 +1,237 @@
+"""ServeEngine edge cases: slot recycling, prompt buckets, sampling
+keys, deadlines, and fault-driven degradation.
+
+Uses a stub model whose logits are a pure function of the *input*
+token (``next == (7*t + 3) % vocab``), so slot bookkeeping mistakes,
+padded-prefill indexing errors, and cache mixups change visible
+tokens instead of hiding in argmax-of-ones.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.faults import FaultModel
+from repro.pim.fabric import FabricConfig, FabricLinearProbe
+from repro.serve.engine import Request, ServeEngine, _bucket
+
+VOCAB = 32
+
+
+def _f(t):
+    return (7 * t + 3) % VOCAB
+
+
+class _EchoModel:
+    """Next-token logits = one-hot of ``_f(input token)``."""
+
+    def __init__(self, vocab=VOCAB, d=16):
+        self.vocab = vocab
+        rng = np.random.default_rng(0)
+        self.embed = rng.normal(size=(vocab, d)).astype(np.float32)
+
+    def init_cache(self, b, cap):
+        return {"n": jnp.zeros((b,), jnp.int32)}
+
+    def _embed(self, params, tokens):
+        return jnp.asarray(self.embed)[tokens]
+
+    def prefill(self, params, tokens, capacity=None):
+        logits = jax.nn.one_hot((tokens * 7 + 3) % self.vocab, self.vocab)
+        return logits, {"n": jnp.zeros((1,), jnp.int32)}
+
+    def decode_step(self, params, caches, tokens, pos):
+        logits = jax.nn.one_hot((tokens * 7 + 3) % self.vocab, self.vocab)
+        return logits, caches
+
+
+def _engine(**kw):
+    return ServeEngine(_EchoModel(), params={}, batch_slots=kw.pop("B", 2),
+                       capacity=kw.pop("capacity", 16), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Prompt buckets
+# ---------------------------------------------------------------------------
+def test_bucket_function():
+    assert [_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_ragged_prompts_share_one_prefill_compile():
+    eng = _engine(B=4)
+    for rid, n in enumerate((5, 6, 7, 8)):      # all bucket to 8
+        eng.add(Request(rid=rid,
+                        prompt=np.arange(1, n + 1).astype(np.int32),
+                        max_new=2))
+    eng.run()
+    assert eng.stats["prefill_compiles"] == 1
+    assert eng.fault_report()["prefill_bucket_shapes"] == [8]
+    # a shorter prompt opens a second (smaller) bucket
+    eng.add(Request(rid=9, prompt=np.asarray([4, 5], np.int32), max_new=2))
+    eng.run()
+    assert eng.stats["prefill_compiles"] == 2
+    assert eng.fault_report()["prefill_bucket_shapes"] == [2, 8]
+
+
+def test_pad_unsafe_model_prefills_at_exact_lengths():
+    """A model with recurrent state (``prefill_pad_safe`` False) folds
+    pad tokens into its cache, so the engine must not pad its prompts --
+    every distinct length is its own 'bucket'."""
+    eng = _engine(B=4)
+    eng.model.prefill_pad_safe = False
+    eng._pad_safe = False
+    for rid, n in enumerate((5, 6, 7, 5)):
+        eng.add(Request(rid=rid,
+                        prompt=np.arange(1, n + 1).astype(np.int32),
+                        max_new=2))
+    eng.run()
+    assert eng.stats["prefill_compiles"] == 3   # lengths 5, 6, 7
+    assert eng.fault_report()["prefill_bucket_shapes"] == [5, 6, 7]
+
+
+def test_bucket_clamped_to_capacity():
+    eng = _engine(B=1, capacity=8)
+    eng.add(Request(rid=0, prompt=np.arange(1, 8).astype(np.int32),
+                    max_new=1))                 # len 7 -> bucket 8 == cap
+    eng.run()
+    assert eng.fault_report()["prefill_bucket_shapes"] == [8]
+
+
+def test_padded_prefill_reads_the_real_last_token():
+    """The first generated token must come from logits at position
+    ``plen - 1``, not the padded tail (a -1 index would read pad)."""
+    eng = _engine(B=1)
+    prompt = np.asarray([9, 2, 6], np.int32)    # len 3 -> bucket 4
+    eng.add(Request(rid=0, prompt=prompt, max_new=3))
+    done = eng.run()
+    want = [_f(6)]                              # from the REAL last token
+    for _ in range(2):
+        want.append(_f(want[-1]))
+    assert done[0].out == want
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle
+# ---------------------------------------------------------------------------
+def test_max_new_one_yields_exactly_one_token():
+    eng = _engine(B=2)
+    eng.add(Request(rid=0, prompt=np.asarray([5], np.int32), max_new=1))
+    done = eng.run()
+    assert len(done) == 1 and done[0].done
+    assert done[0].out == [_f(5)]               # prefill token only
+
+
+def test_more_requests_than_slots_recycles_in_order():
+    eng = _engine(B=2)
+    for rid in range(5):
+        eng.add(Request(rid=rid, prompt=np.asarray([rid + 1], np.int32),
+                        max_new=2))
+    done = eng.run()
+    # slots free in pairs, the queue drains FIFO, finish order is stable
+    assert [r.rid for r in done] == [0, 1, 2, 3, 4]
+    assert all(len(r.out) == 2 for r in done)
+    # every request decoded its OWN chain, not a neighbour slot's
+    for r in done:
+        assert r.out == [_f(r.rid + 1), _f(_f(r.rid + 1))]
+
+
+def test_step_with_empty_queue_and_active_slots_decodes():
+    eng = _engine(B=2)
+    eng.add(Request(rid=0, prompt=np.asarray([3], np.int32), max_new=3))
+    assert eng.step() == []                     # admitted + 1 decode
+    assert not eng.queue                        # queue already empty
+    done = eng.step()                           # keeps decoding
+    assert [r.rid for r in done] == [0] and len(done[0].out) == 3
+
+
+def test_step_on_idle_engine_is_a_noop():
+    eng = _engine()
+    assert eng.step() == []
+    assert eng.stats["steps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Sampling keys
+# ---------------------------------------------------------------------------
+def _sampled(seed, temperature=1.0):
+    eng = _engine(B=2, temperature=temperature, seed=seed)
+    for rid in range(2):
+        eng.add(Request(rid=rid, prompt=np.asarray([rid + 1], np.int32),
+                        max_new=8))
+    return tuple(tuple(r.out) for r in eng.run())
+
+
+def test_temperature_sampling_is_seed_deterministic():
+    assert _sampled(seed=1) == _sampled(seed=1)
+
+
+def test_temperature_sampling_varies_across_seeds_and_steps():
+    a, b = _sampled(seed=1), _sampled(seed=2)
+    assert a != b                               # fold_in(base, step) keys
+    # within one run the per-step keys differ too: a greedy chain would
+    # be _f-deterministic, sampled chains at temp 1 must not all be
+    greedy = _sampled(seed=1, temperature=0.0)
+    assert a != greedy
+
+
+def test_greedy_ignores_seed():
+    assert _sampled(seed=1, temperature=0.0) == \
+        _sampled(seed=2, temperature=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines + degradation
+# ---------------------------------------------------------------------------
+def test_step_deadline_miss_counter():
+    eng = _engine(B=1, step_deadline_ms=0.0)    # every step misses
+    eng.add(Request(rid=0, prompt=np.asarray([1], np.int32), max_new=3))
+    eng.run()
+    assert eng.stats["steps"] > 0
+    assert eng.stats["deadline_misses"] == eng.stats["steps"]
+
+
+def test_fault_report_on_probeless_engine():
+    eng = _engine(B=1)
+    eng.add(Request(rid=0, prompt=np.asarray([1], np.int32), max_new=2))
+    eng.run()
+    rep = eng.fault_report()
+    assert rep["steps"] > 0 and not rep["probe_fallback_active"]
+    assert "probe_escaped_outputs" not in rep and "faults" not in rep
+
+
+def _probe(fm, d=16, n=6):
+    w = np.linspace(-1, 1, d * n).reshape(d, n).astype(np.float32)
+    cfg = FabricConfig(n_blocks=4, rows=128, cols=16)
+    return FabricLinearProbe(w, cfg=cfg, bits=8, max_steps=8, faults=fm)
+
+
+def test_probe_retry_heals_and_serving_continues():
+    fm = FaultModel(bit_rate=0.05, seed=0, scrub=False, heal_after=1)
+    eng = _engine(B=1, fabric_probe=_probe(fm), probe_retries=2)
+    eng.add(Request(rid=0, prompt=np.asarray([2], np.int32), max_new=2))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 2
+    rep = eng.fault_report()
+    assert rep["probe_retries"] == 1            # one faulted launch
+    assert rep["probe_fallbacks"] == 0          # ...healed on retry
+    assert not rep["probe_fallback_active"]
+    assert rep["faults"]["escaped"] == 1
+
+
+def test_probe_exhausted_retries_fall_back_permanently():
+    fm = FaultModel(bit_rate=0.05, seed=0, scrub=False)   # never heals
+    eng = _engine(B=1, fabric_probe=_probe(fm), probe_retries=1)
+    eng.add(Request(rid=0, prompt=np.asarray([2], np.int32), max_new=3))
+    done = eng.run()
+    # degraded, not down: every token still produced
+    assert len(done) == 1 and len(done[0].out) == 3
+    rep = eng.fault_report()
+    assert rep["probe_fallbacks"] == 1 and rep["probe_fallback_active"]
+    assert rep["probe_retries"] == 1
+    # after the fallback the fabric is never launched again
+    events_at_fallback = fm.injection_events
+    assert eng.stats["steps"] >= 2
+    assert fm.injection_events == events_at_fallback
