@@ -3,18 +3,32 @@ column carries the architectural quantity: decode step tokens/s scale).
 
 Writes ``BENCH_serve.json`` (ROADMAP "benchmark hygiene" -- JSON
 artifact + CI floor, mirroring the engine/fabric benches): tokens
-served, per-token latency, and the continuous-batching accounting.
-Wall-clock on shared CI is noisy, so the hard gate is an *integrity*
-floor -- ``--min-tokens N`` fails when the engine stops producing the
-expected token count (a scheduling/slot-refill regression), while the
-latency number rides along as a tracked artifact.
+served, per-token latency split by phase (prefill vs decode, and the
+first -- cold -- decode step vs the warm steady state), and the
+continuous-batching accounting.  Wall-clock on shared CI is noisy, so
+the hard gates are *integrity* floors -- ``--min-tokens N`` fails when
+the engine stops producing the expected token count (a
+scheduling/slot-refill regression), and the **fabric leg** fails when
+its tokens diverge from the ref leg's.
+
+The fabric leg reruns the same request stream with the decode loop on
+the simulated Compute RAM grid, two ways:
+
+* a :class:`repro.pim.fabric.FabricLinearProbe` holding ONE
+  :class:`FabricSession` across every decode step (the engine's live
+  per-step activations through the fused QKV program; weights go
+  resident at step 1, steps 2..N schedule warm) -- tokens must be
+  bit-identical to the ref run;
+* a multi-step decode loop through ``PimConfig(mode="fabric",
+  fabric_session=...)`` / ``fused_linear_apply`` on the same layer-0
+  projection weights, asserted bit-identical per step to the
+  sessionless fabric path (residency is accounting, never arithmetic).
 
 CLI: ``python benchmarks/serve_bench.py [--quick] [--json PATH]
 [--min-tokens N]``.
 """
 
 import argparse
-import json
 import pathlib
 import sys
 import time
@@ -33,26 +47,126 @@ from repro.serve.engine import Request, ServeEngine  # noqa: E402
 BENCH_JSON = "BENCH_serve.json"
 
 
+def _engine_run(model, cfg, params, slots, n_req, max_new, probe=None):
+    """One full continuous-batching run; same seeded request stream."""
+    eng = ServeEngine(model, params, batch_slots=slots, capacity=64,
+                      fabric_probe=probe)
+    rng = np.random.default_rng(0)
+    for rid in range(n_req):
+        eng.add(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+            max_new=max_new))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    return eng, sorted(done, key=lambda r: r.rid), dt
+
+
+def _phase_split(stats: dict) -> dict:
+    """prefill vs decode, cold first decode step vs warm steady state."""
+    warm_steps = max(stats["decode_warm_steps"], 1)
+    return {
+        "prefill_us_per_token": round(
+            stats["prefill_s"] * 1e6 / max(stats["prefill_tokens"], 1)),
+        "decode_us_per_token": round(
+            stats["decode_s"] * 1e6 / max(stats["decode_tokens"], 1)),
+        "decode_cold_us_per_step": round(stats["decode_cold_s"] * 1e6),
+        "decode_warm_us_per_step": round(
+            stats["decode_warm_s"] * 1e6 / warm_steps),
+        "decode_warm_steps": stats["decode_warm_steps"],
+    }
+
+
+def _bench_pim_decode(params, quick=False):
+    """Multi-step decode loop through ``PimConfig(mode="fabric")``.
+
+    The smoke model's layer-0 / head-0 Q/K/V projection slices, packed
+    offline (``pack_linear``), applied to a fresh activation per decode
+    step -- once through a shared :class:`FabricSession` (the
+    weight-stationary loop) and once sessionless; outputs must match
+    bit-for-bit, and the session trajectory shows the fetch collapse.
+    """
+    from repro.pim import fabric as fabric_mod
+    from repro.pim.linear import PimConfig, fused_linear_apply, pack_linear
+
+    attn = params["unit"]["b0"]["attn"]
+    w3 = [np.asarray(attn["wq"][0][:, 0, :], np.float32),
+          np.asarray(attn["wk"][0][:, 0, :], np.float32),
+          np.asarray(attn["wv"][0][:, 0, :], np.float32)]
+    packed = [pack_linear({"w": w}, PimConfig(weight_bits=8)) for w in w3]
+
+    fcfg = fabric_mod.FabricConfig(n_blocks=8)
+    sess = fabric_mod.FabricSession(fcfg)
+    cfg_s = PimConfig(mode="fabric", weight_bits=8, act_bits=8,
+                      fabric=fcfg, fabric_session=sess)
+    cfg_0 = PimConfig(mode="fabric", weight_bits=8, act_bits=8, fabric=fcfg)
+    steps = 3 if quick else 6
+    rng = np.random.default_rng(1)
+    identical = True
+    for _ in range(steps):
+        x = rng.normal(size=(1, w3[0].shape[0])).astype(np.float32)
+        sess.begin_step()
+        ys = fused_linear_apply(packed, x, cfg_s)
+        y0 = fused_linear_apply(packed, x, cfg_0)
+        identical &= all(
+            np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+            for a, b in zip(ys, y0))
+    traj = sess.trajectory()
+    rep = traj.report()
+    rep["bit_identical_vs_sessionless"] = bool(identical)
+    return rep
+
+
 def run(print_fn=print, json_path=BENCH_JSON, quick=False):
+    from repro.pim import fabric as fabric_mod
+
     cfg = configs.get_config("qwen2-0.5b", smoke=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     slots = 2 if quick else 4
     n_req, max_new = (4, 4) if quick else (8, 8)
-    eng = ServeEngine(model, params, batch_slots=slots, capacity=64)
-    rng = np.random.default_rng(0)
-    for rid in range(n_req):
-        eng.add(Request(rid=rid,
-                        prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
-                        max_new=max_new))
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
+
+    # --- ref leg: host decode, no fabric --------------------------------
+    eng, done, dt = _engine_run(model, cfg, params, slots, n_req, max_new)
     toks = sum(len(r.out) for r in done)
     us_per_token = dt * 1e6 / max(toks, 1)
+    split = _phase_split(eng.stats)
     print_fn(f"serve/continuous_batching,{us_per_token:.0f},"
              f"us_per_token;requests={len(done)};slots={slots};"
              f"tokens={toks}")
+    print_fn(f"serve/phase_split,{split['decode_warm_us_per_step']},"
+             f"decode_warm_us_per_step;"
+             f"prefill={split['prefill_us_per_token']};"
+             f"decode={split['decode_us_per_token']};"
+             f"cold_step={split['decode_cold_us_per_step']}")
+
+    # --- fabric leg: same stream, decode loop on the block grid ---------
+    attn = params["unit"]["b0"]["attn"]
+    w3 = [np.asarray(attn["wq"][0][:, 0, :], np.float32),
+          np.asarray(attn["wk"][0][:, 0, :], np.float32),
+          np.asarray(attn["wv"][0][:, 0, :], np.float32)]
+    probe = fabric_mod.FabricLinearProbe(
+        w3, cfg=fabric_mod.FabricConfig(n_blocks=8), bits=8,
+        max_steps=n_req * max_new, session=True)
+    feng, fdone, fdt = _engine_run(model, cfg, params, slots, n_req,
+                                   max_new, probe=probe)
+    ftoks = sum(len(r.out) for r in fdone)
+    identical = [r.out for r in done] == [r.out for r in fdone]
+    fsplit = _phase_split(feng.stats)
+    straj = probe.session.trajectory()
+    print_fn(f"serve/fabric_decode,{fdt * 1e6 / max(ftoks, 1):.0f},"
+             f"us_per_token;steps={len(probe.costs)};"
+             f"tokens_bit_identical={identical};"
+             f"steady_fetch_reduction="
+             f"{straj.steady_fetch_reduction:.2f}")
+
+    pim = _bench_pim_decode(params, quick=quick)
+    print_fn(f"serve/pim_fabric_decode,"
+             f"{pim['steady_fetch_reduction']:.2f},"
+             f"steady_fetch_reduction;steps={pim['steps']};"
+             f"bit_identical={pim['bit_identical_vs_sessionless']}")
+
     payload = {
         "quick": quick,
         "model": "qwen2-0.5b-smoke",
@@ -62,6 +176,18 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
         "expected_tokens": n_req * max_new,
         "us_per_token": round(us_per_token),
         "wall_s": round(dt, 3),
+        **split,
+        "fabric": {
+            "tokens": ftoks,
+            "tokens_bit_identical": identical,
+            "us_per_token": round(fdt * 1e6 / max(ftoks, 1)),
+            "decode_steps_on_fabric": len(probe.costs),
+            **{k: fsplit[k] for k in ("decode_cold_us_per_step",
+                                      "decode_warm_us_per_step")},
+            "session": straj.report(),
+            "probe": probe.report(),
+        },
+        "pim_decode": pim,
     }
     if json_path:
         bench_util.atomic_write_json(json_path, payload, print_fn,
@@ -73,6 +199,18 @@ def check_tokens(payload: dict, floor: int):
     """Failure strings when the engine under-produces tokens."""
     t = payload["tokens"]
     return [] if t >= floor else [f"tokens served: {t} < {floor}"]
+
+
+def check_fabric_identity(payload: dict):
+    """The fabric leg must serve the exact ref-path token stream, and
+    the session-vs-sessionless PIM decode must match bit-for-bit."""
+    bad = []
+    if not payload["fabric"]["tokens_bit_identical"]:
+        bad.append("fabric leg tokens diverge from the ref path")
+    if not payload["pim_decode"]["bit_identical_vs_sessionless"]:
+        bad.append("PimConfig(fabric) session outputs diverge from "
+                   "the sessionless path")
+    return bad
 
 
 def main(argv=None) -> int:
@@ -90,10 +228,12 @@ def main(argv=None) -> int:
     bad = []
     if args.min_tokens is not None:
         bad = check_tokens(payload, args.min_tokens)
+    bad += check_fabric_identity(payload)
     if bench_util.gate_and_write(payload, bad, args.json, "serve"):
         return 1
     if args.min_tokens is not None:
         print(f"tokens served >= {args.min_tokens}: OK")
+    print("fabric leg tokens bit-identical to ref: OK")
     return 0
 
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block-level constants (Table II, 22 nm)
@@ -494,6 +495,149 @@ def fault_cost(name: str, *, n_blocks: int, cols: int, parity_bits: float,
         fabric_bits_moved=moved, spill_bits_moved=0.0, ops=0,
         serial_cycles=serial, overlapped_cycles=serial,
         fabric_bit_mm=moved * hop_net_length_mm(edge_hops))
+
+
+def kv_append_cost(name: str, *, n_blocks: int, cols: int, bits: float,
+                   edge_hops: float = 1.0,
+                   spilled: bool = False) -> ScheduleCost:
+    """Price appending ``bits`` of new KV-cache entries into a storage
+    block (the on-fabric KV cache of a :class:`repro.pim.fabric`
+    session).
+
+    An append is the *write half* of a fetch: the new entries cross the
+    fabric from the host edge to the cache's home block (``edge_hops``
+    Manhattan hops; the spill path when the cache did not fit on-fabric)
+    and land as ``ceil(bits / cols)`` storage-mode row writes.  Nothing
+    is re-read and no compute-mode cycles burn -- which is exactly the
+    session's append-not-refetch claim: the K/V history already resident
+    on the grid is never moved again.
+    """
+    row_bits = max(int(cols), 1)
+    rows_touched = float(math.ceil(bits / row_bits))
+    serial = rows_touched * STORAGE_ROW_CR_CYCLES
+    fabric_bits = 0.0 if spilled else float(bits)
+    spill_bits = float(bits) if spilled else 0.0
+    return schedule_cost_rollup(
+        name, n_blocks=n_blocks, n_compute=0, n_storage=1, rounds=0,
+        compute_block_cycles=0.0, round_cycles=0.0,
+        storage_rows_touched=rows_touched,
+        fabric_bits_moved=fabric_bits, spill_bits_moved=spill_bits, ops=0,
+        serial_cycles=serial, overlapped_cycles=serial,
+        fabric_bit_mm=fabric_bits * hop_net_length_mm(edge_hops),
+        spill_bit_mm=spill_bits * (NET_LENGTH_SPILL_MM
+                                   + hop_net_length_mm(edge_hops)))
+
+
+def _mean(vals) -> float:
+    vals = list(vals)
+    return sum(vals) / len(vals) if vals else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTrajectory:
+    """Per-step cost/fetch trajectory of a persistent fabric session.
+
+    One entry per *decode step* (a :meth:`FabricSession.begin_step`
+    bucket): the combined :class:`ScheduleCost` of every program the
+    step executed, plus the step's operand-fetch counters from the
+    schedule IR.  Step 0 is the **cold** step (every weight tile
+    fetched); steps 1.. are **steady state** (warm residency), and the
+    cold/steady split is the session win the fabric benchmark gates:
+    ``steady_fetch_reduction = cold fetches / mean(steady fetches)``.
+
+    ``costs`` entries may be ``None`` for steps that were scheduled but
+    never executed (cost samples come from the execution layer).
+    """
+    name: str
+    costs: Tuple[Optional[ScheduleCost], ...]
+    fetches: Tuple[int, ...]
+    fetch_bits: Tuple[float, ...]
+    w_fetches: Tuple[int, ...] = ()
+    kv_fetch_bits: Tuple[float, ...] = ()
+
+    @property
+    def steps(self) -> int:
+        return len(self.fetches)
+
+    @property
+    def cold_fetches(self) -> int:
+        return self.fetches[0] if self.fetches else 0
+
+    @property
+    def steady_fetches(self) -> float:
+        return _mean(self.fetches[1:])
+
+    @property
+    def steady_fetch_reduction(self) -> float:
+        """Cold step-1 fetch count over the steady-state mean (>= 1 when
+        residency carries across programs; 1.0 for a single step)."""
+        if self.steps < 2:
+            return 1.0
+        return self.cold_fetches / max(self.steady_fetches, 1e-12)
+
+    @property
+    def steady_w_fetch_reduction(self) -> float:
+        """Like :attr:`steady_fetch_reduction` for weight fetches only.
+        A fully weight-stationary steady state fetches ZERO weights;
+        report the cold count then (the reduction is 'all of them')
+        so the number stays finite/JSON-able."""
+        if self.steps < 2 or not self.w_fetches:
+            return 1.0
+        steady = _mean(self.w_fetches[1:])
+        if steady == 0:
+            return float(max(self.w_fetches[0], 1))
+        return self.w_fetches[0] / steady
+
+    def _cost_attr(self, idx: int, attr: str) -> float:
+        c = self.costs[idx] if idx < len(self.costs) else None
+        return float(getattr(c, attr)) if c is not None else 0.0
+
+    @property
+    def cold_energy_pj(self) -> float:
+        return self._cost_attr(0, "energy_pj")
+
+    @property
+    def steady_energy_pj(self) -> float:
+        return _mean(self._cost_attr(i, "energy_pj")
+                     for i in range(1, self.steps))
+
+    @property
+    def cold_overlapped_cycles(self) -> float:
+        return self._cost_attr(0, "overlapped_cycles_")
+
+    @property
+    def steady_overlapped_cycles(self) -> float:
+        return _mean(self._cost_attr(i, "overlapped_cycles_")
+                     for i in range(1, self.steps))
+
+    def report(self) -> dict:
+        """Flat JSON-able summary (benchmarks / serve artifacts)."""
+        rep = {
+            "name": self.name,
+            "steps": self.steps,
+            "per_step_fetches": list(self.fetches),
+            "per_step_fetch_bits": [round(b, 1) for b in self.fetch_bits],
+            "cold_fetches": self.cold_fetches,
+            "steady_fetches": round(self.steady_fetches, 3),
+            "steady_fetch_reduction": round(self.steady_fetch_reduction, 3),
+        }
+        if self.w_fetches:
+            rep["per_step_w_fetches"] = list(self.w_fetches)
+            rep["steady_w_fetch_reduction"] = round(
+                self.steady_w_fetch_reduction, 3)
+        if self.kv_fetch_bits:
+            rep["per_step_kv_fetch_bits"] = [round(b, 1)
+                                             for b in self.kv_fetch_bits]
+        if any(c is not None for c in self.costs):
+            rep.update({
+                "cold_energy_pj": round(self.cold_energy_pj, 3),
+                "steady_energy_pj": round(self.steady_energy_pj, 3),
+                "cold_overlapped_cycles": round(
+                    self.cold_overlapped_cycles, 1),
+                "steady_overlapped_cycles": round(
+                    self.steady_overlapped_cycles, 1),
+            })
+        return rep
 
 
 def cr_throughput_gops(op: str, precision: str, cols: int = 40,

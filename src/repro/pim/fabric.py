@@ -218,12 +218,27 @@ class GemmSpec:
     dtype class gets its own tile geometry, instruction sequence, and
     activation encoding, while sharing the grid allocation and the
     residency machinery.
+
+    ``kv`` names a :class:`FabricSession` KV cache that backs this
+    GEMM's weight operand -- the new ``kv`` tile class of the Schedule
+    IR.  KV tiles are session-pinned (never LRU-evicted within the
+    sequence window), live at the cache's reserved home block, and load
+    *append-addressed*: a compute block that already holds an earlier
+    prefix of a growing tile fetches only the delta bits
+    (:meth:`FabricSession.kv_append` grows the cache between programs).
+    ``kv_axis`` records which GEMM dimension the appended positions tile
+    along -- ``"n"`` for the K^T scores operand (``(hd, t)``), ``"k"``
+    for the V operand (``(t, hd)``); the scheduler's growing-tile delta
+    machinery covers both, the axis is a declaration checked at
+    schedule time.
     """
     name: str
     M: int
     K: int
     N: int
     dtype: Optional[str] = None
+    kv: Optional[str] = None
+    kv_axis: str = "n"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -430,9 +445,237 @@ Schedule = FabricProgram
 
 
 # ---------------------------------------------------------------------------
+# Persistent sessions: residency across programs (weight-stationary decode)
+# ---------------------------------------------------------------------------
+class FabricSession:
+    """Grid state that persists across sequential fabric programs.
+
+    Every :func:`schedule_program` call normally starts from a cold
+    resident-tile map, so a weight-stationary serve loop refetches every
+    weight tile on every decode step.  A session owns the state that
+    should outlive one program:
+
+    * the **mode map** (storage/compute allocation), pinned by the
+      session's first program so later programs schedule onto the same
+      grid split;
+    * the per-compute-block **resident-tile maps**, keyed *globally*
+      (weight tiles by ``(gemm name, dtype, k0, n0)``), so a tile
+      fetched in decode step 1 emits **no load** in steps 2..N -- the
+      caller contract is that a stable GEMM name means a stationary
+      weight (a renamed or mutated weight only mis-models cost, never
+      correctness: execution always packs the actual operands passed);
+    * the storage blocks' **free space + operand homes**, so a warm tile
+      is also not re-placed (activations are per-program: their homes
+      recycle and their resident entries drop at each program boundary
+      -- a decode step's activations are new payloads every step);
+    * **KV caches** (:meth:`reserve_kv` / :meth:`kv_append`): reserved
+      storage-block regions that grow in place, the on-fabric KV cache
+      (see :class:`GemmSpec.kv`);
+    * a per-decode-step **cost/fetch trajectory**
+      (:meth:`begin_step` / :meth:`trajectory`) -- the cold step-1 vs
+      steady-state split in :class:`repro.core.costmodel.CostTrajectory`.
+
+    Lifecycle: create -> warm (schedule/execute programs through it) ->
+    invalidated on fault repair (:meth:`invalidate_blocks` /
+    :meth:`apply_remap`, wired into ``execute_program`` scrubs and
+    :func:`repair_program`) -> :meth:`reset` back to cold.
+
+    Residency remains an IR/cost-model concept: :func:`execute_program`
+    re-packs every operand host-side each launch, so outputs are
+    bit-identical with or without a session -- the session changes what
+    the schedule *charges for moving*, never what the blocks compute.
+    Not thread-safe; one session serves one sequential serve loop.
+    """
+
+    def __init__(self, cfg: Optional[FabricConfig] = None):
+        self._cfg0 = cfg
+        self.reset()
+
+    # NOTE: no __eq__/__hash__ overrides -- identity hashing keeps a
+    # session embeddable in frozen configs (repro.pim.linear.PimConfig).
+
+    def reset(self) -> None:
+        """Back to cold: drop residency, homes, KV caches, trajectory."""
+        self.cfg: Optional[FabricConfig] = self._cfg0
+        self.modes: Optional[Tuple[str, ...]] = None
+        self.storage_free: Dict[int, int] = {}
+        self.resident: Dict[int, dict] = {}    # block -> {key: [bits, last]}
+        self.w_homes: Dict[tuple, int] = {}    # global weight key -> block
+        self.clock = 0                         # global LRU round counter
+        self.epoch = 0                         # program counter (x scoping)
+        self.programs = 0
+        self.kv: Dict[str, dict] = {}
+        self.steps: List[dict] = []
+        self._x_alloc: List[Tuple[int, int]] = []
+
+    # -- grid binding (internal: schedule_program) --------------------------
+    def _bind(self, cfg: FabricConfig) -> None:
+        if self.cfg is not None and self.cfg != cfg:
+            if self.programs == 0 and self.modes is None:
+                self.cfg = cfg        # cold: adopt (e.g. an autotuned split)
+                return
+            raise ValueError(
+                f"session is bound to grid {self.cfg}; got {cfg} -- "
+                f"reset() before switching grids")
+        self.cfg = cfg
+
+    def _begin_program(self) -> None:
+        """Per-program state turnover: activations never warm across
+        programs (a decode step's activations are new payloads), so
+        their storage allocations recycle and their resident entries
+        drop; weights and KV tiles persist."""
+        self.epoch += 1
+        self.programs += 1
+        for b, bits in self._x_alloc:
+            if b >= 0:
+                self.storage_free[b] = self.storage_free.get(b, 0) + bits
+        self._x_alloc = []
+        for res in self.resident.values():
+            for kk in [k for k in res if k[0] == "x"]:
+                del res[kk]
+        self._step()["programs"] += 1
+
+    # -- decode-step trajectory ----------------------------------------------
+    def begin_step(self) -> dict:
+        """Open a new per-decode-step accounting bucket."""
+        self.steps.append({"programs": 0, "fetches": 0, "fetch_bits": 0.0,
+                           "w_fetches": 0, "kv_fetch_bits": 0.0,
+                           "kv_appends": 0, "kv_append_bits": 0,
+                           "costs": []})
+        return self.steps[-1]
+
+    def _step(self) -> dict:
+        return self.steps[-1] if self.steps else self.begin_step()
+
+    def record_cost(self, cost: costmodel.ScheduleCost) -> None:
+        self._step()["costs"].append(cost)
+
+    def trajectory(self) -> costmodel.CostTrajectory:
+        """The session's per-step cost/fetch trajectory so far."""
+        costs = tuple(combine_costs("fabric/session_step", s["costs"])
+                      if s["costs"] else None for s in self.steps)
+        return costmodel.CostTrajectory(
+            name="fabric/session",
+            costs=costs,
+            fetches=tuple(s["fetches"] for s in self.steps),
+            fetch_bits=tuple(s["fetch_bits"] for s in self.steps),
+            w_fetches=tuple(s["w_fetches"] for s in self.steps),
+            kv_fetch_bits=tuple(s["kv_fetch_bits"] for s in self.steps))
+
+    def stats(self) -> dict:
+        rep = {
+            "programs": self.programs,
+            "steps": len(self.steps),
+            "resident_tiles": sum(len(r) for r in self.resident.values()),
+            "resident_bits": sum(bits for r in self.resident.values()
+                                 for bits, _ in r.values()),
+            "kv": {k: {"len": m["len"], "window": m["window"],
+                       "home": m["home"]} for k, m in self.kv.items()},
+        }
+        if self.steps:
+            rep["trajectory"] = self.trajectory().report()
+        return rep
+
+    # -- on-fabric KV caches -------------------------------------------------
+    def reserve_kv(self, kv_id: str, pos_bits: int, window: int) -> None:
+        """Reserve a growing KV cache of up to ``window`` positions of
+        ``pos_bits`` bits each.  Must happen before the session's first
+        program: reservations join the storage-demand sizing and are
+        placed FIRST (before any weight tile), so the cache lives
+        on-fabric whenever it fits one storage block."""
+        if self.modes is not None:
+            raise ValueError(
+                "reserve_kv after the session's first program: the mode "
+                "map is pinned; reset() to re-plan")
+        if kv_id in self.kv:
+            raise ValueError(f"KV cache {kv_id!r} already reserved")
+        if pos_bits < 1 or window < 1:
+            raise ValueError(f"degenerate KV reservation {kv_id!r}: "
+                             f"{window} x {pos_bits} bits")
+        self.kv[kv_id] = {"pos_bits": int(pos_bits), "window": int(window),
+                          "len": 0, "home": None}
+
+    def kv_len(self, kv_id: str) -> int:
+        return self.kv[kv_id]["len"]
+
+    def kv_append(self, kv_id: str, n_new: int = 1) -> None:
+        """Append ``n_new`` positions to a KV cache (the decode step's
+        new K/V row): the cache grows *in place* at its home block --
+        history already on the grid is never refetched.  Charges the
+        append write to the current step's trajectory."""
+        meta = self.kv[kv_id]
+        if meta["home"] is None:
+            raise ValueError(
+                f"KV cache {kv_id!r} not placed yet: run the session's "
+                f"first program before appending")
+        if meta["len"] + n_new > meta["window"]:
+            raise ValueError(
+                f"KV cache {kv_id!r} overflows its window: "
+                f"{meta['len']} + {n_new} > {meta['window']}")
+        meta["len"] += n_new
+        bits = n_new * meta["pos_bits"]
+        step = self._step()
+        step["kv_appends"] += n_new
+        step["kv_append_bits"] += bits
+        cfg = self.cfg
+        if cfg is not None:
+            home = meta["home"]
+            step["costs"].append(costmodel.kv_append_cost(
+                f"fabric/kv_append/{kv_id}", n_blocks=cfg.n_blocks,
+                cols=cfg.cols, bits=bits,
+                edge_hops=(cfg.edge_hops(home) if home >= 0
+                           else cfg.grid_diameter),
+                spilled=home < 0))
+
+    # -- fault hooks -----------------------------------------------------------
+    def invalidate_blocks(self, blocks) -> None:
+        """Drop every resident-tile entry of the given grid blocks.
+
+        Called when a scrub restores a block from its pristine image
+        (:func:`execute_program`'s fault path): the pristine refetch
+        restores only *that launch's* packed operands, so any other
+        tile the block's resident map claims to hold can no longer be
+        trusted -- a stale map after repair would be silent wrong
+        reuse in the cost model.  The next program refetches."""
+        for b in blocks:
+            if b in self.resident:
+                self.resident[b].clear()
+
+    def apply_remap(self, mapping: Dict[int, int]) -> None:
+        """Mirror a :func:`repair_program` spare remap into the session.
+
+        A dead compute block's resident map is DROPPED (the spare
+        starts cold -- it holds nothing yet, silent reuse would be
+        wrong); a dead storage block's homes and free space move to its
+        spare, and every home pointer is rewritten."""
+        if self.modes is None or not mapping:
+            return
+        modes = list(self.modes)
+        for b, s in mapping.items():
+            modes[s] = modes[b]
+            modes[b] = "dead"
+            if b in self.resident:
+                self.resident.pop(b)
+                self.resident[s] = {}
+            if b in self.storage_free:
+                self.storage_free[s] = self.storage_free.pop(b)
+        self.modes = tuple(modes)
+
+        def remap(v: int) -> int:
+            return mapping.get(v, v) if v >= 0 else v
+
+        self.w_homes = {k: remap(v) for k, v in self.w_homes.items()}
+        self._x_alloc = [(remap(b), bits) for b, bits in self._x_alloc]
+        for meta in self.kv.values():
+            if meta["home"] is not None:
+                meta["home"] = remap(meta["home"])
+
+
+# ---------------------------------------------------------------------------
 # Scheduling
 # ---------------------------------------------------------------------------
-def _task_operands(t: TileTask, infos: Sequence[cram.DType], multi: bool):
+def _task_operands(t: TileTask, gemms: Sequence[GemmSpec],
+                   infos: Sequence[cram.DType], multi: bool):
     """The (kind, key, src, bits) operand reads of one tile task.
 
     Activation slices are keyed ``(m, k0)`` -- shared across fused GEMMs
@@ -443,13 +686,22 @@ def _task_operands(t: TileTask, infos: Sequence[cram.DType], multi: bool):
     of the activations (a quantized int8 row and a bf16 row are
     different payloads even for the same ``(m, k0)``), so activation
     keys grow a leading dtype component: ``(dtype, m, k0)``.
+
+    A GEMM backed by a session KV cache (``GemmSpec.kv``) reads its
+    weight-side operand as a ``kv`` tile instead, keyed
+    ``(kv_id, k0, n0)`` -- the key is already program-independent, so a
+    session can track the growing tile across decode steps.
     """
     info = infos[t.gemm]
     kw = t.k1 - t.k0
     xkey = (info.name, t.m, t.k0) if multi else (t.m, t.k0)
     yield "x", xkey, t.x_src, kw * info.bits
-    yield "w", (t.gemm, t.k0, t.n0), t.w_src, \
-        kw * (t.n1 - t.n0) * info.bits
+    wbits = kw * (t.n1 - t.n0) * info.bits
+    kv = getattr(gemms[t.gemm], "kv", None)
+    if kv:
+        yield "kv", (kv, t.k0, t.n0), t.w_src, wbits
+    else:
+        yield "w", (t.gemm, t.k0, t.n0), t.w_src, wbits
 
 
 def _storage_block_ids(n_blocks: int, n_storage: int,
@@ -488,12 +740,15 @@ def _assign_slots(chunk, compute_blocks, resident, x_keys, w_keys):
 def _evict_lru(res: dict, capacity: int, pinned: set):
     """Evict least-recently-used resident tiles until under capacity.
 
-    Tiles read by the current round (``pinned``) are never evicted; the
+    Tiles read by the current round (``pinned``) are never evicted, and
+    neither are ``kv`` tiles -- the session's KV cache is pinned for the
+    whole sequence window (evicting appended history would turn every
+    later decode step's delta load back into a full refetch); the
     idot layout guarantees one x slice + one w tile always fit a block.
     """
     while sum(bits for bits, _ in res.values()) > capacity:
         victims = [(last, kk) for kk, (_, last) in res.items()
-                   if kk not in pinned]
+                   if kk not in pinned and kk[0] != "kv"]
         if not victims:
             break
         res.pop(min(victims)[1])
@@ -501,7 +756,9 @@ def _evict_lru(res: dict, capacity: int, pinned: set):
 
 def schedule_program(specs: Sequence[GemmSpec], nbits: int,
                      cfg: FabricConfig = FabricConfig(),
-                     signed: bool = False) -> FabricProgram:
+                     signed: bool = False,
+                     session: Optional[FabricSession] = None
+                     ) -> FabricProgram:
     """Plan one or more activation-sharing GEMMs onto the block grid.
 
     All specs must share ``M`` and ``K`` (they read the same activation
@@ -509,6 +766,17 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
     and weight matrix.  No execution happens here; the returned
     :class:`FabricProgram` feeds :func:`execute_program`,
     :func:`schedule_cost`, and the search.
+
+    With a :class:`FabricSession`, the plan is made against the
+    session's *warm* state: the mode map is pinned by the session's
+    first program, weight tiles already resident in a compute block emit
+    no load (keyed globally by GEMM name + dtype + tile coordinates, so
+    the reuse carries across programs), weight homes persist, and
+    ``GemmSpec.kv`` GEMMs read their weight operand from the session's
+    reserved KV cache with append-addressed delta loads.  A *cold*
+    session (no KV reservations) plans the first program identically to
+    the sessionless path.  Scheduling through a session mutates it (the
+    plan IS the intent to run) -- never pass a live session to a search.
     """
     specs = tuple(specs)
     if not specs:
@@ -521,6 +789,15 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
             raise ValueError(
                 f"fused GEMMs must share activations: {g.name} is "
                 f"{g.M}x{g.K}, expected {M}x{K}")
+        if g.kv_axis not in ("n", "k"):
+            raise ValueError(f"GEMM {g.name}: kv_axis {g.kv_axis!r} "
+                             f"not in ('n', 'k')")
+        if g.kv and session is not None and g.kv not in session.kv:
+            raise ValueError(f"GEMM {g.name}: KV cache {g.kv!r} not "
+                             f"reserved on the session (reserve_kv first)")
+    if session is not None:
+        session._bind(cfg)
+        session._begin_program()
 
     # --- resolve per-GEMM dtypes + per-class K-tiles -----------------------
     infos = tuple(cram.resolve_dtype(g.dtype) or _dtype_info(f"int{nbits}")
@@ -555,31 +832,46 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
     n_tiles = [math.ceil(g.N / cfg.cols) for g in specs]
 
     # --- mode map + placement: size storage demand, place the blocks -------
+    # session KV-backed GEMMs read the reserved cache instead of placed
+    # weight tiles: they join neither the storage sizing nor first-fit
     w_tile_bits = {}
     for g, spec in enumerate(specs):
+        if spec.kv and session is not None:
+            continue
         for ki in range(k_tiles[g]):
             for ni in range(n_tiles[g]):
                 kw = min(K, (ki + 1) * kts[g]) - ki * kts[g]
                 nw = min(spec.N, (ni + 1) * cfg.cols) - ni * cfg.cols
                 w_tile_bits[(g, ki, ni)] = kw * nw * infos[g].bits
     x_row_bits = {c: K * _dtype_info(c).bits for c in classes}
-    total_bits = sum(w_tile_bits.values()) \
-        + M * sum(x_row_bits[c] for c in classes)
-    usable = cfg.usable_blocks          # spares are never scheduled onto
-    n_storage = min(math.ceil(total_bits / cfg.block_bits),
-                    usable - cfg.min_compute_blocks)
-    n_storage = max(n_storage, 0)
-    storage_ids = _storage_block_ids(usable, n_storage, cfg.placement)
-    spare_ids = set(cfg.spare_ids)
-    modes = tuple("spare" if b in spare_ids
-                  else "storage" if b in set(storage_ids) else "compute"
-                  for b in range(cfg.n_blocks))
+    pinned_modes = session is not None and session.modes is not None
+    if pinned_modes:
+        modes = session.modes
+        storage_ids = tuple(b for b, m in enumerate(modes)
+                            if m == "storage")
+        free = session.storage_free
+    else:
+        total_bits = sum(w_tile_bits.values()) \
+            + M * sum(x_row_bits[c] for c in classes)
+        if session is not None:
+            total_bits += sum(m_["window"] * m_["pos_bits"]
+                              for m_ in session.kv.values())
+        usable = cfg.usable_blocks      # spares are never scheduled onto
+        n_storage = min(math.ceil(total_bits / cfg.block_bits),
+                        usable - cfg.min_compute_blocks)
+        n_storage = max(n_storage, 0)
+        storage_ids = _storage_block_ids(usable, n_storage, cfg.placement)
+        spare_ids = set(cfg.spare_ids)
+        modes = tuple("spare" if b in spare_ids
+                      else "storage" if b in set(storage_ids) else "compute"
+                      for b in range(cfg.n_blocks))
+        free = {b: cfg.block_bits for b in storage_ids}
     compute_blocks = tuple(b for b, m in enumerate(modes) if m == "compute")
     n_compute = len(compute_blocks)
+    if n_compute < 1:
+        raise ValueError("session mode map has no compute blocks left")
 
     # --- operand residency: first-fit into the storage blocks ---------------
-    free = {b: cfg.block_bits for b in storage_ids}
-
     def place(bits: int) -> int:
         for b in storage_ids:
             if free[b] >= bits:
@@ -587,9 +879,38 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
                 return b
         return -1                                  # spill off-fabric
 
-    w_home = {key: place(bits) for key, bits in sorted(w_tile_bits.items())}
+    if session is not None and not pinned_modes:
+        # pin the mode map and place KV reservations FIRST, so the
+        # cache lives on-fabric whenever it fits a storage block
+        session.modes = modes
+        session.storage_free = free
+        for meta in session.kv.values():
+            meta["home"] = place(meta["window"] * meta["pos_bits"])
+
+    def w_gkey(g: int, ki: int, ni: int) -> tuple:
+        return ("w", specs[g].name, infos[g].name,
+                ki * kts[g], ni * cfg.cols)
+
+    w_home = {}
+    for key, bits in sorted(w_tile_bits.items()):
+        if session is not None:
+            gk = w_gkey(*key)
+            if gk not in session.w_homes:
+                session.w_homes[gk] = place(bits)
+            w_home[key] = session.w_homes[gk]
+        else:
+            w_home[key] = place(bits)
+    for g, spec in enumerate(specs):       # KV GEMMs: home = the cache
+        if spec.kv and session is not None:
+            home = session.kv[spec.kv]["home"]
+            for ki in range(k_tiles[g]):
+                for ni in range(n_tiles[g]):
+                    w_home[(g, ki, ni)] = home
     x_homes = {(c, m): place(x_row_bits[c])
                for c in classes for m in range(M)}
+    if session is not None:
+        session._x_alloc = [(x_homes[(c, m)], x_row_bits[c])
+                            for c in classes for m in range(M)]
     x_home = tuple(x_homes[(classes[0], m)] for m in range(M))
 
     # --- tile units -> lockstep rounds of n_compute ------------------------
@@ -631,13 +952,43 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
             n0=ni * cfg.cols, n1=min(specs[g].N, (ni + 1) * cfg.cols),
             x_src=x_homes[(infos[g].name, m)], w_src=w_home[(g, ki, ni)])
 
+    def canon(kind: str, key: tuple) -> tuple:
+        """Bookkeeping key for the resident-tile maps: local (kind, key)
+        without a session; program-independent *global* keys with one --
+        weights by (name, dtype, tile), activations scoped to this
+        program's epoch (never warm across programs), kv keys already
+        global."""
+        if session is None:
+            return (kind, key)
+        if kind == "w":
+            g, k0, n0 = key
+            return ("w", specs[g].name, infos[g].name, k0, n0)
+        if kind == "kv":
+            return ("kv",) + tuple(key)
+        if multi:
+            d, m, k0 = key
+        else:
+            m, k0 = key
+            d = infos[0].name
+        return ("x", session.epoch, d, m, k0)
+
     def unit_keys(u):
         g, m, ki, ni = u
-        xkey = ((infos[g].name, m, ki * kts[g]) if multi
-                else (m, ki * kts[g]))
-        return ("x", xkey), ("w", (g, ki * kts[g], ni * cfg.cols))
+        k0, n0 = ki * kts[g], ni * cfg.cols
+        xkey = (infos[g].name, m, k0) if multi else (m, k0)
+        if specs[g].kv:
+            wkk = canon("kv", (specs[g].kv, k0, n0))
+        else:
+            wkk = canon("w", (g, k0, n0))
+        return canon("x", xkey), wkk
 
-    resident: Dict[int, dict] = {b: {} for b in compute_blocks}
+    if session is not None:
+        resident = session.resident
+        for b in compute_blocks:
+            resident.setdefault(b, {})
+    else:
+        resident = {b: {} for b in compute_blocks}
+    rbase = session.clock if session is not None else 0
     rounds: List[Round] = []
     for c, units in segments:
         x_keys = {u: unit_keys(u)[0] for u in units}
@@ -653,23 +1004,44 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
 
             # load stage: group this round's tile reads by (kind, key);
             # each group is ONE fetch broadcast to the blocks that miss
-            order: List[Tuple[str, tuple]] = []
-            needs: Dict[Tuple[str, tuple], list] = {}
+            order: List[tuple] = []
+            needs: Dict[tuple, list] = {}
             pinned: Dict[int, set] = {b: set() for b in compute_blocks}
             for t in tasks:
-                for kind, key, src, bits in _task_operands(t, infos, multi):
-                    kk = (kind, key)
+                for kind, key, src, bits in _task_operands(t, specs, infos,
+                                                           multi):
+                    kk = canon(kind, key)
                     if kk not in needs:
-                        needs[kk] = [src, bits, []]
+                        needs[kk] = [kind, key, src, bits, []]
                         order.append(kk)
-                    if t.block not in needs[kk][2]:
-                        needs[kk][2].append(t.block)
+                    if t.block not in needs[kk][4]:
+                        needs[kk][4].append(t.block)
                     pinned[t.block].add(kk)
 
-            rindex = len(rounds)
+            rindex = rbase + len(rounds)
             loads = []
             for kk in order:
-                src, bits, dsts = needs[kk]
+                kind, lkey, src, bits, dsts = needs[kk]
+                if cfg.residency and kind == "kv" and session is not None:
+                    # append-addressed growing tile: a holder of an
+                    # earlier prefix fetches only the delta; holders of
+                    # distinct prefixes split into separate delta nets
+                    groups: Dict[int, list] = {}
+                    for d in dsts:
+                        seen = resident[d][kk][0] if kk in resident[d] else 0
+                        if seen >= bits:
+                            resident[d][kk][1] = rindex    # full hit
+                        else:
+                            groups.setdefault(seen, []).append(d)
+                    for seen in sorted(groups):
+                        loads.append(TileLoad(
+                            kind="kv", key=lkey, src=src,
+                            dsts=tuple(groups[seen]), bits=bits - seen))
+                        for d in groups[seen]:
+                            resident[d][kk] = [bits, rindex]
+                            _evict_lru(resident[d], cfg.block_bits,
+                                       pinned[d])
+                    continue
                 if cfg.residency:
                     missing = [d for d in dsts if kk not in resident[d]]
                     for d in dsts:
@@ -679,13 +1051,25 @@ def schedule_program(specs: Sequence[GemmSpec], nbits: int,
                     missing = dsts
                 if not missing:
                     continue                               # all-hit: no net
-                loads.append(TileLoad(kind=kk[0], key=kk[1], src=src,
+                loads.append(TileLoad(kind=kind, key=lkey, src=src,
                                       dsts=tuple(missing), bits=bits))
                 if cfg.residency:
                     for d in missing:
                         resident[d][kk] = [bits, rindex]
                         _evict_lru(resident[d], cfg.block_bits, pinned[d])
             rounds.append(Round(tasks=tasks, loads=tuple(loads), dtype=c))
+
+    if session is not None:
+        session.clock = rbase + len(rounds)
+        step = session._step()
+        for rnd in rounds:
+            for ld in rnd.loads:
+                step["fetches"] += 1
+                step["fetch_bits"] += ld.bits
+                if ld.kind == "w":
+                    step["w_fetches"] += 1
+                elif ld.kind == "kv":
+                    step["kv_fetch_bits"] += ld.bits
 
     return FabricProgram(cfg=cfg, nbits=nbits, signed=signed, gemms=specs,
                          kt=kts[0], modes=modes, x_home=x_home,
@@ -723,10 +1107,14 @@ def residency_stats(sched: FabricProgram) -> dict:
         for ld in rnd.loads:
             fetches += 1
             fetch_bits += ld.bits
-            loaded[(ld.kind, tuple(ld.key))] = set(ld.dsts)
+            # kv delta loads of one growing tile may split into several
+            # nets (per distinct resident prefix): union the coverage
+            loaded.setdefault((ld.kind, tuple(ld.key)), set()).update(
+                ld.dsts)
         round_keys = {}
         for t in rnd.tasks:
-            for kind, key, _src, bits in _task_operands(t, infos, multi):
+            for kind, key, _src, bits in _task_operands(t, sched.gemms,
+                                                        infos, multi):
                 kk = (kind, key)
                 reads += 1
                 round_keys[kk] = bits
@@ -751,7 +1139,8 @@ def residency_stats(sched: FabricProgram) -> dict:
 # Fault repair: remap dead blocks onto spares, or reschedule degraded
 # ---------------------------------------------------------------------------
 def repair_program(sched: FabricProgram, dead,
-                   fm: Optional[faults_core.FaultModel] = None
+                   fm: Optional[faults_core.FaultModel] = None,
+                   session: Optional[FabricSession] = None
                    ) -> FabricProgram:
     """Remap dead blocks out of a fabric program (docs/faults.md).
 
@@ -776,6 +1165,14 @@ def repair_program(sched: FabricProgram, dead,
 
     ``fm`` (optional :class:`repro.core.faults.FaultModel`) receives the
     remap count for the health report.
+
+    ``session`` (optional :class:`FabricSession`) is kept consistent
+    with the repair: a spare remap moves the dead block's storage homes
+    onto the spare and DROPS a dead compute block's resident-tile map
+    (the spare starts cold -- reusing the dead block's map on the spare
+    would be silent wrong reuse); a degraded-grid reschedule resets the
+    session entirely (the dense renumbering invalidates every home and
+    resident entry), so the next program re-warms from cold.
     """
     cfg = sched.cfg
     dead = {int(b) for b in dead if 0 <= int(b) < cfg.n_blocks}
@@ -795,6 +1192,8 @@ def repair_program(sched: FabricProgram, dead,
             mapping[b] = s
         if fm is not None:
             fm.remaps += len(mapping)
+        if session is not None:
+            session.apply_remap(mapping)
 
         def remap(b: int) -> int:
             return mapping.get(b, b) if b >= 0 else b
@@ -830,6 +1229,8 @@ def repair_program(sched: FabricProgram, dead,
             f"all {cfg.n_blocks} blocks dead; nothing to reschedule onto")
     if fm is not None:
         fm.remaps += len(dead_used)
+    if session is not None:
+        session.reset()               # dense renumbering: nothing survives
     degraded = dataclasses.replace(
         cfg, n_blocks=alive, spare_blocks=0,
         min_compute_blocks=min(cfg.min_compute_blocks, alive))
@@ -859,7 +1260,9 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
                     x_alt: Optional[Dict[str, np.ndarray]] = None,
                     packed: Optional[bool] = None,
                     faults: Optional[faults_core.FaultModel] = None,
-                    dead_repaired: bool = False) -> List[np.ndarray]:
+                    dead_repaired: bool = False,
+                    session: Optional[FabricSession] = None
+                    ) -> List[np.ndarray]:
     """Run the program's rounds exactly; operands already encoded.
 
     x_u ``(M, K)`` is the shared activation in the *primary* dtype
@@ -899,6 +1302,16 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
     (:func:`repair_program`); an unrepaired dead block that the
     schedule still uses raises
     :class:`repro.core.faults.FabricFaultError`.
+
+    ``session`` (optional :class:`FabricSession`) is consulted only by
+    the fault path: a parity scrub that restores a block from its
+    pristine image re-packed *this launch's* operands only, so any
+    session resident-tile entries for that physical block -- which may
+    describe tiles of OTHER programs scheduled against warm state -- can
+    no longer be trusted and are invalidated
+    (:meth:`FabricSession.invalidate_blocks`); the next program through
+    the session refetches them.  Residency itself was already consumed
+    at schedule time, so execution is unaffected.
     """
     import jax.numpy as jnp
 
@@ -1010,6 +1423,16 @@ def execute_program(sched: FabricProgram, x_u: np.ndarray,
         sig = faults_core.parity_signature(pristine)
         out = faults_core.inject(pristine.copy(), fm, dead_slots=())
         if fm.scrub and launch_idx[0] % fm.scrub_every == 0:
+            if session is not None:
+                # a scrubbed slot's restored image holds only THIS
+                # launch's operands -- drop the physical block's warm
+                # residency so later programs refetch instead of
+                # silently reusing a state the scrub rewrote
+                dirty = faults_core.dirty_blocks(out, sig)
+                if dirty.any():
+                    session.invalidate_blocks(
+                        compute_blocks[s % n_compute]
+                        for s in np.nonzero(dirty)[0])
             out = faults_core.scrub_states(out, pristine, sig, fm)
         launch_idx[0] += 1
         return out
@@ -1122,7 +1545,8 @@ def fabric_matmul(x, w, nbits: int = 4,
                   dtype=None,
                   schedule: Optional[FabricProgram] = None,
                   batch_rounds: Optional[bool] = None,
-                  faults: Optional[faults_core.FaultModel] = None
+                  faults: Optional[faults_core.FaultModel] = None,
+                  session: Optional[FabricSession] = None
                   ) -> FabricResult:
     """Schedule, execute, and account ``(M, K) @ (K, N)`` on the fabric.
 
@@ -1139,11 +1563,14 @@ def fabric_matmul(x, w, nbits: int = 4,
     ``schedule`` reuses a pre-built plan (e.g. the
     :func:`search_schedule` argmin) instead of re-planning; its shape /
     precision must match the operands.  ``batch_rounds`` is forwarded to
-    :func:`execute_schedule`.
+    :func:`execute_schedule`.  ``session`` threads a
+    :class:`FabricSession` through scheduling so sequential calls reuse
+    warm resident tiles (see :func:`fabric_fused_matmul`).
     """
     res = fabric_fused_matmul(x, (w,), nbits=nbits, cfg=cfg, signed=signed,
                               dtypes=(dtype,), program=schedule,
-                              batch_rounds=batch_rounds, faults=faults)
+                              batch_rounds=batch_rounds, faults=faults,
+                              session=session)
     return FabricResult(out=res.outs[0], schedule=res.schedule,
                         cost=res.cost,
                         out_bits=res.bits[0] if res.bits else None)
@@ -1156,7 +1583,9 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
                         dtypes: Optional[Sequence] = None,
                         program: Optional[FabricProgram] = None,
                         batch_rounds: Optional[bool] = None,
-                        faults: Optional[faults_core.FaultModel] = None
+                        faults: Optional[faults_core.FaultModel] = None,
+                        specs: Optional[Sequence[GemmSpec]] = None,
+                        session: Optional[FabricSession] = None
                         ) -> FusedResult:
     """Run several GEMMs sharing activations as ONE fabric program.
 
@@ -1183,6 +1612,22 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
     launch inside :func:`execute_program`, and the returned cost adds
     the honest fault overhead (parity storage, scrub reads, re-fetch
     traffic via :func:`repro.core.costmodel.fault_cost`).
+
+    ``specs`` overrides the auto-built :class:`GemmSpec` tuple -- the
+    way to declare ``kv=`` cache tiles or custom stable names while
+    still letting this call schedule; shapes must match the operands.
+    Ignored when ``program`` is given (the program carries its specs).
+
+    ``session`` threads a :class:`FabricSession` through scheduling:
+    sequential calls against the same session schedule WARM -- weight
+    tiles resident from earlier programs emit no :class:`TileLoad`, and
+    the session's trajectory records the per-call cost.  With both
+    ``program`` and ``session``, the program acts as the plan template
+    (its specs / cfg / precision) and is re-scheduled against the
+    session's current residency -- a pre-tuned plan stays pre-tuned
+    while later steps still get the warm-state savings.  Outputs are
+    bit-identical with or without a session: execution always re-packs
+    from the host-side operands; residency is a cost/IR concept.
     """
     x = np.asarray(x)
     ws = [np.asarray(w) for w in ws]
@@ -1195,12 +1640,22 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
     rinfos = tuple(cram.resolve_dtype(d) or _dtype_info(f"int{nbits}")
                    for d in dtypes)
     if program is None:
-        specs = tuple(GemmSpec(str(names[g]), x.shape[0], x.shape[1],
-                               ws[g].shape[1],
-                               dtype=(rinfos[g].name
-                                      if dtypes[g] is not None else None))
-                      for g in range(len(ws)))
-        sched = schedule_program(specs, nbits, cfg=cfg, signed=signed)
+        if specs is None:
+            specs = tuple(GemmSpec(str(names[g]), x.shape[0], x.shape[1],
+                                   ws[g].shape[1],
+                                   dtype=(rinfos[g].name
+                                          if dtypes[g] is not None
+                                          else None))
+                          for g in range(len(ws)))
+        else:
+            specs = tuple(specs)
+            if len(specs) != len(ws):
+                raise ValueError(
+                    f"{len(specs)} spec(s) for {len(ws)} GEMM(s)")
+            rinfos = tuple(cram.resolve_dtype(s.dtype)
+                           or _dtype_info(f"int{nbits}") for s in specs)
+        sched = schedule_program(specs, nbits, cfg=cfg, signed=signed,
+                                 session=session)
     else:
         sched = program
         shapes = tuple((g.M, g.K, g.N) for g in sched.gemms)
@@ -1214,6 +1669,13 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
                 f"{'s' if sched.signed else 'u'}/{have_dt} does not match "
                 f"operands {want} int{nbits}{'s' if signed else 'u'}"
                 f"/{want_dt}")
+        if session is not None:
+            # the program is the plan template; re-schedule its specs on
+            # its cfg against the session's warm residency so a tuned
+            # plan keeps its geometry AND gets the cross-call savings
+            sched = schedule_program(sched.gemms, sched.nbits,
+                                     cfg=sched.cfg, signed=sched.signed,
+                                     session=session)
     infos = sched.infos()
 
     # encode the shared activation once per dtype class, weights per GEMM
@@ -1246,7 +1708,8 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
     fm = faults if (faults is not None and faults.active) else None
     repaired = False
     if fm is not None and fm.dead_blocks and not fm.healed:
-        sched = repair_program(sched, fm.dead_blocks, fm=fm)
+        sched = repair_program(sched, fm.dead_blocks, fm=fm,
+                               session=session)
         repaired = True
 
     primary = sched.classes[0]
@@ -1256,7 +1719,7 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
     raws = execute_program(sched, x_encs[primary], w_encs,
                            batch_rounds=batch_rounds,
                            x_alt=x_alt or None, faults=fm,
-                           dead_repaired=repaired)
+                           dead_repaired=repaired, session=session)
 
     outs, bits = [], []
     for info, raw, wu in zip(infos, raws, w_encs):
@@ -1282,6 +1745,8 @@ def fabric_fused_matmul(x, ws: Sequence, nbits: int = 4,
             refetch_bits=fm.refetch_bits - refetch0,
             edge_hops=sched.cfg.grid_diameter)
         cost = combine_costs(cost.name + "+faults", [cost, fcost])
+    if session is not None:
+        session.record_cost(cost)
     return FusedResult(outs=tuple(outs), schedule=sched,
                        cost=cost, bits=tuple(bits))
 
@@ -1389,9 +1854,15 @@ def schedule_cost(sched: FabricProgram) -> costmodel.ScheduleCost:
             # the tile spans the load's class K-tile x element width
             if ld.kind == "w":
                 g = ld.key[0]
+                lr += len(ld.dsts) * sched.kt_of(g) * infos[g].bits
+            elif ld.kind == "kv":
+                # append-addressed cache tile: only the DELTA bits since
+                # the destination last saw this tile land in new rows --
+                # history already sits in place and is never rewritten
+                lr += len(ld.dsts) * math.ceil(ld.bits / row_bits)
             else:
                 g = by_name[ld.key[0]] if sched.multi else by_name[primary]
-            lr += len(ld.dsts) * sched.kt_of(g) * infos[g].bits
+                lr += len(ld.dsts) * sched.kt_of(g) * infos[g].bits
         dr = 0.0
         for t in rnd.tasks:
             # result readback crosses the fabric to the host edge: hops
@@ -1658,6 +2129,142 @@ def fabric_attention_scores(q: np.ndarray, k: np.ndarray,
     return scores, int_scores, costs
 
 
+class FabricAttentionBlock:
+    """A full single-head attention block decoding on ONE fabric session.
+
+    Per decode step, four chained programs run on one grid allocation
+    (the session pins the mode map at step 1):
+
+    1. fused **QKV** projection -- ``x (1, d) @ wq/wk/wv (d, hd)``;
+       weight tiles go resident at step 1 and emit NO loads afterwards;
+    2. **scores** ``q (1, hd) @ K^T (hd, t)`` -- K^T is a session KV
+       cache (``GemmSpec(kv="k", kv_axis="n")``): this step's column
+       was *appended* in place, so the schedule charges only the delta;
+    3. host softmax + **AV** ``p (1, t) @ V (t, hd)`` -- V is the
+       second KV cache, growing along the K axis (``kv_axis="k"``);
+    4. **output projection** ``a (1, hd) @ wo (hd, d)``.
+
+    Quantization scales are FIXED after step-1 calibration (``sp`` is
+    analytic: softmax outputs live in [0, 1]): an append-only cache
+    cannot rescale history, so every step quantizes onto the same grid
+    and the whole trajectory is replayable bit-exactly by a host int
+    oracle applying the same scales (see tests).  Execution re-packs the
+    host-side mirrors every launch, so outputs are bit-identical with or
+    without the session -- the session changes the *accounting*
+    (steady-state steps fetch ~nothing).
+    """
+
+    def __init__(self, wq, wk, wv, wo, cfg: FabricConfig = FabricConfig(),
+                 bits: int = 8, window: int = 64,
+                 session: Optional[FabricSession] = None):
+        self.wq, self.wk, self.wv, self.wo = (
+            np.asarray(w, np.float32) for w in (wq, wk, wv, wo))
+        d, hd = self.wq.shape
+        for name, w, shape in (("wk", self.wk, (d, hd)),
+                               ("wv", self.wv, (d, hd)),
+                               ("wo", self.wo, (hd, d))):
+            if w.shape != shape:
+                raise ValueError(f"{name} {w.shape}, expected {shape} "
+                                 f"(wq is {self.wq.shape})")
+        self.d, self.hd = d, hd
+        self.cfg = cfg
+        self.bits = bits
+        self.window = window
+        self.qmax = (1 << (bits - 1)) - 1
+        # stationary weights: quantize ONCE (the session contract -- a
+        # stable name must mean a stable weight)
+        (self._qwq, self.swq), (self._qwk, self.swk), \
+            (self._qwv, self.swv), (self._qwo, self.swo) = (
+                _quantize_sym(w, bits)
+                for w in (self.wq, self.wk, self.wv, self.wo))
+        self.session = session if session is not None else FabricSession(cfg)
+        self.session.reserve_kv("k", pos_bits=hd * bits, window=window)
+        self.session.reserve_kv("v", pos_bits=hd * bits, window=window)
+        # activation scales: calibrated at step 1, then FIXED
+        self.sx = self.sq = self.sk = self.sv = self.so = None
+        self.sp = 1.0 / self.qmax          # softmax probs: analytic scale
+        # host-side mirrors of the on-fabric caches (execution packs
+        # operands from the host; residency/kv is the cost-model view)
+        self.k_cache = np.zeros((hd, 0), np.int64)     # K^T: (hd, t)
+        self.v_cache = np.zeros((0, hd), np.int64)     # V:   (t, hd)
+
+    @property
+    def t(self) -> int:
+        """Positions decoded so far (== both KV cache lengths)."""
+        return self.v_cache.shape[0]
+
+    def _qfix(self, x: np.ndarray, scale: float) -> np.ndarray:
+        q = np.round(np.asarray(x, np.float32) / scale)
+        return np.clip(q, -self.qmax - 1, self.qmax).astype(np.int64)
+
+    def _cal(self, attr: str, x: np.ndarray) -> float:
+        """First step: calibrate the scale; later steps: reuse it."""
+        if getattr(self, attr) is None:
+            amax = max(float(np.abs(x).max()), 1e-8)
+            setattr(self, attr, amax / self.qmax)
+        return getattr(self, attr)
+
+    def decode_step(self, x_t):
+        """One decode position: x_t ``(d,)`` or ``(1, d)`` float.
+
+        Returns ``(y (1, d) float32, step stats dict)`` -- the stats
+        are this step's session bucket (fetches, kv appends, costs).
+        """
+        if self.t >= self.window:
+            raise ValueError(f"KV window exhausted ({self.window})")
+        x = np.asarray(x_t, np.float32).reshape(1, self.d)
+        step = self.session.begin_step()
+        qx = self._qfix(x, self._cal("sx", x))
+
+        qkv = fabric_fused_matmul(
+            qx, (self._qwq, self._qwk, self._qwv), nbits=self.bits,
+            cfg=self.cfg, signed=True, names=("wq", "wk", "wv"),
+            session=self.session)
+        q_f = qkv.outs[0] * (self.sx * self.swq)
+        k_f = qkv.outs[1] * (self.sx * self.swk)
+        v_f = qkv.outs[2] * (self.sx * self.swv)
+
+        qq = self._qfix(q_f, self._cal("sq", q_f))
+        qk = self._qfix(k_f, self._cal("sk", k_f))
+        qv = self._qfix(v_f, self._cal("sv", v_f))
+        # append this position's K column / V row -- grows IN PLACE on
+        # the fabric (the host mirror grows for the next launch's pack)
+        self.k_cache = np.hstack([self.k_cache, qk.T])
+        self.v_cache = np.vstack([self.v_cache, qv])
+        self.session.kv_append("k")
+        self.session.kv_append("v")
+        t = self.t
+
+        scores = fabric_fused_matmul(
+            qq, (self.k_cache,), nbits=self.bits, cfg=self.cfg,
+            signed=True,
+            specs=(GemmSpec("scores", 1, self.hd, t,
+                            kv="k", kv_axis="n"),),
+            session=self.session)
+        s_f = scores.outs[0] * (self.sq * self.sk * self.hd ** -0.5)
+        e = np.exp(s_f - s_f.max(axis=-1, keepdims=True))
+        p = e / e.sum(axis=-1, keepdims=True)
+        qp = self._qfix(p, self.sp)
+
+        av = fabric_fused_matmul(
+            qp, (self.v_cache,), nbits=self.bits, cfg=self.cfg,
+            signed=True,
+            specs=(GemmSpec("av", 1, t, self.hd, kv="v", kv_axis="k"),),
+            session=self.session)
+        a_f = av.outs[0] * (self.sp * self.sv)
+
+        qa = self._qfix(a_f, self._cal("so", a_f))
+        proj = fabric_fused_matmul(
+            qa, (self._qwo,), nbits=self.bits, cfg=self.cfg,
+            signed=True, names=("wo",), session=self.session)
+        y = (proj.outs[0] * (self.so * self.swo)).astype(np.float32)
+        return y, step
+
+    def report(self) -> dict:
+        """Session stats + trajectory (cold vs steady-state)."""
+        return self.session.stats()
+
+
 class FabricLinearProbe:
     """Run one decode step's linear projection(s) on the simulated fabric.
 
@@ -1685,13 +2292,21 @@ class FabricLinearProbe:
     geometry by default (split/placement sweep only: executing a new
     geometry would compile a new program mid-serve); pass
     ``search_geometries`` to widen it.
+
+    ``session=True`` gives the probe its own :class:`FabricSession`
+    spanning the whole serve loop (pass an existing session to share
+    one): each ``observe`` becomes a session *step*, so the probe's
+    stationary weights go resident at step 1 and steps 2..N schedule
+    warm -- ``report()`` then carries the cold-vs-steady trajectory.
+    Outputs stay bit-identical to the sessionless probe.
     """
 
     def __init__(self, w, cfg: FabricConfig = FabricConfig(),
                  bits: int = 8, max_steps: int = 1,
                  autotune: bool = False,
                  search_geometries: Optional[tuple] = None,
-                 faults: Optional[faults_core.FaultModel] = None):
+                 faults: Optional[faults_core.FaultModel] = None,
+                 session=None):
         ws = list(w) if isinstance(w, (list, tuple)) else [w]
         self.ws = tuple(np.asarray(wi, np.float32) for wi in ws)
         self.fused = isinstance(w, (list, tuple))
@@ -1708,6 +2323,13 @@ class FabricLinearProbe:
         self.search: Optional[SearchResult] = None
         self.costs: list = []
         self.outputs: list = []
+        # stationary weights quantize ONCE -- the session residency
+        # contract (stable name = stable weight) and less per-step host
+        # work for sessionless probes too
+        self._qws, self._sws = zip(
+            *(_quantize_sym(wi, self.bits) for wi in self.ws))
+        self.session: Optional[FabricSession] = (
+            FabricSession(cfg) if session is True else session)
         # fault path: inject via `faults` and cross-check every fabric
         # output against the cheap host int matmul of the SAME quantized
         # operands -- an exact oracle, so any escaped corruption is
@@ -1749,12 +2371,17 @@ class FabricLinearProbe:
             return None
         x = np.asarray(x, np.float32)
         qx, sx = _quantize_sym(x, self.bits)
-        qws, sws = zip(*(_quantize_sym(wi, self.bits) for wi in self.ws))
+        qws, sws = self._qws, self._sws
         prog = self._program_for(qx.shape[0], qx.shape[1])
         fm = self.faults if (self.faults is not None
                              and self.faults.active) else None
+        if self.session is not None:
+            self.session.begin_step()
         res = fabric_fused_matmul(qx, qws, nbits=self.bits, cfg=self.cfg,
-                                  signed=True, program=prog, faults=fm)
+                                  signed=True, program=prog, faults=fm,
+                                  names=tuple(f"proj{g}" for g
+                                              in range(len(self.ws))),
+                                  session=self.session)
         if fm is not None:
             for g, (qw, out) in enumerate(zip(qws, res.outs)):
                 expect = qx.astype(np.int64) @ np.asarray(qw, np.int64)
@@ -1778,8 +2405,7 @@ class FabricLinearProbe:
         x = np.asarray(x, np.float32)
         qx, sx = _quantize_sym(x, self.bits)
         ys = []
-        for wi in self.ws:
-            qw, sw = _quantize_sym(wi, self.bits)
+        for qw, sw in zip(self._qws, self._sws):
             ys.append((qx.astype(np.int64) @ qw).astype(np.float32)
                       * (sx * sw))
         return tuple(ys) if self.fused else ys[0]
@@ -1801,6 +2427,8 @@ class FabricLinearProbe:
             return None
         rep = combine_costs("fabric/decode_step", self.costs).report()
         rep.update(self.config_summary())
+        if self.session is not None and self.session.steps:
+            rep["session"] = self.session.trajectory().report()
         if self.faults is not None:
             rep["faults"] = self.faults.stats()
             rep["escaped_outputs"] = self.escaped_outputs

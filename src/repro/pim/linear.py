@@ -54,6 +54,11 @@ class PimConfig:
     # shape).  The search stays on the grid's own block geometry so no
     # extra program compiles are triggered by tuning.
     fabric_autotune: bool = False
+    # fabric mode only: a repro.pim.fabric.FabricSession carrying warm
+    # resident-tile state across sequential fused_linear_apply calls
+    # (the weight-stationary decode loop).  The session is mutable and
+    # compares/hashes by identity, so the config stays frozen/hashable.
+    fabric_session: Optional[object] = None
 
     @property
     def packed(self) -> bool:
@@ -147,7 +152,9 @@ def fused_linear_apply(params_list, x: jnp.ndarray, cfg: PimConfig):
             geometries=((fcfg.rows, fcfg.cols),)).schedule
     res = fabric_mod.fabric_fused_matmul(
         np.asarray(qx, np.int64), [np.asarray(qw, np.int64) for qw in qws],
-        nbits=nbits, cfg=fcfg, signed=True, program=prog)
+        nbits=nbits, cfg=fcfg, signed=True, program=prog,
+        names=tuple(f"proj{g}" for g in range(len(qws))),
+        session=cfg.fabric_session)
     outs = []
     for raw, p in zip(res.outs, params_list):
         acc = jnp.asarray(raw.astype(np.float32)) * p["w_scale"][None, :]

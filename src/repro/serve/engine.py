@@ -95,7 +95,16 @@ class ServeEngine:
         self.probe_fallback = False
         self.stats = {"steps": 0, "deadline_misses": 0,
                       "probe_retries": 0, "probe_fallbacks": 0,
-                      "prefill_compiles": 0}
+                      "prefill_compiles": 0,
+                      # phase timing split (serve_bench artifact): total
+                      # prefill wall-clock + prompt tokens pushed through
+                      # it, and decode wall-clock split cold (first decode
+                      # step: compiles + fabric-session warm-up) vs warm
+                      # (steady state)
+                      "prefill_s": 0.0, "prefill_tokens": 0,
+                      "decode_s": 0.0, "decode_tokens": 0,
+                      "decode_cold_s": 0.0, "decode_warm_s": 0.0,
+                      "decode_warm_steps": 0}
 
     def add(self, req: Request):
         self.queue.append(req)
@@ -103,6 +112,7 @@ class ServeEngine:
     def _admit(self):
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
+                tp0 = time.perf_counter()
                 req = self.queue.pop(0)
                 # pad the prompt to a power-of-two bucket: ragged arrival
                 # traffic hits a handful of compiled prefill shapes
@@ -140,6 +150,8 @@ class ServeEngine:
                 self.slots[i] = req
                 self.pos[i] = plen
                 self.tokens[i, 0] = nxt
+                self.stats["prefill_s"] += time.perf_counter() - tp0
+                self.stats["prefill_tokens"] += plen
 
     def _observe_guarded(self, x):
         """Probe observe with bounded retry-with-backoff, then fallback.
@@ -178,6 +190,8 @@ class ServeEngine:
                 self.slots[i] = None
         if all(s is None for s in self.slots):
             return finished
+        td0 = time.perf_counter()
+        active = sum(1 for s in self.slots if s is not None)
         if self.fabric_probe is not None and not self.fabric_probe.done \
                 and not self.probe_fallback:
             # this step's real activations (token embeddings of the
@@ -205,6 +219,17 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self.slots[i] = None
+        # decode phase split: the FIRST decode step pays the one-time
+        # costs (decode_step jit compile, fabric-session weight warm-up);
+        # later steps are the steady state the session keeps warm
+        dt = time.perf_counter() - td0
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += active
+        if self._step_count == 0:
+            self.stats["decode_cold_s"] += dt
+        else:
+            self.stats["decode_warm_s"] += dt
+            self.stats["decode_warm_steps"] += 1
         self._step_count += 1
         self.stats["steps"] += 1
         if self.step_deadline_ms is not None:

@@ -1,0 +1,422 @@
+"""Persistent fabric sessions: cross-program residency, the on-fabric
+KV cache, the per-step cost trajectory, and the attention decode block.
+
+The contract under test (docs/fabric.md "Persistent sessions"):
+
+* scheduling through a :class:`FabricSession` carries the resident-tile
+  maps ACROSS programs -- a weight tile fetched in decode step 1 emits
+  no :class:`TileLoad` in steps 2..N;
+* execution stays bit-identical with or without a session, for every
+  dtype (residency is accounting, never arithmetic);
+* LRU eviction keeps working across program boundaries (an evicted
+  tile is refetched), ``reset()`` restores cold behaviour, and ``kv``
+  tiles are append-addressed and never LRU-evicted;
+* the trajectory splits cold step-1 cost from the steady state.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.pim import fabric
+from repro.pim.fabric import (FabricConfig, FabricSession, GemmSpec)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _grid(n_blocks=8, **kw):
+    kw.setdefault("rows", 128)
+    kw.setdefault("cols", 8)
+    return FabricConfig(n_blocks=n_blocks, **kw)
+
+
+def _ints(rng, shape, nbits):
+    lo = -(1 << (nbits - 1))
+    return rng.integers(lo, -lo, shape).astype(np.int64)
+
+
+def _w_loads(sched):
+    return [ld for r in sched.rounds for ld in r.loads if ld.kind == "w"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-program residency
+# ---------------------------------------------------------------------------
+def test_second_program_emits_zero_weight_loads(rng):
+    cfg = _grid(min_compute_blocks=4)
+    sess = FabricSession(cfg)
+    specs = (GemmSpec("w0", 1, 16, 8),)
+    s1 = fabric.schedule_program(specs, 4, cfg=cfg, signed=True,
+                                 session=sess)
+    assert len(_w_loads(s1)) > 0                      # cold: tiles fetched
+    s2 = fabric.schedule_program(specs, 4, cfg=cfg, signed=True,
+                                 session=sess)
+    assert _w_loads(s2) == []                         # warm: all resident
+    # activations are per-program payloads: still fetched every time
+    assert any(ld.kind == "x" for r in s2.rounds for ld in r.loads)
+
+
+def test_fused_qkv_warm_across_steps(rng):
+    cfg = FabricConfig(n_blocks=8)
+    sess = FabricSession(cfg)
+    ws = [_ints(rng, (16, 8), 8) for _ in range(3)]
+    for step in range(3):
+        sess.begin_step()
+        x = _ints(rng, (1, 16), 8)
+        fabric.fabric_fused_matmul(x, ws, nbits=8, cfg=cfg, signed=True,
+                                   names=("wq", "wk", "wv"), session=sess)
+    traj = sess.trajectory()
+    assert traj.w_fetches[0] > 0
+    assert traj.w_fetches[1] == traj.w_fetches[2] == 0
+    assert traj.steady_fetch_reduction > 1.0
+
+
+def test_cold_session_plans_like_sessionless(rng):
+    """The first program of a session with no KV reservations must be
+    the sessionless plan exactly (mode map, homes, rounds)."""
+    cfg = _grid()
+    specs = (GemmSpec("a", 2, 20, 8), GemmSpec("b", 2, 20, 16))
+    plain = fabric.schedule_program(specs, 4, cfg=cfg, signed=True)
+    warm = fabric.schedule_program(specs, 4, cfg=cfg, signed=True,
+                                   session=FabricSession(cfg))
+    assert plain.modes == warm.modes
+    assert plain.x_home == warm.x_home
+    assert plain.w_home == warm.w_home
+    assert len(plain.rounds) == len(warm.rounds)
+    for rp, rw in zip(plain.rounds, warm.rounds):
+        assert rp.tasks == rw.tasks
+        assert [(ld.kind, ld.src, ld.dsts, ld.bits) for ld in rp.loads] \
+            == [(ld.kind, ld.src, ld.dsts, ld.bits) for ld in rw.loads]
+
+
+@pytest.mark.parametrize("nbits,dtype", [(4, None), (8, None),
+                                         (8, "bf16")])
+def test_bit_identity_vs_sessionless(rng, nbits, dtype):
+    # default geometry: the bf16 fused-MAC program needs tall blocks
+    cfg = FabricConfig(n_blocks=8)
+    sess = FabricSession(cfg)
+    K, N = 20, 12
+    if dtype is None:
+        w = _ints(rng, (K, N), nbits)
+        xs = [_ints(rng, (2, K), nbits) for _ in range(3)]
+    else:
+        w = rng.normal(size=(K, N)).astype(np.float32)
+        xs = [rng.normal(size=(2, K)).astype(np.float32) for _ in range(3)]
+    for x in xs:
+        sess.begin_step()
+        out = fabric.fabric_matmul(x, w, nbits=nbits, cfg=cfg, signed=True,
+                                   dtype=dtype, session=sess).out
+        ref = fabric.fabric_matmul(x, w, nbits=nbits, cfg=cfg, signed=True,
+                                   dtype=dtype).out
+        np.testing.assert_array_equal(out, ref)
+    assert sess.trajectory().w_fetches[-1] == 0
+
+
+def test_lru_eviction_across_program_boundary_refetches(rng):
+    """Weights too big to coexist in the resident maps evict each other
+    across programs -- the returning weight is REFETCHED, not silently
+    reused."""
+    # rows=128/cols=8 -> 1024-bit blocks; each int8 weight below spans
+    # ~4096 bits of tiles, so A and B cannot both stay resident
+    cfg = _grid(min_compute_blocks=2)
+    sess = FabricSession(cfg)
+    sa = (GemmSpec("wa", 1, 16, 32),)
+    sb = (GemmSpec("wb", 1, 16, 32),)
+    fabric.schedule_program(sa, 8, cfg=cfg, signed=True, session=sess)
+    s2 = fabric.schedule_program(sb, 8, cfg=cfg, signed=True, session=sess)
+    assert len(_w_loads(s2)) > 0                     # B displaced A
+    s3 = fabric.schedule_program(sa, 8, cfg=cfg, signed=True, session=sess)
+    assert len(_w_loads(s3)) > 0                     # A had to come back
+
+
+def test_session_reset_restores_cold(rng):
+    cfg = _grid()
+    sess = FabricSession(cfg)
+    specs = (GemmSpec("w0", 1, 16, 8),)
+    cold = len(_w_loads(fabric.schedule_program(specs, 4, cfg=cfg,
+                                                signed=True, session=sess)))
+    assert _w_loads(fabric.schedule_program(specs, 4, cfg=cfg, signed=True,
+                                            session=sess)) == []
+    sess.reset()
+    assert sess.programs == 0 and sess.modes is None
+    again = len(_w_loads(fabric.schedule_program(specs, 4, cfg=cfg,
+                                                 signed=True,
+                                                 session=sess)))
+    assert again == cold
+
+
+def test_session_grid_is_pinned():
+    sess = FabricSession(_grid())
+    fabric.schedule_program((GemmSpec("g", 1, 16, 8),), 4, cfg=_grid(),
+                            signed=True, session=sess)
+    with pytest.raises(ValueError, match="bound to grid"):
+        fabric.schedule_program((GemmSpec("g", 1, 16, 8),), 4,
+                                cfg=_grid(n_blocks=16), signed=True,
+                                session=sess)
+
+
+def test_cold_session_adopts_autotuned_grid(rng):
+    """A cold, unpinned session may adopt a different cfg (the autotune
+    handshake: search picks the split, the session binds to it)."""
+    sess = FabricSession(_grid())
+    other = _grid(min_compute_blocks=4)
+    sched = fabric.schedule_program((GemmSpec("g", 1, 16, 8),), 4,
+                                    cfg=other, signed=True, session=sess)
+    assert sess.cfg == other and sched.cfg == other
+
+
+# ---------------------------------------------------------------------------
+# KV tiles: append-addressed, session-pinned, never LRU-evicted
+# ---------------------------------------------------------------------------
+def test_kv_append_delta_loads(rng):
+    """A growing KV operand only moves the DELTA each step: holders of
+    an earlier prefix fetch bits - seen, history is never refetched."""
+    cfg = FabricConfig(n_blocks=8)
+    hd, bits, window = 8, 8, 6
+    sess = FabricSession(cfg)
+    sess.reserve_kv("k", pos_bits=hd * bits, window=window)
+    # the first program places the reservation (kv homes are assigned
+    # during storage sizing); a warmup GEMM stands in for the QKV step
+    fabric.schedule_program((GemmSpec("warmup", 1, 8, 8),), bits,
+                            cfg=cfg, signed=True, session=sess)
+    kcache = np.zeros((hd, 0), np.int64)
+    kv_bits = []
+    for t in range(1, window + 1):
+        sess.begin_step()
+        kcache = np.hstack([kcache, _ints(rng, (hd, 1), bits)])
+        sess.kv_append("k")
+        q = _ints(rng, (1, hd), bits)
+        res = fabric.fabric_fused_matmul(
+            q, (kcache,), nbits=bits, cfg=cfg, signed=True,
+            specs=(GemmSpec("scores", 1, hd, t, kv="k", kv_axis="n"),),
+            session=sess)
+        np.testing.assert_array_equal(res.outs[0], q @ kcache)
+        kv_bits.append(sess.steps[-1]["kv_fetch_bits"])
+    # step 1 fetches one position; every later step only the new column
+    assert kv_bits[0] == hd * bits
+    assert all(b == hd * bits for b in kv_bits[1:])
+    assert sess.kv_len("k") == window
+    # the cache tile is pinned: it survives in some compute block's map
+    assert any(kk[0] == "kv" for res in sess.resident.values()
+               for kk in res)
+
+
+def test_kv_axis_k_grows_along_contraction(rng):
+    """kv_axis='k' (the AV cache): K grows per step, same delta math."""
+    cfg = FabricConfig(n_blocks=8)
+    hd, bits, window = 8, 8, 5
+    sess = FabricSession(cfg)
+    sess.reserve_kv("v", pos_bits=hd * bits, window=window)
+    fabric.schedule_program((GemmSpec("warmup", 1, 8, 8),), bits,
+                            cfg=cfg, signed=True, session=sess)
+    vcache = np.zeros((0, hd), np.int64)
+    for t in range(1, window + 1):
+        sess.begin_step()
+        vcache = np.vstack([vcache, _ints(rng, (1, hd), bits)])
+        sess.kv_append("v")
+        p = _ints(rng, (1, t), bits)
+        res = fabric.fabric_fused_matmul(
+            p, (vcache,), nbits=bits, cfg=cfg, signed=True,
+            specs=(GemmSpec("av", 1, t, hd, kv="v", kv_axis="k"),),
+            session=sess)
+        np.testing.assert_array_equal(res.outs[0], p @ vcache)
+    # steady state moves only the appended row, not the whole history
+    assert sess.steps[-1]["kv_fetch_bits"] <= 2 * hd * bits
+
+
+def test_kv_reservation_rules():
+    cfg = FabricConfig(n_blocks=8)
+    sess = FabricSession(cfg)
+    sess.reserve_kv("k", pos_bits=64, window=4)
+    with pytest.raises(ValueError, match="already reserved"):
+        sess.reserve_kv("k", pos_bits=64, window=4)
+    with pytest.raises(ValueError, match="degenerate"):
+        sess.reserve_kv("z", pos_bits=0, window=4)
+    with pytest.raises(ValueError, match="not placed"):
+        sess.kv_append("k")                     # before the first program
+    with pytest.raises(ValueError, match="not .* reserved|not reserved"):
+        fabric.schedule_program(
+            (GemmSpec("s", 1, 8, 1, kv="nope"),), 8, cfg=cfg,
+            signed=True, session=sess)
+    fabric.schedule_program((GemmSpec("g", 1, 8, 8),), 8, cfg=cfg,
+                            signed=True, session=sess)
+    with pytest.raises(ValueError, match="mode map is pinned"):
+        sess.reserve_kv("v", pos_bits=64, window=4)
+    assert sess.kv["k"]["home"] is not None     # placed by program 1
+    for _ in range(4):
+        sess.kv_append("k")
+    with pytest.raises(ValueError, match="overflows"):
+        sess.kv_append("k")
+
+
+def test_kv_spec_validation():
+    with pytest.raises(ValueError, match="kv_axis"):
+        fabric.schedule_program(
+            (GemmSpec("s", 1, 8, 1, kv="k", kv_axis="m"),), 8,
+            cfg=FabricConfig(n_blocks=8), signed=True)
+
+
+# ---------------------------------------------------------------------------
+# Trajectory (core.costmodel.CostTrajectory)
+# ---------------------------------------------------------------------------
+def test_trajectory_cold_vs_steady(rng):
+    cfg = _grid()
+    sess = FabricSession(cfg)
+    w = _ints(rng, (10, 64), 4)
+    for _ in range(4):
+        sess.begin_step()
+        fabric.fabric_matmul(_ints(rng, (1, 10), 4), w, nbits=4, cfg=cfg,
+                             signed=True, session=sess)
+    traj = sess.trajectory()
+    assert traj.steps == 4
+    assert traj.cold_fetches > traj.steady_fetches
+    assert traj.steady_fetch_reduction >= 5.0       # the gated shape
+    assert traj.cold_energy_pj > traj.steady_energy_pj > 0
+    assert traj.cold_overlapped_cycles > traj.steady_overlapped_cycles
+    rep = traj.report()
+    for key in ("per_step_fetches", "cold_fetches", "steady_fetches",
+                "steady_fetch_reduction", "cold_energy_pj",
+                "steady_energy_pj"):
+        assert key in rep
+    assert rep["per_step_fetches"][1:] == [1, 1, 1]
+
+
+def test_trajectory_single_step_is_neutral():
+    traj = costmodel.CostTrajectory(name="t", costs=(None,), fetches=(7,),
+                                    fetch_bits=(100.0,), w_fetches=(3,))
+    assert traj.steady_fetch_reduction == 1.0
+    assert traj.steady_w_fetch_reduction == 1.0
+
+
+def test_trajectory_zero_steady_weights_stays_finite():
+    traj = costmodel.CostTrajectory(
+        name="t", costs=(None, None, None), fetches=(9, 1, 1),
+        fetch_bits=(0.0, 0.0, 0.0), w_fetches=(8, 0, 0))
+    assert traj.steady_w_fetch_reduction == 8.0
+    assert traj.steady_fetch_reduction == 9.0
+
+
+def test_session_stats_shape(rng):
+    cfg = _grid()
+    sess = FabricSession(cfg)
+    sess.begin_step()
+    fabric.fabric_matmul(_ints(rng, (1, 10), 4), _ints(rng, (10, 8), 4),
+                         nbits=4, cfg=cfg, signed=True, session=sess)
+    st = sess.stats()
+    assert st["programs"] == 1 and st["steps"] == 1
+    assert st["resident_tiles"] > 0
+    assert "trajectory" in st
+
+
+# ---------------------------------------------------------------------------
+# Attention block: QKV + scores + AV + out-proj on one session
+# ---------------------------------------------------------------------------
+def _oracle_decode(blk, xs):
+    """Host int replay of FabricAttentionBlock with the SAME fixed
+    scales -- the bit-exactness oracle."""
+    hd = blk.hd
+    kc = np.zeros((hd, 0), np.int64)
+    vc = np.zeros((0, hd), np.int64)
+    ys = []
+    for x in xs:
+        x = np.asarray(x, np.float32).reshape(1, -1)
+        qx = blk._qfix(x, blk.sx)
+        q = blk._qfix(qx @ blk._qwq * (blk.sx * blk.swq), blk.sq)
+        k = blk._qfix(qx @ blk._qwk * (blk.sx * blk.swk), blk.sk)
+        v = blk._qfix(qx @ blk._qwv * (blk.sx * blk.swv), blk.sv)
+        kc = np.hstack([kc, k.T])
+        vc = np.vstack([vc, v])
+        s = (q @ kc) * (blk.sq * blk.sk * hd ** -0.5)
+        e = np.exp(s - s.max(axis=-1, keepdims=True))
+        p = blk._qfix(e / e.sum(axis=-1, keepdims=True), blk.sp)
+        a = blk._qfix((p @ vc) * (blk.sp * blk.sv), blk.so)
+        ys.append((a @ blk._qwo * (blk.so * blk.swo)).astype(np.float32))
+    return ys
+
+
+def test_attention_block_matches_host_oracle(rng):
+    d, hd = 16, 8
+    cfg = FabricConfig(n_blocks=8)
+    wq, wk, wv = (rng.normal(size=(d, hd)).astype(np.float32) * 0.3
+                  for _ in range(3))
+    wo = rng.normal(size=(hd, d)).astype(np.float32) * 0.3
+    blk = fabric.FabricAttentionBlock(wq, wk, wv, wo, cfg=cfg, bits=8,
+                                      window=6)
+    xs = [rng.normal(size=(d,)).astype(np.float32) for _ in range(4)]
+    ys = [blk.decode_step(x)[0] for x in xs]
+    # same fixed scales, same int ops -> bit-exact replay
+    for y, ref in zip(ys, _oracle_decode(blk, xs)):
+        np.testing.assert_array_equal(y, ref)
+
+    traj = blk.session.trajectory()
+    # weight-stationary: QKV + wo tiles fetched once, never again
+    assert traj.w_fetches[0] > 0
+    assert all(wf == 0 for wf in traj.w_fetches[1:])
+    # the KV caches live on-fabric and grew in place
+    kv = blk.session.stats()["kv"]
+    assert kv["k"]["home"] >= 0 and kv["v"]["home"] >= 0
+    assert kv["k"]["len"] == kv["v"]["len"] == 4
+    assert blk.report()["trajectory"]["steady_fetch_reduction"] > 1.0
+
+
+def test_attention_block_window_and_shapes(rng):
+    d, hd = 8, 4
+    wq = rng.normal(size=(d, hd)).astype(np.float32)
+    with pytest.raises(ValueError, match="wo"):
+        fabric.FabricAttentionBlock(wq, wq, wq, wq,
+                                    cfg=FabricConfig(n_blocks=8))
+    blk = fabric.FabricAttentionBlock(
+        wq, wq, wq, rng.normal(size=(hd, d)).astype(np.float32),
+        cfg=FabricConfig(n_blocks=8), window=1)
+    blk.decode_step(rng.normal(size=(d,)).astype(np.float32))
+    with pytest.raises(ValueError, match="window"):
+        blk.decode_step(rng.normal(size=(d,)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Probe + PimConfig plumbing
+# ---------------------------------------------------------------------------
+def test_probe_with_session_bit_identical_and_reports(rng):
+    ws = [rng.normal(size=(16, 8)).astype(np.float32) for _ in range(3)]
+    cfg = FabricConfig(n_blocks=8)
+    ps = fabric.FabricLinearProbe(ws, cfg=cfg, bits=8, max_steps=3,
+                                  session=True)
+    p0 = fabric.FabricLinearProbe(ws, cfg=cfg, bits=8, max_steps=3)
+    for _ in range(3):
+        x = rng.normal(size=(2, 16)).astype(np.float32)
+        ys = ps.observe(x)
+        y0 = p0.observe(x)
+        for a, b in zip(ys, y0):
+            np.testing.assert_array_equal(a, b)
+    rep = ps.report()
+    assert rep["session"]["steps"] == 3
+    assert rep["session"]["per_step_w_fetches"][1:] == [0, 0]
+    assert "session" not in p0.report()
+
+
+def test_fused_linear_apply_with_session(rng):
+    import jax.numpy as jnp
+
+    from repro.pim.linear import PimConfig, fused_linear_apply, pack_linear
+
+    fcfg = FabricConfig(n_blocks=8)
+    sess = FabricSession(fcfg)
+    # pack_linear bit-plane packs along K: needs a multiple of 32
+    packed = [pack_linear({"w": jnp.asarray(
+        rng.normal(size=(32, 8)).astype(np.float32))},
+        PimConfig(weight_bits=8)) for _ in range(2)]
+    cfg_s = PimConfig(mode="fabric", weight_bits=8, act_bits=8,
+                      fabric=fcfg, fabric_session=sess)
+    cfg_0 = PimConfig(mode="fabric", weight_bits=8, act_bits=8, fabric=fcfg)
+    assert hash(cfg_s) is not None              # frozen config stays usable
+    for _ in range(2):
+        sess.begin_step()
+        x = jnp.asarray(rng.normal(size=(1, 32)).astype(np.float32))
+        ys = fused_linear_apply(packed, x, cfg_s)
+        y0 = fused_linear_apply(packed, x, cfg_0)
+        for a, b in zip(ys, y0):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert sess.trajectory().w_fetches[1] == 0

@@ -284,6 +284,80 @@ def test_spare_blocks_config_validation():
 
 
 # ---------------------------------------------------------------------------
+# Fault repairs vs persistent sessions (docs/fabric.md + docs/faults.md):
+# a repair that rewrites or restores a block must never leave a stale
+# resident-tile entry behind -- stale residency is silent wrong reuse
+# in the cost model on the NEXT decode step.
+# ---------------------------------------------------------------------------
+def test_spare_remap_invalidates_session_residency(rng):
+    x, w = _gemm(rng)
+    cfg = _grid(8, spare_blocks=2)
+    sess = fabric.FabricSession(cfg)
+    sess.begin_step()
+    fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg, session=sess)
+    dead = next(b for b, r in sess.resident.items() if r)
+    fm = FaultModel(dead_blocks=(dead,), seed=0)
+    sess.begin_step()
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg,
+                               faults=fm, session=sess)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert fm.remaps == 1
+    # the dead block's map is gone; its spare starts COLD (it inherited
+    # the mode and the tasks, not the tiles)
+    assert dead not in sess.resident
+    spare = next(s for s in cfg.spare_ids if sess.modes[s] != "spare")
+    assert sess.resident.get(spare) == {}
+    assert sess.modes[dead] == "dead"
+    # no surviving home pointer may still name the dead block
+    assert dead not in sess.w_homes.values()
+    assert all(b != dead for b, _ in sess._x_alloc)
+
+
+def test_scrub_restore_invalidates_session_residency(rng):
+    """A pristine-image scrub restore refetches ONLY that launch's
+    packed operands -- everything else the block's resident map claimed
+    must be dropped, so the next step refetches instead of reusing."""
+    x, w = _gemm(rng)
+    cfg = _grid()
+    sess = fabric.FabricSession(cfg)
+    for _ in range(2):
+        sess.begin_step()
+        fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg,
+                             session=sess)
+    assert sess.steps[-1]["w_fetches"] == 0        # warm before the fault
+    fm = FaultModel(bit_rate=2e-2, seed=0)
+    sess.begin_step()
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg,
+                               faults=fm, session=sess)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert fm.injected_flips > 0 and fm.escaped == 0
+    sess.begin_step()
+    fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg, session=sess)
+    assert sess.steps[-1]["w_fetches"] > 0         # scrubbed -> refetch
+
+
+def test_degraded_reschedule_resets_session(rng):
+    """Not enough spares: the dense renumbering of the degraded grid
+    invalidates every home and resident entry, so the whole session
+    goes back to cold (and re-warms on the next program)."""
+    x, w = _gemm(rng)
+    cfg = _grid(8)
+    sess = fabric.FabricSession(cfg)
+    sess.begin_step()
+    fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg, session=sess)
+    assert sess.programs == 1
+    fm = FaultModel(dead_blocks=(1, 3), seed=0)
+    sess.begin_step()
+    res = fabric.fabric_matmul(x, w, nbits=4, signed=True, cfg=cfg,
+                               faults=fm, session=sess)
+    assert np.array_equal(np.asarray(res.out, np.int64), x @ w)
+    assert res.schedule.cfg.n_blocks == 6
+    # the degraded replan ran sessionless: the session is fully cold
+    assert sess.modes is None and sess.programs == 0
+    assert not sess.resident and not sess.w_homes
+
+
+# ---------------------------------------------------------------------------
 # Cost model
 # ---------------------------------------------------------------------------
 def test_fault_cost_pins():
