@@ -24,8 +24,30 @@ the simulated Compute RAM grid, two ways:
   projection weights, asserted bit-identical per step to the
   sessionless fabric path (residency is accounting, never arithmetic).
 
+The **load sweep** drives hundreds of seeded Poisson arrivals through
+the paged continuous-batching engine (chunked prefill, deadline-aware
+admission, a couple of deliberately oversize prompts) and rolls the
+per-request timestamps into serving SLOs: p50/p99 decode ms-per-token
+and aggregate tokens/sec.  Its hard gates are integrity-first:
+
+* every completed request's token chain must be **bit-identical** to a
+  sequential single-slot reference run (batching, chunking, admission
+  order, and preemption may never change tokens);
+* the oversize prompts must be **rejected with accounting** on both
+  legs (the old engine crashed);
+* a **pressure** sub-leg with a deliberately undersized page pool must
+  preempt at least once and still match the reference chains
+  (recompute-style preemption is lossless under greedy decoding);
+* ``--max-p99-ms-per-token`` / ``--min-tokens-per-s`` bound the SLO
+  numbers (loose on shared CI -- wall-clock there is noisy; the chain
+  identity above is the real regression tripwire).
+
+On gate failure the sweep payload is preserved to
+``BENCH_serve_repro.json`` (CI uploads it) and no artifact is written.
+
 CLI: ``python benchmarks/serve_bench.py [--quick] [--json PATH]
-[--min-tokens N]``.
+[--min-tokens N] [--requests N] [--seed S]
+[--max-p99-ms-per-token MS] [--min-tokens-per-s TPS]``.
 """
 
 import argparse
@@ -118,7 +140,87 @@ def _bench_pim_decode(params, quick=False):
     return rep
 
 
-def run(print_fn=print, json_path=BENCH_JSON, quick=False):
+def _bench_load_sweep(model, cfg, params, quick, n_requests, seed,
+                      print_fn=print):
+    """Seeded Poisson load sweep vs a sequential reference.
+
+    One generated load set drives three engines: a single-slot
+    sequential reference (defines the truth token chain per request
+    id), the gated continuous-batching sweep (chunked prefill +
+    deadline-aware admission), and a page-pressure sub-leg whose
+    undersized pool forces preemption.  Chains must match the
+    reference everywhere; latency rollups come from the sweep leg.
+    """
+    from repro.serve import loadgen
+
+    capacity = 64
+    lcfg = loadgen.LoadConfig(
+        n_requests=n_requests, seed=seed, arrival="poisson", rate=2.0,
+        prompt_len=(4, 16), max_new=(2, 8), vocab=cfg.vocab,
+        deadline_frac=0.25,
+        # a couple of oversize prompts per sweep: the admission-
+        # rejection path runs under real traffic on every leg
+        oversize_frac=2.5 / n_requests, oversize_len=capacity + 1)
+    arrivals = loadgen.generate(lcfg)
+
+    # --- sequential reference: 1 slot, whole prefill, no arrival noise
+    ref_eng = ServeEngine(model, params, batch_slots=1, capacity=capacity)
+    ref = loadgen.drive(
+        ref_eng, [(0.0, r) for _, r in loadgen.clone_requests(arrivals)])
+    truth = {r.rid: list(r.out) for r in ref["done"]}
+    ref_rejected = {r.rid for r in ref_eng.rejected}
+
+    # --- the gated sweep: paged continuous batching under open load
+    slots = 4 if quick else 8
+    eng = ServeEngine(model, params, batch_slots=slots, capacity=capacity,
+                      prefill_chunk=16, admission="deadline")
+    rec = loadgen.drive(eng, loadgen.clone_requests(arrivals))
+    rep = loadgen.latency_report(rec["done"], rec["wall_s"], eng)
+    chains_ok = ({r.rid: list(r.out) for r in rec["done"]} == truth)
+    rejects_ok = ({r.rid for r in eng.rejected} == ref_rejected
+                  and (len(ref_rejected) > 0) == (lcfg.oversize_frac > 0))
+
+    # --- pressure sub-leg: undersized pool -> preemption, same chains
+    n_press = min(40, n_requests)
+    press_arr = [(at, r) for at, r in loadgen.clone_requests(arrivals)
+                 if r.rid < n_press]
+    peng = ServeEngine(model, params, batch_slots=4, capacity=capacity,
+                       page_size=8, num_pages=6, prefill_chunk=8)
+    prec = loadgen.drive(peng, press_arr)
+    press_ok = all(truth.get(r.rid) == list(r.out) for r in prec["done"]) \
+        and {r.rid for r in prec["done"]} == \
+            {rid for rid in truth if rid < n_press}
+
+    rep.update({
+        "arrival": lcfg.arrival, "rate": lcfg.rate, "seed": seed,
+        "requests": n_requests, "slots": slots,
+        "prefill_chunk": 16, "admission": "deadline",
+        "chains_bit_identical": bool(chains_ok),
+        "rejections_match_reference": bool(rejects_ok),
+        "kv": eng.kv_report(),
+        "pressure": {
+            "requests": n_press,
+            "num_pages": 6, "page_size": 8,
+            "preemptions": peng.stats["preemptions"],
+            "resumes": peng.stats["resumes"],
+            "chains_bit_identical": bool(press_ok),
+            "kv_high_water_pages":
+                peng.kv.stats["high_water_pages"],
+        },
+    })
+    print_fn(f"serve/load_sweep,{rep['p99_ms']},p99_ms_per_token;"
+             f"requests={n_requests};done={rep['requests_done']};"
+             f"tokens_per_s={rep['tokens_per_s']};"
+             f"p50={rep['p50_ms']};rejected={rep['rejected']};"
+             f"chains_identical={chains_ok}")
+    print_fn(f"serve/load_pressure,{peng.stats['preemptions']},"
+             f"preemptions;resumes={peng.stats['resumes']};"
+             f"chains_identical={press_ok}")
+    return rep
+
+
+def run(print_fn=print, json_path=BENCH_JSON, quick=False,
+        n_requests=None, seed=0):
     from repro.pim import fabric as fabric_mod
 
     cfg = configs.get_config("qwen2-0.5b", smoke=True)
@@ -167,6 +269,12 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
              f"steady_fetch_reduction;steps={pim['steps']};"
              f"bit_identical={pim['bit_identical_vs_sessionless']}")
 
+    # --- load sweep: seeded open-loop traffic through the paged engine
+    if n_requests is None:
+        n_requests = 120 if quick else 500
+    load = _bench_load_sweep(model, cfg, params, quick, n_requests, seed,
+                             print_fn=print_fn)
+
     payload = {
         "quick": quick,
         "model": "qwen2-0.5b-smoke",
@@ -188,6 +296,7 @@ def run(print_fn=print, json_path=BENCH_JSON, quick=False):
             "probe": probe.report(),
         },
         "pim_decode": pim,
+        "load": load,
     }
     if json_path:
         bench_util.atomic_write_json(json_path, payload, print_fn,
@@ -213,6 +322,31 @@ def check_fabric_identity(payload: dict):
     return bad
 
 
+def check_load(payload: dict, max_p99_ms=None, min_tokens_per_s=None):
+    """The load sweep's integrity gates (always on) plus the optional
+    latency/throughput SLO bounds."""
+    load = payload["load"]
+    bad = []
+    if not load["chains_bit_identical"]:
+        bad.append("load sweep token chains diverge from the sequential "
+                   "reference")
+    if not load["rejections_match_reference"]:
+        bad.append("oversize-prompt rejections differ between the sweep "
+                   "and the reference leg")
+    press = load["pressure"]
+    if press["preemptions"] < 1:
+        bad.append("pressure leg never preempted: the undersized pool "
+                   "is not exercising the preemption path")
+    if not press["chains_bit_identical"]:
+        bad.append("pressure-leg chains diverge after preemption/resume")
+    if max_p99_ms is not None and load["p99_ms"] > max_p99_ms:
+        bad.append(f"p99 ms/token {load['p99_ms']} > {max_p99_ms}")
+    if min_tokens_per_s is not None \
+            and load["tokens_per_s"] < min_tokens_per_s:
+        bad.append(f"tokens/s {load['tokens_per_s']} < {min_tokens_per_s}")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -222,18 +356,38 @@ def main(argv=None) -> int:
     ap.add_argument("--min-tokens", type=int, default=None, metavar="N",
                     help="fail (exit 1) if fewer than N tokens are served "
                     "(continuous-batching integrity gate)")
+    ap.add_argument("--requests", type=int, default=None, metavar="N",
+                    help="load-sweep request count "
+                    "(default: 120 quick / 500 full)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="load-sweep arrival/prompt seed (default 0)")
+    ap.add_argument("--max-p99-ms-per-token", type=float, default=None,
+                    metavar="MS", help="fail if the sweep's p99 decode "
+                    "ms-per-token exceeds MS")
+    ap.add_argument("--min-tokens-per-s", type=float, default=None,
+                    metavar="TPS", help="fail if sweep throughput drops "
+                    "below TPS generated tokens/sec")
     args = ap.parse_args(argv)
     # gates run BEFORE the artifact exists (see bench_util)
-    payload = run(json_path=None, quick=args.quick)
+    payload = run(json_path=None, quick=args.quick,
+                  n_requests=args.requests, seed=args.seed)
     bad = []
     if args.min_tokens is not None:
         bad = check_tokens(payload, args.min_tokens)
     bad += check_fabric_identity(payload)
-    if bench_util.gate_and_write(payload, bad, args.json, "serve"):
+    bad += check_load(payload, args.max_p99_ms_per_token,
+                      args.min_tokens_per_s)
+    if bench_util.gate_and_write(payload, bad, args.json, "serve",
+                                 repro_path="BENCH_serve_repro.json"):
         return 1
     if args.min_tokens is not None:
         print(f"tokens served >= {args.min_tokens}: OK")
     print("fabric leg tokens bit-identical to ref: OK")
+    load = payload["load"]
+    print(f"load sweep: {load['requests_done']} requests, chains "
+          f"bit-identical to sequential reference, "
+          f"{load['rejected']} rejected, "
+          f"{load['pressure']['preemptions']} pressure preemptions: OK")
     return 0
 
 

@@ -2323,6 +2323,10 @@ class FabricLinearProbe:
         self.search: Optional[SearchResult] = None
         self.costs: list = []
         self.outputs: list = []
+        # per-step observed batch rows (the GEMM's M): under continuous
+        # batching the engine feeds only ACTIVE lanes, so this traces
+        # the live-batch size as slots recycle (docs/serve.md)
+        self.observed_m: list = []
         # stationary weights quantize ONCE -- the session residency
         # contract (stable name = stable weight) and less per-step host
         # work for sessionless probes too
@@ -2396,6 +2400,7 @@ class FabricLinearProbe:
         y = ys if self.fused else ys[0]
         self.costs.append(res.cost)
         self.outputs.append(y)
+        self.observed_m.append(int(qx.shape[0]))
         return y
 
     def observe_ref(self, x):
@@ -2427,6 +2432,7 @@ class FabricLinearProbe:
             return None
         rep = combine_costs("fabric/decode_step", self.costs).report()
         rep.update(self.config_summary())
+        rep["observed_m"] = list(self.observed_m)
         if self.session is not None and self.session.steps:
             rep["session"] = self.session.trajectory().report()
         if self.faults is not None:

@@ -262,9 +262,12 @@ def test_serve_engine_fabric_probe(rng):
     rep = eng.fabric_report()
     assert rep is not None and rep["energy_pj"] > 0
     assert len(probe.costs) == 2                     # capped at max_steps
-    # probe output == quantized matmul of the live embeddings
+    # probe output == quantized matmul of the live embeddings; with one
+    # request in a 2-slot engine the probe sees M=1 -- only ACTIVE
+    # lanes, never the idle slot's stale token
     y = probe.outputs[0]
-    assert y.shape == (2, 6) and np.isfinite(y).all()
+    assert y.shape == (1, 6) and np.isfinite(y).all()
+    assert rep["observed_m"] == [1, 1]
 
 
 def test_serve_engine_without_probe_reports_none():

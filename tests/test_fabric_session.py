@@ -397,6 +397,36 @@ def test_probe_with_session_bit_identical_and_reports(rng):
     assert "session" not in p0.report()
 
 
+def test_probe_session_survives_varying_batch(rng):
+    """Serving with continuous batching recycles slots, so the GEMM's M
+    (live-lane count) changes step to step.  Residency is per (tile,
+    block): shrinking M or repeating one is free, and GROWING M only
+    fetches incrementally -- the blocks the wider task spread newly
+    assigns -- never a cold refetch.  Outputs stay bit-identical to a
+    sessionless probe at every M."""
+    ws = [rng.normal(size=(16, 8)).astype(np.float32) for _ in range(2)]
+    cfg = FabricConfig(n_blocks=8)
+    ps = fabric.FabricLinearProbe(ws, cfg=cfg, bits=8, max_steps=6,
+                                  session=True)
+    for m in (2, 1, 2, 3, 3, 1):
+        x = rng.normal(size=(m, 16)).astype(np.float32)
+        ys = ps.observe(x)
+        y0 = fabric.FabricLinearProbe(ws, cfg=cfg, bits=8,
+                                      max_steps=1).observe(x)
+        for a, b in zip(ys, y0):
+            assert a.shape[0] == m
+            np.testing.assert_array_equal(a, b)
+    rep_full = ps.report()
+    assert rep_full["observed_m"] == [2, 1, 2, 3, 3, 1]
+    rep = rep_full["session"]
+    assert rep["steps"] == 6
+    wf = rep["per_step_w_fetches"]
+    assert wf[0] > 0                       # cold fetch at M=2
+    assert wf[1] == wf[2] == 0             # shrink + repeat: warm
+    assert 0 < wf[3] <= wf[0]              # grow to M=3: incremental only
+    assert wf[4] == wf[5] == 0             # repeat + shrink: warm again
+
+
 def test_fused_linear_apply_with_session(rng):
     import jax.numpy as jnp
 
